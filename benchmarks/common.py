@@ -1,0 +1,49 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+import jax
+
+import repro.core as core
+from repro.core import chow_liu, trees
+from repro.data import GGMDataset
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def save_artifact(name: str, payload: dict) -> str:
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    path = os.path.join(ARTIFACTS, name + ".json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def recovery_error_rate(
+    d: int, n: int, method: str, rate: int, reps: int,
+    tree: str = "random", rho_min: float = 0.4, rho_max: float = 0.9,
+    seed0: int = 0,
+) -> float:
+    """Empirical Pr(T_hat != T) over ``reps`` independent (tree, data) draws."""
+    bad = 0
+    for rep in range(reps):
+        ds = GGMDataset(d=d, tree=tree, rho_min=rho_min, rho_max=rho_max,
+                        seed=seed0 + rep)
+        edges, _ = ds.structure()
+        x = ds.sample(n, batch_seed=rep)
+        est = chow_liu.learn_structure(x, method=method, rate=max(rate, 1))
+        bad += trees.tree_edit_distance(edges, est) > 0
+    return bad / reps
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.time() - self.t0

@@ -1,0 +1,142 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Reads benchmarks/artifacts/dryrun/*.json (written by repro.launch.dryrun)
+and derives, per (arch x shape x mesh):
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory term     = HLO_bytes_per_device / HBM_bandwidth
+    collective term = collective_bytes_per_device / ICI_link_bandwidth
+
+(cost_analysis() and the HLO are already per-device/post-SPMD, so no
+division by chip count — equivalent to the brief's global formulation.)
+
+Also reports MODEL_FLOPS = k*N*D (k = 6 train, 2 prefill/decode; N = active
+params) and the usefulness ratio MODEL_FLOPS / (HLO_FLOPs * chips).
+
+v5e constants (from the brief): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import jax.numpy as jnp
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+# The three hillclimbed (arch x shape) pairs (EXPERIMENTS.md §Perf):
+#   H1 worst-fraction train row, H2 most collective-bound, H3 = the paper's
+#   own pipeline (benchmarks/ggm_roofline.py — not an LM row).
+HILLCLIMB = {
+    ("granite-8b", "train_4k"): "H1",
+    ("jamba-1.5-large-398b", "decode_32k"): "H2",
+}
+
+
+def _active_params(arch: str) -> float:
+    from repro.models import get_arch
+    from repro.models import transformer as T
+
+    cfg = get_arch(arch)
+    params = __import__("jax").eval_shape(
+        lambda: T.init_params(cfg, __import__("jax").random.key(0),
+                              dtype=jnp.bfloat16)
+    )
+    total = sum(int(__import__("numpy").prod(l.shape))
+                for l in __import__("jax").tree.leaves(params))
+
+    class _FakeParams(dict):
+        pass
+
+    return float(T.active_param_count(cfg, params)), float(total)
+
+
+def tokens_for(rec: dict) -> float:
+    from repro.launch.shapes import SHAPES
+
+    shape = SHAPES[rec["shape"]]
+    if shape.kind == "decode":
+        return float(shape.global_batch)           # one token per sequence
+    return float(shape.global_batch * shape.seq_len)
+
+
+def analyze_record(rec: dict, active_cache: dict) -> dict:
+    arch = rec["arch"]
+    if arch not in active_cache:
+        active_cache[arch] = _active_params(arch)
+    n_active, n_total = active_cache[arch]
+    kind = rec["kind"]
+    k = 6.0 if kind == "train" else 2.0
+    model_flops = k * n_active * tokens_for(rec)
+    chips = rec["n_devices"]
+    flops_dev = rec["cost"]["flops_per_device"]
+    bytes_dev = rec["cost"]["bytes_per_device"]
+    coll_dev = rec["collectives"]["total_bytes"]
+
+    t_comp = flops_dev / PEAK_FLOPS
+    t_mem = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    return {
+        "name": rec["name"],
+        "arch": arch,
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "kind": kind,
+        "chips": chips,
+        "compute_s": t_comp,
+        "memory_s": t_mem,
+        "collective_s": t_coll,
+        "dominant": dominant,
+        "step_lower_bound_s": bound,
+        "model_flops": model_flops,
+        "hlo_flops_total": flops_dev * chips,
+        "useful_ratio": model_flops / max(flops_dev * chips, 1.0),
+        "mfu_at_bound": model_flops / max(bound, 1e-12) / (chips * PEAK_FLOPS),
+        "hillclimb": HILLCLIMB.get((arch, rec["shape"]), ""),
+        "attn_tile_bytes": rec["cost"].get("attn_tile_bytes", 0.0),
+        "mem_gib_per_dev": (rec["memory"]["argument_bytes"]
+                            + rec["memory"]["temp_bytes"]) / 2**30,
+        "fits_hbm16": (rec["memory"]["argument_bytes"]
+                       + rec["memory"]["temp_bytes"]) < 16 * 2**30,
+    }
+
+
+def run(quick: bool = False) -> dict:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    if not recs:
+        print("roofline: no dry-run artifacts found — run "
+              "`python -m repro.launch.dryrun --all --mesh both` first")
+        return {"rows": []}
+    cache: dict = {}
+    rows = [analyze_record(r, cache) for r in recs]
+    hdr = (f"{'arch':<26} {'shape':<12} {'mesh':<11} {'comp_ms':>8} "
+           f"{'mem_ms':>8} {'coll_ms':>8} {'dominant':>10} {'MFU@bound':>9} "
+           f"{'useful':>7} {'GiB/dev':>8} hc")
+    print(hdr)
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        print(f"{r['arch']:<26} {r['shape']:<12} {r['mesh']:<11} "
+              f"{r['compute_s']*1e3:>8.2f} {r['memory_s']*1e3:>8.2f} "
+              f"{r['collective_s']*1e3:>8.2f} {r['dominant']:>10} "
+              f"{r['mfu_at_bound']*100:>8.1f}% {r['useful_ratio']:>7.2f} "
+              f"{r['mem_gib_per_dev']:>8.2f} {r['hillclimb']}")
+    from .common import save_artifact
+    save_artifact("roofline", {"rows": rows,
+                               "constants": {"peak_flops": PEAK_FLOPS,
+                                             "hbm_bw": HBM_BW, "ici_bw": ICI_BW}})
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

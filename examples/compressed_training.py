@@ -1,0 +1,70 @@
+"""Beyond-paper demo: the paper's per-symbol codec as a compressed gradient
+collective (sign-SGD-style) with error feedback.
+
+The paper proves a few bits per symbol suffice for *correlation*
+statistics; gradients of large models are near-Gaussian per tensor, so the
+same equiprobable-N(0,1) codebook compresses the gradient all-reduce by
+32/R. Error feedback keeps the quantization noise from biasing training.
+
+Run with 8 simulated devices:
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+      PYTHONPATH=src python examples/compressed_training.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.comm import error_feedback_apply, error_feedback_init
+
+
+def main():
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    print(f"devices: {n_dev}, gradient codec: 4-bit per-symbol + EF")
+
+    # toy regression, data-parallel: each device holds a shard of the batch
+    dim = 64
+    w_true = jax.random.normal(jax.random.key(0), (dim,))
+    X = jax.random.normal(jax.random.key(1), (n_dev * 64, dim))
+    y = X @ w_true
+
+    def local_grad(w, xs, ys):
+        pred = xs @ w
+        return xs.T @ (pred - ys) / xs.shape[0]
+
+    def train(rate: int | None, steps=150, lr=0.1):
+        def run(X, y):
+            def body(xs, ys):
+                w = jnp.zeros(dim)
+                res = error_feedback_init({"g": w})
+                def step(carry, _):
+                    w, res = carry
+                    g = local_grad(w, xs, ys)
+                    if rate is None:
+                        g_comm = jax.lax.pmean(g, "data")
+                    else:
+                        out, res = error_feedback_apply(
+                            {"g": g}, res, "data", rate)
+                        g_comm = out["g"]
+                    return (w - lr * g_comm, res), None
+                (w, _), _ = jax.lax.scan(step, (w, res), None, length=steps)
+                return w[None]
+            return jax.shard_map(
+                body, mesh=mesh, in_specs=(P("data", None), P("data")),
+                out_specs=P(None, None), check_vma=False)(X, y)
+        w = run(X, y)[0]
+        return float(jnp.linalg.norm(w - w_true) / jnp.linalg.norm(w_true))
+
+    err_f32 = train(None)
+    err_q4 = train(4)
+    comp = 32 / 4
+    print(f"rel err  f32 all-reduce : {err_f32:.4f}")
+    print(f"rel err  4-bit + EF     : {err_q4:.4f}  ({comp:.0f}x less traffic)")
+    assert err_q4 < 0.05, "compressed training failed to converge"
+    print("OK: compressed gradients converge to the same solution")
+
+
+if __name__ == "__main__":
+    main()

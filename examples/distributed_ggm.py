@@ -1,0 +1,51 @@
+"""Distributed structure learning on a device mesh (paper's system, Fig. 1).
+
+Vertical model: features sharded over the `model` axis (each device = a
+group of the paper's machines), samples over `data`. Each device quantizes
+locally, the codes are all-gathered (THE communication the paper counts),
+pairwise statistics are computed per shard and psum'd, and the MWST runs
+on-device (Boruvka).
+
+Run with 8 simulated devices:
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+      PYTHONPATH=src python examples/distributed_ggm.py
+"""
+import numpy as np
+import jax
+
+import repro.core as core
+from repro.core.distributed import (communication_bits,
+                                    distributed_learn_structure)
+
+
+def main():
+    n_dev = len(jax.devices())
+    if n_dev < 2:
+        print(f"only {n_dev} device(s); run with "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    data_par = 2 if n_dev >= 4 else 1
+    model_par = n_dev // data_par
+    mesh = jax.make_mesh(
+        (data_par, model_par), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    print(f"mesh: data={data_par} x model={model_par}")
+
+    rng = np.random.default_rng(1)
+    d, n = 32, 16_384
+    edges = core.random_tree(d, rng)
+    weights = rng.uniform(0.4, 0.9, size=d - 1)
+    x = core.sampler.sample_tree_ggm(jax.random.key(1), n, d, edges, weights)
+
+    for method, rate in [("sign", 1), ("persymbol", 4)]:
+        est = distributed_learn_structure(
+            x, mesh, method=method, rate=rate, backend="boruvka")
+        dist = core.tree_edit_distance(edges, est)
+        bits = communication_bits(n, d, rate)
+        print(f"{method:<10} R={rate}: wire={bits/8/2**20:6.2f} MiB "
+              f"(vs {communication_bits(n, d, 64)/8/2**20:.1f} MiB float64) "
+              f"edit-distance={dist}")
+    print("\ndistributed pipeline == centralized Chow-Liu, at R/64 the bytes.")
+
+
+if __name__ == "__main__":
+    main()

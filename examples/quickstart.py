@@ -1,0 +1,42 @@
+"""Quickstart: learn a tree-structured GGM from quantized data.
+
+Reproduces the paper's core result in ~30 lines: with only the SIGNS of
+the data (1 bit per sample instead of 64), the Chow-Liu tree is still
+recovered exactly.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax
+
+import repro.core as core
+from repro.core import chow_liu, sampler, trees
+
+
+def main():
+    rng = np.random.default_rng(0)
+    d, n = 20, 4000
+
+    # ground truth: a random tree with edge correlations in [0.4, 0.9]
+    edges = core.random_tree(d, rng)
+    weights = rng.uniform(0.4, 0.9, size=d - 1)
+    print(f"true tree: {sorted(trees.edges_canonical(edges))}")
+
+    # draw n i.i.d. samples of the d-dimensional GGM (unit variances)
+    x = sampler.sample_tree_ggm(jax.random.key(0), n, d, edges, weights)
+
+    for method, rate, bits in [
+        ("original", 0, 64 * n * d),
+        ("sign", 1, 1 * n * d),
+        ("persymbol", 4, 4 * n * d),
+    ]:
+        est = chow_liu.learn_structure(x, method=method, rate=max(rate, 1))
+        dist = trees.tree_edit_distance(edges, est)
+        print(f"{method:<10} rate={rate or 64:>2}b  "
+              f"wire={bits/8/1024:8.1f} KiB  edit-distance={dist}")
+
+    print("\nsign method = 64x less communication, same tree.")
+
+
+if __name__ == "__main__":
+    main()

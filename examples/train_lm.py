@@ -1,0 +1,92 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps.
+
+Uses the mamba2-370m architecture family at reduced width (still ~100M
+params — 48 layers are kept via 2-layer superblocks x 24 reps is NOT what
+reduced() does, so we size explicitly here) on the synthetic Markov-Zipf
+corpus. Asserts the loss beats the unigram entropy bound — i.e. the model
+actually learned sequence structure, not just token frequencies.
+
+This is the deliverable-(b) end-to-end train driver; on CPU it runs a
+genuinely ~100M-param model for a few hundred steps in ~1-2 hours, so the
+default invocation here is sized down. For the full run:
+
+  PYTHONPATH=src python examples/train_lm.py --params 100m --steps 300
+"""
+import argparse
+import dataclasses
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.data import TokenStream
+from repro.models import get_arch
+from repro.models import transformer as T
+from repro.launch.shapes import InputShape
+from repro.launch.steps import make_train_step
+
+
+def make_cfg(size: str):
+    base = get_arch("stablelm-3b")
+    if size == "100m":
+        # ~100M params: 12 layers, d_model 768, vocab 32k
+        return dataclasses.replace(
+            base, n_layers=12, d_model=768, n_heads=12, n_kv_heads=12,
+            head_dim=64, d_ff=2048, vocab=32_000)
+    # CI size: ~8M params
+    return dataclasses.replace(
+        base, n_layers=4, d_model=256, n_heads=8, n_kv_heads=8,
+        head_dim=32, d_ff=688, vocab=4_096)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--params", choices=["8m", "100m"], default="8m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    args = ap.parse_args()
+
+    cfg = make_cfg(args.params)
+    params = T.init_params(cfg, jax.random.key(0))
+    print(f"params: {T.param_count(params)/1e6:.1f}M")
+
+    stream = TokenStream(vocab=cfg.vocab, seq_len=args.seq,
+                         global_batch=args.batch, seed=0)
+    optimizer = optim.adamw(weight_decay=0.01)
+    schedule = optim.linear_warmup_cosine(1e-3, 20, args.steps)
+    shape = InputShape("ex", "train", args.seq, args.batch)
+    step = jax.jit(make_train_step(cfg, shape, optimizer, schedule),
+                   donate_argnums=(0, 1))
+
+    opt_state = optimizer.init(params)
+    losses = []
+    t0 = time.time()
+    for i in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in stream.batch(i).items()}
+        params, opt_state, metrics = step(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+        if (i + 1) % 20 == 0:
+            print(f"step {i+1:4d} loss {losses[-1]:.4f} "
+                  f"({(time.time()-t0)/20:.2f}s/step)", flush=True)
+            t0 = time.time()
+
+    h0 = stream.unigram_entropy_bound()
+    first = float(np.mean(losses[:10]))
+    final = float(np.mean(losses[-10:]))
+    print(f"\nloss {first:.4f} -> {final:.4f} | unigram bound {h0:.4f} nats")
+    assert final < first - 0.2, "loss did not decrease — training is broken"
+    if args.steps >= 150:
+        assert final < h0 - 0.05, (
+            "a full run must beat the unigram bound (learn sequence "
+            "structure, not just token frequencies)")
+        print("OK: beat the unigram bound -> learned sequence structure")
+    else:
+        print(f"OK: loss decreasing (short run; >=150 steps to cross the "
+              f"unigram bound)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""repro: distributed tree-GGM structure learning + multi-pod JAX framework."""

@@ -1,0 +1,2 @@
+"""Pytree checkpointing (npz-based, dependency-free)."""
+from .ckpt import latest_step, load_checkpoint, save_checkpoint  # noqa: F401

@@ -1,0 +1,10 @@
+"""Communication layer: quantized/compressed collectives (beyond-paper)."""
+from .collectives import (  # noqa: F401
+    compressed_pmean,
+    compressed_pmean_1stage,
+    compressed_psum,
+    dequantize_tensor,
+    error_feedback_apply,
+    error_feedback_init,
+    quantize_tensor,
+)

@@ -1,0 +1,129 @@
+"""Quantized collectives — the paper's per-symbol codec applied to gradients.
+
+Beyond-paper feature: the paper shows a few bits per symbol suffice for
+*statistic* estimation; the same per-symbol equiprobable-Gaussian codec makes
+a drop-in compressed gradient all-reduce (gradients of large models are
+near-Gaussian per tensor, so the N(0,1) codebook is reused after per-shard
+standardization). Classic error-feedback (Seide et al. / EF-SGD) keeps the
+quantization noise from accumulating; with EF the compressed optimizer
+matches uncompressed training in our integration tests.
+
+Wire format per shard: int8 codes (R <= 7 bits used) + one f32 scale.
+Compression ratio vs f32 all-reduce: 32 / R (ignoring the scalar).
+
+All functions are written for use INSIDE ``jax.shard_map`` bodies.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizers import PerSymbolQuantizer
+
+
+def _standardize(g: jax.Array):
+    scale = jnp.sqrt(jnp.mean(jnp.square(g)) + 1e-30)
+    return g / scale, scale
+
+
+def quantize_tensor(g: jax.Array, rate: int):
+    """-> (int8 codes, f32 scale). Codes decode to approx g via codebook."""
+    q = PerSymbolQuantizer(rate)
+    gn, scale = _standardize(g)
+    return q.encode(gn).astype(jnp.int8), scale
+
+
+def dequantize_tensor(codes: jax.Array, scale: jax.Array, rate: int):
+    q = PerSymbolQuantizer(rate)
+    return q.decode(codes.astype(jnp.int32)) * scale
+
+
+def compressed_psum(g: jax.Array, axis_name: str, rate: int) -> jax.Array:
+    """Two-phase compressed all-reduce over ``axis_name`` (inside shard_map).
+
+    Phase 1 (reduce-scatter shape): split g into |axis| chunks along axis 0,
+    all_to_all the *quantized* chunks, locally reduce the decoded chunks.
+    Phase 2 (all-gather shape): re-quantize the reduced chunk, all_gather the
+    codes, decode. Both wire phases carry int8 codes, so the collective
+    payload is R/32 of a float all-reduce (the scales are psum'd in float —
+    one scalar per device, negligible).
+
+    Leading dim of ``g`` must be divisible by the axis size.
+    """
+    size = jax.lax.axis_size(axis_name)
+    n = g.shape[0]
+    assert n % size == 0, f"leading dim {n} not divisible by axis size {size}"
+    gs = g.reshape(size, n // size, *g.shape[1:])
+    codes, scale = quantize_tensor(gs, rate)
+    # all_to_all: each rank keeps one decoded chunk from every peer
+    codes_x = jax.lax.all_to_all(codes, axis_name, split_axis=0, concat_axis=0)
+    scales = jax.lax.all_gather(scale, axis_name)  # (size,)
+    chunk = _decode_reduce(codes_x, scales, rate)
+    # phase 2: broadcast the reduced chunk
+    c2, s2 = quantize_tensor(chunk, rate)
+    c2_all = jax.lax.all_gather(c2, axis_name, axis=0, tiled=False)
+    s2_all = jax.lax.all_gather(s2, axis_name)
+    out = dequantize_tensor(c2_all, 1.0, rate) * s2_all.reshape(
+        (-1,) + (1,) * chunk.ndim
+    )
+    return out.reshape(g.shape)
+
+
+def _decode_reduce(codes_x: jax.Array, scales: jax.Array, rate: int) -> jax.Array:
+    vals = dequantize_tensor(codes_x, 1.0, rate)
+    scales = scales.reshape((-1,) + (1,) * (vals.ndim - 1))
+    return jnp.sum(vals * scales, axis=0)
+
+
+def compressed_pmean(g: jax.Array, axis_name: str, rate: int) -> jax.Array:
+    return compressed_psum(g, axis_name, rate) / jax.lax.axis_size(axis_name)
+
+
+def compressed_pmean_1stage(g: jax.Array, axis_name: str, rate: int) -> jax.Array:
+    """Single-quantization compressed mean: all-gather the codes of g and
+    decode+average locally. Wire payload is |axis| * n * R / 8 bytes per
+    device (vs ~2nR/8 for the two-stage psum), but each rank's TOTAL
+    distortion is exactly its own encode error — the property error
+    feedback needs (the two-stage path re-quantizes the reduced chunk,
+    and that second error is not attributable to any single rank)."""
+    codes, scale = quantize_tensor(g, rate)
+    codes_all = jax.lax.all_gather(codes, axis_name)           # (size, n)
+    scales = jax.lax.all_gather(scale, axis_name)              # (size,)
+    vals = dequantize_tensor(codes_all, 1.0, rate)
+    vals = vals * scales.reshape((-1,) + (1,) * (vals.ndim - 1))
+    return jnp.mean(vals, axis=0)
+
+
+class ErrorFeedback:
+    """EF memory for compressed gradient exchange (functional style).
+
+    state = residual pytree; ``apply`` returns (compressed-communicated grad,
+    new state). Usage inside a train step:
+
+        g_comm, ef_state = error_feedback_apply(g, ef_state, axis, rate)
+    """
+
+
+def error_feedback_init(grads):
+    return jax.tree.map(jnp.zeros_like, grads)
+
+
+def error_feedback_apply(grads, residuals, axis_name: str, rate: int):
+    """Compress (g + e) per leaf, communicate, keep the new residual."""
+
+    def one(g, e):
+        target = (g + e).reshape(-1)
+        # one-stage reduction: the residual must equal exactly the
+        # distortion THIS rank introduced (see compressed_pmean_1stage)
+        reduced = compressed_pmean_1stage(target, axis_name, rate)
+        codes, scale = quantize_tensor(target, rate)
+        sent = dequantize_tensor(codes, scale, rate)
+        new_e = target - sent
+        return reduced.reshape(g.shape), new_e.reshape(g.shape)
+
+    pairs = jax.tree.map(one, grads, residuals)
+    outs = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    news = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return outs, news

@@ -1,0 +1,6 @@
+"""Assigned architecture configs (+ the paper's own GGM experiment configs).
+
+One module per architecture; each registers an ``ArchConfig`` with exact
+dimensions from the cited source. Import ``repro.models.arch.load_all()``
+(or just ``get_arch``) to populate the registry.
+"""

@@ -1,0 +1,18 @@
+"""Core library: tree-structured GGM learning on distributed quantized data.
+
+Faithful implementation of Tavassolipour, Motahari & Manzuri-Shalmani,
+"Learning of Tree-Structured Gaussian Graphical Models on Distributed Data
+under Communication Constraints", IEEE TSP 2018.
+"""
+from . import bounds, chow_liu, estimators, glasso, quantizers, sampler, streaming, trees  # noqa: F401
+from .chow_liu import boruvka_mst, chow_liu as mwst, kruskal_forest, kruskal_mst, learn_structure  # noqa: F401
+from .streaming import StreamingGram  # noqa: F401
+from .quantizers import PerSymbolQuantizer, sign_quantize  # noqa: F401
+from .trees import (  # noqa: F401
+    SKELETON_EDGES,
+    chain_tree,
+    random_tree,
+    star_tree,
+    tree_correlation_matrix,
+    tree_edit_distance,
+)

@@ -1,0 +1,99 @@
+"""Statistic estimators used by the central machine (paper §4.2, §5).
+
+All estimators take the full received code matrix U of shape (n, d) and
+produce pairwise (d, d) statistic matrices; they are pure jnp and jit-able.
+The pairwise contraction U^T U is the compute hot spot — the Pallas kernel in
+``repro.kernels.sign_corr`` implements the same contraction with MXU tiling;
+these functions are its reference semantics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def theta_hat(u: jax.Array) -> jax.Array:
+    """UMVE of theta_jk = Pr(u_j u_k = 1) from sign data (eq. 8).
+
+    With u in {-1,+1}: I(u_j u_k = 1) = (1 + u_j u_k)/2, so
+    theta_hat = 1/2 + (U^T U) / (2n).
+    """
+    n = u.shape[0]
+    gram = u.T @ u
+    return 0.5 + gram / (2.0 * n)
+
+
+def theta_from_rho(rho: jax.Array) -> jax.Array:
+    """theta = 1/2 + arcsin(rho)/pi (eq. 3)."""
+    return 0.5 + jnp.arcsin(jnp.clip(rho, -1.0, 1.0)) / jnp.pi
+
+
+def rho_from_theta(theta: jax.Array) -> jax.Array:
+    """Inverse of eq. (3): rho = sin(pi (theta - 1/2))."""
+    return jnp.sin(jnp.pi * (theta - 0.5))
+
+
+def binary_entropy(p: jax.Array) -> jax.Array:
+    """h(p) in bits (eq. 5), safe at {0, 1}."""
+    # epsilon must be representable in f32: 1 - 1e-12 rounds to 1.0 in f32
+    # and would give 0 * log(0) = NaN on the (irrelevant) diagonal.
+    p = jnp.clip(p, 1e-7, 1.0 - 1e-7)
+    return -(p * jnp.log2(p) + (1.0 - p) * jnp.log2(1.0 - p))
+
+
+def mi_sign(theta: jax.Array) -> jax.Array:
+    """I(u_j; u_k) = 1 - h(theta) in bits (eq. 4)."""
+    return 1.0 - binary_entropy(theta)
+
+
+def mi_gaussian(rho: jax.Array) -> jax.Array:
+    """I(x_j; x_k) = -1/2 ln(1 - rho^2) (eq. 1).
+
+    The clip must be representable in f32: 1 - 1e-12 rounds to 1.0 and the
+    (MWST-irrelevant) diagonal would become inf."""
+    r2 = jnp.clip(jnp.square(rho), 0.0, 1.0 - 1e-7)
+    return -0.5 * jnp.log1p(-r2)
+
+
+def sample_correlation(u: jax.Array) -> jax.Array:
+    """rho_bar_q = (1/n) sum_i u_j^(i) u_k^(i) (eqs. 31/32).
+
+    Note the paper's estimator deliberately does NOT renormalize by sample
+    variances — variables are assumed standardized (Q_jj = 1) and the central
+    machine treats quantized codes as if Gaussian.
+    """
+    n = u.shape[0]
+    return (u.T @ u) / n
+
+
+def rho_squared_unbiased(rho_bar: jax.Array, n: int) -> jax.Array:
+    """Unbiased estimator of rho^2 (eq. 30): n/(n+1) (rho_bar^2 - 1/n)."""
+    return (n / (n + 1.0)) * (jnp.square(rho_bar) - 1.0 / n)
+
+
+def sign_method_weights(u_signs: jax.Array) -> jax.Array:
+    """Edge-weight matrix for Chow-Liu under the sign method: hat I(u_j; u_k).
+
+    Any strictly increasing transform of |theta - 1/2| yields the same MWST
+    (Kruskal depends only on the order); we return the MI itself for
+    interpretability and parity with the paper.
+    """
+    return mi_sign(theta_hat(u_signs))
+
+
+def persymbol_method_weights(u_centroids: jax.Array) -> jax.Array:
+    """Edge weights for Chow-Liu under per-symbol quantization (§5).
+
+    Estimates rho^2 via eq. (30) applied to the quantized sample correlation
+    (eq. 32) and maps through the Gaussian MI (eq. 1). MI is monotone in
+    rho^2, so using rho^2_hat directly is order-equivalent; we report MI.
+    """
+    n = u_centroids.shape[0]
+    rho_bar = sample_correlation(u_centroids)
+    r2 = jnp.clip(rho_squared_unbiased(rho_bar, n), 0.0, 1.0 - 1e-9)
+    return -0.5 * jnp.log1p(-r2)
+
+
+def gaussian_weights(x: jax.Array) -> jax.Array:
+    """Centralized (unquantized) baseline: MI from the sample correlation."""
+    return mi_gaussian(sample_correlation(x))

@@ -1,0 +1,128 @@
+"""Quantizers for communication-constrained transmission (paper §3.1, §5).
+
+* ``sign_quantize`` — the sign method: 1 bit/sample, u = sign(x) in {-1,+1}.
+* ``PerSymbolQuantizer`` — the R-bit per-symbol scheme of §5: 2^R equiprobable
+  bins of N(0,1) (boundaries a_i = Phi^{-1}(i 2^{-R})) with centroid
+  reconstruction points (eq. 40):
+
+      c_i = 2^R / sqrt(2 pi) * (exp(-a_i^2 / 2) - exp(-a_{i+1}^2 / 2)).
+
+  (The paper's eq. 40 has a sign typo in the second exponent; the centroid of
+  a truncated standard normal is E[x | a_i < x < a_{i+1}] =
+  (phi(a_i) - phi(a_{i+1})) / (Phi(a_{i+1}) - Phi(a_i)) which is what we use;
+  with equiprobable bins the denominator is 2^{-R}.)
+
+Encoding returns integer bin codes (what actually crosses the wire: R bits per
+symbol); decoding maps codes to centroids. ``quantize`` = decode(encode(x)).
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+from scipy.special import ndtri  # inverse standard-normal CDF
+import jax
+import jax.numpy as jnp
+
+
+def sign_quantize(x: jax.Array) -> jax.Array:
+    """Sign method: u = sign(x) in {-1, +1} (0 maps to +1)."""
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+@functools.lru_cache(maxsize=None)
+def _codebook_np(rate: int) -> tuple[np.ndarray, np.ndarray]:
+    """(boundaries a_1..a_{2^R+1} with +-inf trimmed, centroids c_1..c_{2^R})."""
+    if rate < 1 or rate > 16:
+        raise ValueError(f"rate must be in [1, 16], got {rate}")
+    m = 1 << rate
+    probs = np.arange(0, m + 1, dtype=np.float64) / m
+    a = np.empty(m + 1)
+    a[0], a[-1] = -np.inf, np.inf
+    a[1:-1] = ndtri(probs[1:-1])
+    phi = np.exp(-np.square(np.where(np.isfinite(a), a, 0.0)) / 2.0) / np.sqrt(2 * np.pi)
+    phi = np.where(np.isfinite(a), phi, 0.0)  # phi(+-inf) = 0
+    centroids = m * (phi[:-1] - phi[1:])  # eq. (40), corrected sign
+    return a, centroids
+
+
+class PerSymbolQuantizer:
+    """R-bit equiprobable-bin quantizer for standard normal data (paper §5)."""
+
+    def __init__(self, rate: int):
+        self.rate = int(rate)
+        a, c = _codebook_np(self.rate)
+        self.boundaries = jnp.asarray(a[1:-1], dtype=jnp.float32)  # interior only
+        self.centroids = jnp.asarray(c, dtype=jnp.float32)
+
+    @property
+    def num_levels(self) -> int:
+        return 1 << self.rate
+
+    @property
+    def codebook_variance(self) -> float:
+        """sigma_u^2 — variance of the discrete reconstruction variable.
+        Reconstruction distortion is E[(x-u)^2] = 1 - sigma_u^2 (eq. 41)."""
+        c = np.asarray(self.centroids, dtype=np.float64)
+        return float(np.mean(np.square(c)))  # bins are equiprobable; mean(c)=0
+
+    def encode(self, x: jax.Array) -> jax.Array:
+        """Map samples to bin indices in [0, 2^R) — the R-bit messages."""
+        return jnp.searchsorted(self.boundaries, x).astype(jnp.int32)
+
+    def decode(self, codes: jax.Array) -> jax.Array:
+        return jnp.take(self.centroids, codes)
+
+    def quantize(self, x: jax.Array) -> jax.Array:
+        return self.decode(self.encode(x))
+
+
+def reconstruction_distortion(rate: int) -> float:
+    """Closed-form E[(x-u)^2] = 1 - sigma_u^2 for the R-bit quantizer."""
+    return 1.0 - PerSymbolQuantizer(rate).codebook_variance
+
+
+def bitpack_signs(u_pm1: jax.Array) -> jax.Array:
+    """Pack {-1,+1} sign arrays along the last axis into uint8 (8 symbols/byte).
+
+    This is the payload that would actually cross the wire in the sign method;
+    used by the distributed runtime to make collective byte counts honest.
+    Last axis length must be a multiple of 8.
+    """
+    bits = (u_pm1 > 0).astype(jnp.uint8)
+    *lead, n = bits.shape
+    assert n % 8 == 0, "pad to a multiple of 8 symbols before packing"
+    bits = bits.reshape(*lead, n // 8, 8)
+    weights = jnp.asarray([1, 2, 4, 8, 16, 32, 64, 128], dtype=jnp.uint8)
+    return jnp.sum(bits * weights, axis=-1, dtype=jnp.uint8)
+
+
+def bitunpack_signs(packed: jax.Array) -> jax.Array:
+    """Inverse of :func:`bitpack_signs`; returns {-1.,+1.} float32."""
+    weights = jnp.asarray([1, 2, 4, 8, 16, 32, 64, 128], dtype=jnp.uint8)
+    bits = (packed[..., None] & weights) > 0
+    *lead, nb, _ = bits.shape
+    return jnp.where(bits, 1.0, -1.0).astype(jnp.float32).reshape(*lead, nb * 8)
+
+
+def pack_codes(codes: jax.Array, rate: int) -> jax.Array:
+    """Pack R-bit integer codes densely into uint8 along the last axis —
+    the honest wire format (R bits/symbol, paper §3). rate must divide 8;
+    last axis must be a multiple of 8 // rate."""
+    assert 8 % rate == 0, f"rate {rate} must divide 8"
+    per = 8 // rate
+    *lead, n = codes.shape
+    assert n % per == 0, f"pad to a multiple of {per} symbols before packing"
+    c = codes.astype(jnp.uint8).reshape(*lead, n // per, per)
+    shifts = jnp.arange(per, dtype=jnp.uint8) * rate
+    return jnp.sum(c << shifts, axis=-1, dtype=jnp.uint8)
+
+
+def unpack_codes(packed: jax.Array, rate: int) -> jax.Array:
+    """Inverse of :func:`pack_codes`; returns int32 codes."""
+    per = 8 // rate
+    shifts = jnp.arange(per, dtype=jnp.uint8) * rate
+    mask = jnp.uint8((1 << rate) - 1)
+    c = (packed[..., None] >> shifts) & mask
+    *lead, nb, _ = c.shape
+    return c.reshape(*lead, nb * per).astype(jnp.int32)

@@ -1,0 +1,126 @@
+"""Tree utilities for tree-structured Gaussian graphical models.
+
+Implements the synthetic-data machinery of the paper: random trees, the
+correlation-decay covariance construction (eq. 24: rho_rs = prod of edge
+correlations on Path(r,s)), structure comparison, and the human-skeleton
+topology used in the Figs. 10-11 experiment.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def random_tree(d: int, rng: np.random.Generator) -> list[tuple[int, int]]:
+    """Uniform random labelled tree on ``d`` nodes via a Pruefer sequence."""
+    if d < 2:
+        return []
+    if d == 2:
+        return [(0, 1)]
+    prufer = rng.integers(0, d, size=d - 2)
+    degree = np.ones(d, dtype=np.int64)
+    for v in prufer:
+        degree[v] += 1
+    edges = []
+    # min-leaf scan per step (d is small in all experiments; O(d^2) is fine)
+    for v in prufer:
+        leaf = int(np.flatnonzero(degree == 1)[0])
+        edges.append((leaf, int(v)))
+        degree[leaf] = 0
+        degree[v] -= 1
+    remaining = np.flatnonzero(degree == 1)
+    edges.append((int(remaining[0]), int(remaining[1])))
+    return edges
+
+
+def chain_tree(d: int) -> list[tuple[int, int]]:
+    return [(i, i + 1) for i in range(d - 1)]
+
+
+def star_tree(d: int, center: int = 0) -> list[tuple[int, int]]:
+    return [(center, j) for j in range(d) if j != center]
+
+
+# 20-joint Kinect-style human skeleton (MAD dataset layout), used for the
+# Figs. 10-11 reproduction. Node 0 is the hip-center root.
+SKELETON_JOINTS = [
+    "hip_center", "spine", "shoulder_center", "head",
+    "shoulder_l", "elbow_l", "wrist_l", "hand_l",
+    "shoulder_r", "elbow_r", "wrist_r", "hand_r",
+    "hip_l", "knee_l", "ankle_l", "foot_l",
+    "hip_r", "knee_r", "ankle_r", "foot_r",
+]
+
+SKELETON_EDGES = [
+    (0, 1), (1, 2), (2, 3),
+    (2, 4), (4, 5), (5, 6), (6, 7),
+    (2, 8), (8, 9), (9, 10), (10, 11),
+    (0, 12), (12, 13), (13, 14), (14, 15),
+    (0, 16), (16, 17), (17, 18), (18, 19),
+]
+
+
+def tree_adjacency(d: int, edges: list[tuple[int, int]]) -> np.ndarray:
+    adj = np.zeros((d, d), dtype=bool)
+    for j, k in edges:
+        adj[j, k] = adj[k, j] = True
+    return adj
+
+
+def tree_correlation_matrix(
+    d: int, edges: list[tuple[int, int]], weights: np.ndarray
+) -> np.ndarray:
+    """Full correlation matrix from edge correlations via eq. (24):
+    rho_rs = prod_{e in Path(r,s)} rho_e.
+
+    Computed by BFS from each root accumulating products along paths.
+    Result is a valid correlation matrix of a tree-structured GGM with unit
+    variances (the paper's standing normalization Q_jj = 1).
+    """
+    weights = np.asarray(weights, dtype=np.float64)
+    assert len(edges) == d - 1 and weights.shape == (d - 1,)
+    nbrs: list[list[tuple[int, float]]] = [[] for _ in range(d)]
+    for (j, k), w in zip(edges, weights):
+        nbrs[j].append((k, float(w)))
+        nbrs[k].append((j, float(w)))
+    Q = np.eye(d)
+    for root in range(d):
+        # BFS accumulating correlation products
+        stack = [(root, -1, 1.0)]
+        while stack:
+            node, parent, acc = stack.pop()
+            for child, w in nbrs[node]:
+                if child == parent:
+                    continue
+                Q[root, child] = acc * w
+                stack.append((child, node, acc * w))
+    return Q
+
+
+def edges_canonical(edges) -> set[tuple[int, int]]:
+    return {(min(j, k), max(j, k)) for j, k in edges}
+
+
+def tree_edit_distance(e1, e2) -> int:
+    """Number of edges present in exactly one of the two trees (symmetric
+    difference size). Zero iff identical structure."""
+    s1, s2 = edges_canonical(e1), edges_canonical(e2)
+    return len(s1 ^ s2)
+
+
+def is_tree(d: int, edges) -> bool:
+    if len(edges) != d - 1:
+        return False
+    parent = list(range(d))
+
+    def find(a):
+        while parent[a] != a:
+            parent[a] = parent[parent[a]]
+            a = parent[a]
+        return a
+
+    for j, k in edges:
+        rj, rk = find(j), find(k)
+        if rj == rk:
+            return False
+        parent[rj] = rk
+    return True

@@ -1,0 +1,3 @@
+"""Data pipelines: synthetic token streams + GGM sample streams."""
+from .ggm import GGMDataset, ggm_batches  # noqa: F401
+from .tokens import TokenStream, token_batches  # noqa: F401

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the compute hot spots.
+
+* sign_corr        — quantized-code Gram contraction (paper eq. 8 / eq. 32)
+* quantize         — fused per-symbol R-bit encode + centroid decode (eq. 40)
+* decode_attention — flash-decode GQA attention w/ sliding window (serve path)
+* flash_prefill    — full-sequence flash attention (train/prefill hot spot)
+
+Each kernel has a pure-jnp oracle in ref.py; ops.py exposes jit'd wrappers
+that interpret on CPU and compile natively on TPU.
+"""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,139 @@
+"""Pallas TPU kernel: single-token (decode) flash attention with GQA + window.
+
+serve_step attends ONE new query token against a KV cache of S entries —
+the hot spot of decode_32k / long_500k. The kernel is a flash-decode:
+online-softmax accumulation over S in VMEM-resident key blocks, so HBM
+traffic is one streaming read of K and V (the roofline lower bound for
+decode attention, which is memory-bound: 2*S*Dh bytes/head vs 4*S*Dh FLOPs).
+
+Layout: queries are grouped GQA-style — the G = Hq/Hkv query heads that
+share a KV head form the (G, Dh) left operand of each block matmul, so the
+MXU sees a (G x Dh) @ (Dh x BS) contraction instead of G rank-1 products.
+G is padded to 8 (f32 sublane tile); BS = 512 keys/step and Dh <= 256 keep
+the working set (q + k + v + acc ≈ 0.6 MB at Dh=128) well inside VMEM.
+
+Sliding-window masking (window W) is applied via the block's absolute key
+positions; `pos` (current cache length) arrives as an SMEM scalar. Blocks
+entirely outside [pos-W, pos) still stream in this baseline kernel — see
+EXPERIMENTS.md §Perf for the block-skipping variant.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_attn_kernel(
+    pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, block_s: int, window: int | None, scale: float,
+):
+    step = pl.program_id(2)
+    n_steps = pl.num_programs(2)
+
+    @pl.when(step == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[0]
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # (G, Dh)
+    k = k_ref[0, 0].astype(jnp.float32)          # (BS, Dh)
+    v = v_ref[0, 0].astype(jnp.float32)          # (BS, Dh)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (G, BS)
+    key_idx = step * block_s + jax.lax.broadcasted_iota(jnp.int32, (1, block_s), 1)
+    valid = key_idx < pos
+    if window is not None:
+        valid &= key_idx >= pos - window
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(step == n_steps - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "block_s", "interpret")
+)
+def decode_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    pos: jax.Array,
+    *,
+    window: int | None = None,
+    block_s: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """One-token attention against a KV cache.
+
+    Args:
+      q: (B, Hq, Dh) — current-token queries.
+      k, v: (B, Hkv, S, Dh) — cache; entries at index >= pos are ignored.
+      pos: scalar int32 — number of valid cache entries (the query position).
+      window: sliding-window size (None = full attention over the cache).
+    Returns:
+      (B, Hq, Dh) attention output, dtype of q.
+    """
+    b, hq, dh = q.shape
+    _, hkv, s_len, _ = k.shape
+    assert hq % hkv == 0
+    g = hq // hkv
+    g_pad = max(8, int(2 ** np.ceil(np.log2(g))))
+    bs = min(block_s, _ceil_mult(s_len, 128))
+    s_pad = _ceil_mult(s_len, bs)
+    # group queries by kv head: (B, Hkv, G, Dh), pad G to sublane multiple
+    qg = q.reshape(b, hkv, g, dh)
+    if g_pad != g:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, g_pad - g), (0, 0)))
+    if s_pad != s_len:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, s_pad - s_len), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, s_pad - s_len), (0, 0)))
+    grid = (b, hkv, s_pad // bs)
+    kernel = functools.partial(
+        _decode_attn_kernel, block_s=bs, window=window, scale=1.0 / np.sqrt(dh)
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g_pad, dh), lambda i, j, t: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, bs, dh), lambda i, j, t: (i, j, t, 0)),
+            pl.BlockSpec((1, 1, bs, dh), lambda i, j, t: (i, j, t, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g_pad, dh), lambda i, j, t: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g_pad, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g_pad, 1), jnp.float32),
+            pltpu.VMEM((g_pad, 1), jnp.float32),
+            pltpu.VMEM((g_pad, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(jnp.asarray(pos, jnp.int32).reshape(1), qg, k, v)
+    return out[:, :, :g, :].reshape(b, hq, dh)
+
+
+def _ceil_mult(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

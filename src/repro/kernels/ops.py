@@ -1,0 +1,47 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) kernels execute in ``interpret=True`` mode; on TPU
+they compile natively. ``INTERPRET`` resolves once at import time from the
+default backend and can be overridden per call.
+"""
+from __future__ import annotations
+
+import jax
+
+from .decode_attention import decode_attention as _decode_attention
+from .flash_prefill import flash_prefill as _flash_prefill
+from .quantize import quantize_fused as _quantize_fused
+from .sign_corr import sign_corr as _sign_corr
+
+INTERPRET = jax.default_backend() == "cpu"
+
+
+def sign_corr(u, *, block_n: int = 512, block_d: int = 256, interpret: bool | None = None):
+    return _sign_corr(
+        u,
+        block_n=block_n,
+        block_d=block_d,
+        interpret=INTERPRET if interpret is None else interpret,
+    )
+
+
+def quantize_fused(x, rate: int, *, interpret: bool | None = None, **kw):
+    return _quantize_fused(
+        x, rate, interpret=INTERPRET if interpret is None else interpret, **kw
+    )
+
+
+def decode_attention(q, k, v, pos, *, window=None, interpret: bool | None = None, **kw):
+    return _decode_attention(
+        q, k, v, pos,
+        window=window,
+        interpret=INTERPRET if interpret is None else interpret,
+        **kw,
+    )
+
+
+def flash_prefill(q, k, v, *, causal=True, window=0,
+                  interpret: bool | None = None, **kw):
+    return _flash_prefill(
+        q, k, v, causal=causal, window=window,
+        interpret=INTERPRET if interpret is None else interpret, **kw)

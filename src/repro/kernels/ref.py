@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizers import PerSymbolQuantizer
+
+
+def sign_corr_ref(u: jax.Array) -> jax.Array:
+    """G = u^T u in f32."""
+    uf = u.astype(jnp.float32)
+    return uf.T @ uf
+
+
+def quantize_fused_ref(x: jax.Array, rate: int):
+    q = PerSymbolQuantizer(rate)
+    codes = q.encode(x)
+    return codes.astype(jnp.int8), q.decode(codes)
+
+
+def decode_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    pos,
+    *,
+    window: int | None = None,
+) -> jax.Array:
+    """Naive masked softmax attention for a single query token."""
+    b, hq, dh = q.shape
+    _, hkv, s_len, _ = k.shape
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, dh).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bhgd,bhsd->bhgs", qg, kf) / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    idx = jnp.arange(s_len)
+    valid = idx < pos
+    if window is not None:
+        valid &= idx >= pos - window
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", p, vf)
+    return out.reshape(b, hq, dh).astype(q.dtype)
+
+
+def flash_prefill_ref(
+    q: jax.Array,               # (B, Sq, Hq, Dh)
+    k: jax.Array,               # (B, Skv, Hkv, Dh)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+) -> jax.Array:
+    """Naive masked softmax attention over the full sequence (GQA)."""
+    b, sq, hq, dh = q.shape
+    _, sk, hkv, _ = k.shape
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, dh).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kf) / jnp.sqrt(
+        jnp.asarray(dh, jnp.float32))
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    valid = jnp.ones((sq, sk), bool)
+    if causal:
+        valid &= qpos >= kpos
+    if window:
+        valid &= kpos > qpos - window
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+    return out.reshape(b, sq, hq, dh).astype(q.dtype)

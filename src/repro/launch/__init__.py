@@ -1,0 +1,3 @@
+"""Launch layer: production meshes, step builders, dry-run, train/serve CLIs."""
+from .mesh import make_production_mesh  # noqa: F401
+from .shapes import SHAPES, InputShape  # noqa: F401

@@ -1,0 +1,345 @@
+"""Post-SPMD HLO text analysis: FLOPs, bytes, collective payloads.
+
+Why parse text at all? ``compiled.cost_analysis()`` reports each while-loop
+BODY once — but scan-over-layers (and scan-over-microbatches) put ~all of
+the program inside while loops, so its numbers are off by the trip count
+(~n_rep x microbatches). This module rebuilds the call graph (ENTRY ->
+while bodies -> fusions), recovers loop trip counts from the canonical
+`compare(iv, constant)` condition pattern scan emits, and aggregates:
+
+  * dot_flops        — 2 * |output| * contracted-dim product per `dot`,
+                       weighted by the product of trip counts on the call
+                       path (the MXU term of the roofline),
+  * collective bytes — result-shape bytes of every all-gather/all-reduce/
+                       reduce-scatter/all-to-all/collective-permute,
+                       weighted the same way (the ICI term),
+  * hbm bytes        — approximate traffic: result + operand bytes of every
+                       non-trivial top-level instruction (fusion bodies are
+                       skipped — their I/O is counted at the fusion op),
+                       weighted the same way (the HBM term).
+
+All shapes in the optimized module are per-device (post-SPMD), so these
+are per-chip quantities.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_OP_RE = re.compile(r"^((?:\([^)]*\)|[\w\[\],\{\} ]+?))\s*([a-z][a-z0-9\-]*)\(")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Bytes of an HLO shape string ('f32[128,2048]', tuples summed)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_dims(shape_str: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+class Instr:
+    __slots__ = ("name", "shape", "op", "rhs")
+
+    def __init__(self, name, shape, op, rhs):
+        self.name, self.shape, self.op, self.rhs = name, shape, op, rhs
+
+
+def _parse(hlo: str):
+    """-> (computations: name -> [Instr], entry_name)."""
+    comps: dict[str, list[Instr]] = {}
+    cur = None
+    entry = None
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        if line.endswith("{") and ("=" not in line.split("(")[0]):
+            is_entry = line.startswith("ENTRY")
+            m = re.match(r"%?([\w\.\-]+)", line.replace("ENTRY ", ""))
+            cur = m.group(1) if m else None
+            if cur is not None:
+                comps.setdefault(cur, [])
+                if is_entry:
+                    entry = cur
+            continue
+        if line == "}":
+            continue
+        dm = _DEF_RE.match(line)
+        if not dm or cur is None:
+            continue
+        name, rhs = dm.group(1), dm.group(2)
+        om = _OP_RE.match(rhs)
+        if om:
+            shape_str, op = om.group(1).strip(), om.group(2)
+        else:
+            parts = rhs.split(None, 1)
+            shape_str, op = parts[0], (parts[1].split("(")[0] if len(parts) > 1 else "")
+        comps[cur].append(Instr(name, shape_str, op, rhs))
+    return comps, entry
+
+
+def _trip_counts(comps) -> dict[str, int]:
+    """while-condition computation name -> trip count.
+
+    Scan-derived conditions are tiny: `iv < constant(N)` where the compare
+    may be wrapped in a kLoop fusion. The bound is recovered as the MAX
+    s32[] constant found in the condition computation or any computation
+    it calls (transitively) — conditions contain no other large s32
+    scalars in XLA's canonical scan lowering.
+    """
+    edges = _call_edges(comps)
+
+    def consts_of(cname, seen):
+        if cname in seen:
+            return []
+        seen.add(cname)
+        out = []
+        for i in comps.get(cname, ()):
+            if i.op == "constant" and i.shape.strip().startswith("s32"):
+                m = re.search(r"constant\((\d+)\)", i.rhs)
+                if m:
+                    out.append(int(m.group(1)))
+        for callee, _ in edges.get(cname, ()):
+            out.extend(consts_of(callee, seen))
+        return out
+
+    bounds: dict[str, int] = {}
+    # find every while's condition computation
+    for cname, instrs in comps.items():
+        for i in instrs:
+            m = re.search(r"condition=%?([\w\.\-]+)", i.rhs)
+            if m:
+                cond = m.group(1)
+                cs = [c for c in consts_of(cond, set()) if c >= 1]
+                if cs:
+                    bounds[cond] = max(cs)
+    return bounds
+
+
+def _call_edges(comps):
+    """computation -> [(callee, weight_kind)], weight resolved later."""
+    edges: dict[str, list[tuple[str, str]]] = defaultdict(list)
+    for cname, instrs in comps.items():
+        for i in instrs:
+            wm = re.search(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)", i.rhs)
+            if wm:
+                edges[cname].append((wm.group(2), "body:" + wm.group(1)))
+                edges[cname].append((wm.group(1), "cond:" + wm.group(1)))
+                continue
+            for key in ("calls=", "to_apply="):
+                for m in re.finditer(key + r"%?([\w\.\-]+)", i.rhs):
+                    edges[cname].append((m.group(1), "call"))
+            m = re.search(r"branch_computations=\{([^}]*)\}", i.rhs)
+            if m:
+                for callee in m.group(1).split(","):
+                    edges[cname].append((callee.strip().lstrip("%"), "call"))
+    return edges
+
+
+def _multipliers(comps, entry) -> dict[str, float]:
+    """Trip-count product from ENTRY to each computation."""
+    trips = _trip_counts(comps)
+    edges = _call_edges(comps)
+    mult: dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    # computations form a DAG (HLO has no recursion): propagate via DFS
+    seen_order = []
+    visited = set()
+
+    def topo(c):
+        if c in visited:
+            return
+        visited.add(c)
+        for callee, _ in edges.get(c, ()):
+            topo(callee)
+        seen_order.append(c)
+
+    topo(entry)
+    for c in reversed(seen_order):
+        for callee, kind in edges.get(c, ()):
+            if kind.startswith(("body:", "cond:")):
+                cond_name = kind.split(":", 1)[1]
+                w = trips.get(cond_name, 1)
+            else:
+                w = 1
+            mult[callee] += mult[c] * w
+    return dict(mult)
+
+
+def _fusion_bodies(comps) -> set[str]:
+    bodies = set()
+    for cname, instrs in comps.items():
+        for i in instrs:
+            if i.op in ("fusion", "reduce", "scatter", "sort", "map",
+                        "reduce-window", "select-and-scatter", "all-reduce",
+                        "reduce-scatter"):
+                for m in re.finditer(r"(?:calls|to_apply)=%?([\w\.\-]+)", i.rhs):
+                    bodies.add(m.group(1))
+    return bodies
+
+
+def _dot_flops(instr: Instr, symtab: dict[str, str]) -> float:
+    """2 * |out| * prod(contracted lhs dims)."""
+    out_elems = 1
+    for d in shape_dims(instr.shape):
+        out_elems *= d
+    m = re.search(r"dot\(%?([\w\.\-]+),", instr.rhs)
+    lhs_shape = symtab.get(m.group(1), "") if m else ""
+    lhs_dims = shape_dims(lhs_shape)
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.rhs)
+    contracted = 1
+    if cm and lhs_dims:
+        for idx in cm.group(1).split(","):
+            if idx and int(idx) < len(lhs_dims):
+                contracted *= lhs_dims[int(idx)]
+    return 2.0 * out_elems * contracted
+
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "",
+    # control flow: the bodies are counted separately
+    "while", "conditional", "call",
+}
+
+
+def _dus_fusion_updates(comps) -> dict[str, int]:
+    """fusion-body name -> update bytes, for fusions whose ROOT is a
+    dynamic-update-slice (scan stack writes). XLA aliases these in place:
+    traffic is the slice, not the full carried buffer."""
+    out = {}
+    for cname, instrs in comps.items():
+        if not instrs:
+            continue
+        root = instrs[-1]
+        if root.op == "dynamic-update-slice":
+            symtab = {i.name: i.shape for i in instrs}
+            ops = re.findall(r"\(%?([\w\.\-]+)", root.rhs)
+            if len(ops) >= 2:
+                out[cname] = shape_bytes(symtab.get(ops[1], ""))
+    return out
+
+
+def analyze(hlo: str) -> dict:
+    """Full per-device analysis: dot FLOPs, HBM byte proxy, collectives —
+    each weighted by loop trip counts along the call graph."""
+    comps, entry = _parse(hlo)
+    if entry is None:
+        return {"dot_flops": 0.0, "hbm_bytes": 0.0,
+                "collectives": {"total_bytes": 0.0, "by_op": {}, "count": {}}}
+    mult = _multipliers(comps, entry)
+    fusion_bodies = _fusion_bodies(comps)
+    dus_fusions = _dus_fusion_updates(comps)
+
+    dot_flops = 0.0
+    hbm_bytes = 0.0
+    attn_tile_bytes = 0.0   # (qc, kc) score-tile traffic (see below)
+    coll_by_op: dict[str, float] = defaultdict(float)
+    coll_count: dict[str, float] = defaultdict(float)
+
+    for cname, instrs in comps.items():
+        w = mult.get(cname, 0.0)
+        if w == 0.0:
+            continue
+        symtab = {i.name: i.shape for i in instrs}
+        in_fusion = cname in fusion_bodies
+        for i in instrs:
+            if i.op == "dot":
+                dot_flops += w * _dot_flops(i, symtab)
+            if i.op in _COLLECTIVES:
+                nbytes = shape_bytes(i.shape)
+                coll_by_op[i.op] += w * nbytes
+                coll_count[i.op] += w
+            if not in_fusion and i.op not in _SKIP_BYTES_OPS:
+                result = shape_bytes(i.shape)
+                operands = [
+                    shape_bytes(symtab.get(m.group(1), ""))
+                    for m in re.finditer(r"\(%?([\w\.\-]+)", i.rhs)
+                ]
+                nbytes = result + sum(operands)
+                # in-place updates: XLA aliases the carried buffer, so a
+                # dynamic-update-slice (or a fusion rooted in one) writes
+                # only the slice — counting the whole buffer in AND out
+                # would dominate every scan.
+                dims = shape_dims(i.shape)
+                if (
+                    len(dims) >= 2 and 256 <= dims[-1] <= 1024
+                    and 256 <= dims[-2] <= 1024 and dims[-1] * dims[-2] >= 2**18
+                ):
+                    # flash-attention (q_chunk, k_chunk) score/mask tiles:
+                    # in the pure-JAX lowering every tile is an HBM round
+                    # trip; a Pallas flash kernel keeps them VMEM-resident.
+                    # Tracked separately so §Perf can report the projected
+                    # kernel win without double bookkeeping.
+                    attn_tile_bytes += w * result
+                if i.op == "dynamic-update-slice" and len(operands) >= 2:
+                    nbytes = 2 * sorted(operands)[-2]
+                elif i.op == "fusion":
+                    cm = re.search(r"calls=%?([\w\.\-]+)", i.rhs)
+                    if cm and cm.group(1) in dus_fusions:
+                        upd = dus_fusions[cm.group(1)]
+                        nbytes = 2 * upd + sum(
+                            o for o in operands if o < result) - max(
+                            [o for o in operands if o < result], default=0)
+                        nbytes = max(nbytes, 2 * upd)
+                hbm_bytes += w * nbytes
+
+    return {
+        "dot_flops": dot_flops,
+        "hbm_bytes": hbm_bytes,
+        "attn_tile_bytes": attn_tile_bytes,
+        "collectives": {
+            "total_bytes": float(sum(coll_by_op.values())),
+            "by_op": dict(coll_by_op),
+            "count": dict(coll_count),
+        },
+    }
+
+
+def collective_bytes(hlo: str) -> dict:
+    """Back-compat wrapper: just the collective part of :func:`analyze`."""
+    return analyze(hlo)["collectives"]
+
+
+def largest_shapes(hlo_text: str, top: int = 12) -> list[tuple[float, str]]:
+    """Top-N largest array shapes defined in the HLO (diagnostic for
+    per-device temp memory). Returns [(bytes, 'dtype[dims] op'), ...]."""
+    seen = []
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped:
+            continue
+        rhs = stripped.partition("=")[2].strip()
+        m = _SHAPE_RE.match(rhs)
+        if not m:
+            continue
+        nbytes = shape_bytes(m.group(0))
+        op = rhs[m.end():].lstrip("{} ").split("(")[0].strip()
+        seen.append((nbytes, f"{m.group(0)} {op}"))
+    seen.sort(key=lambda t: -t[0])
+    return seen[:top]

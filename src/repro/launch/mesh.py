@@ -1,0 +1,37 @@
+"""Mesh construction for the production pod(s) and for local hosts.
+
+Functions, not module-level constants — importing this module never touches
+jax device state (jax locks the device count on first backend init, and the
+dry-run must set XLA_FLAGS before that happens).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The target TPU v5e topology.
+
+    single pod : (16, 16)    axes ("data", "model")   = 256 chips
+    multi pod  : (2, 16, 16) axes ("pod", "data", "model") = 512 chips
+
+    The pod axis is an outer pure-DP axis (gradient all-reduce crosses the
+    inter-pod links once per step; no weight shard spans pods).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Mesh over whatever devices exist locally (CPU smoke / examples).
+
+    data * model must equal (or divide) the local device count.
+    """
+    n = len(jax.devices())
+    if data * model > n:
+        raise ValueError(f"requested {data}x{model} mesh on {n} devices")
+    return jax.make_mesh(
+        (data, model), ("data", "model"), axis_types=(AxisType.Auto,) * 2
+    )

@@ -1,0 +1,410 @@
+"""Step builders + input specs + sharding assignment for every program.
+
+A *program* is one (architecture x input-shape) jit target: the step
+function, ShapeDtypeStruct stand-ins for every argument, and the
+in/out shardings for a given mesh. ``build_program`` is the single entry
+point used by the dry-run, the roofline harness, and the real train/serve
+drivers (drivers pass real arrays where the dry-run passes specs).
+
+Sharding policy (the baseline recorded in EXPERIMENTS.md; §Perf iterates):
+  * params: Megatron tensor-parallel over ``model`` via models.sharding
+    rules; FSDP over ``data`` for training (optimizer state likewise),
+    model-only sharding for inference.
+  * batch dims: sharded over ("pod","data") when divisible, else "data",
+    else replicated (long_500k b=1).
+  * KV cache: kv-head axis over ``model`` when divisible, else head_dim
+    over ``model`` (GQA kv=8 < 16 ranks; head_dim=128 always divides) —
+    dynamic-update-slice stays local in both layouts.
+  * SSM cache: heads over ``model``; conv channels over ``model``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import transformer as T
+from repro.models.arch import ArchConfig
+from repro.models.sharding import (constrain_tree, param_shardings,
+                                   set_ep2d, set_mesh)
+from repro import optim
+from .shapes import SHAPES, InputShape
+
+MOE_AUX_WEIGHT = 0.01
+
+
+# ---------------------------------------------------------------------------
+# Modality frontends are STUBS (per the brief): input_specs provides the
+# projected patch/frame embeddings directly.
+# ---------------------------------------------------------------------------
+
+def modal_tokens(cfg: ArchConfig) -> int:
+    return cfg.modality_tokens if cfg.modality == "vision" else 0
+
+
+def encoder_frames(cfg: ArchConfig, shape: InputShape) -> int:
+    """Audio encoder length: 1 frame per 4 decoder tokens (codec ratio),
+    capped so the bidirectional encoder stays O(seq^2)-sane at 500k."""
+    if not cfg.is_encoder_decoder:
+        return 0
+    return min(shape.seq_len // 4, 8_192)
+
+
+def text_len(cfg: ArchConfig, shape: InputShape) -> int:
+    """Text positions s.t. text + modality prefix == shape.seq_len."""
+    return shape.seq_len - modal_tokens(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ArchConfig, shape: InputShape, optimizer: optim.optimizers.Optimizer,
+                    schedule: Callable, grad_clip: float = 1.0,
+                    microbatches: int = 1):
+    """Fused loss+grad+update step with optional gradient accumulation.
+
+    ``microbatches`` > 1 splits the global batch along dim 0 and runs a
+    sequential ``lax.scan`` of forward/backward passes, accumulating the
+    grads in f32 — the standard activation-memory lever: the scan-over-
+    layers residual stack shrinks by the microbatch factor while the math
+    (sum of per-microbatch grads / total weight) is exactly the full-batch
+    gradient for token-mean losses.
+    """
+    window = cfg.window_for(shape.name)
+    n_modal = modal_tokens(cfg)
+
+    def loss_fn(p, mb):
+        h, aux = T.forward(
+            cfg, p, mb["tokens"],
+            modal_embeds=mb.get("modal_embeds"),
+            enc_embeds=mb.get("enc_embeds"),
+            window=window,
+        )
+        if n_modal:
+            h = h[:, n_modal:, :]
+        loss = T.lm_loss(cfg, p, h, mb["labels"], mb.get("mask"))
+        return loss + MOE_AUX_WEIGHT * aux, (loss, aux)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            grads, (loss, aux) = jax.grad(loss_fn, has_aux=True)(params, batch)
+        else:
+            mbs = jax.tree.map(
+                lambda x: x.reshape(microbatches, x.shape[0] // microbatches,
+                                    *x.shape[1:]),
+                batch,
+            )
+
+            def acc_step(acc, mb):
+                g, (l, a) = jax.grad(loss_fn, has_aux=True)(params, mb)
+                gsum = jax.tree.map(lambda s, gi: s + gi.astype(jnp.float32),
+                                    acc[0], g)
+                # keep the f32 accumulator sharded like the params: a
+                # replicated accumulator makes GSPMD all-reduce the FULL
+                # grads every microbatch (335 GiB/step at granite-8b scale,
+                # EXPERIMENTS.md §Perf iter 1) instead of reduce-scattering
+                # each contribution.
+                gsum = constrain_tree(gsum, fsdp=True)
+                acc = (gsum, acc[1] + l, acc[2] + a)
+                return acc, None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            zeros = constrain_tree(zeros, fsdp=True)
+            (gsum, lsum, asum), _ = jax.lax.scan(
+                acc_step, (zeros, jnp.zeros(()), jnp.zeros(())), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss, aux = lsum / microbatches, asum / microbatches
+
+        grads, gnorm = optim.clip_by_global_norm(grads, grad_clip)
+        lr = schedule(opt_state.step)
+        params, opt_state = optimizer.update(grads, opt_state, params, lr)
+        metrics = {"loss": loss, "moe_aux": aux, "grad_norm": gnorm, "lr": lr}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def auto_microbatches(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
+                      budget_bytes: float = 2 * 2**30) -> int:
+    """Smallest power-of-two microbatch count keeping the per-device
+    scan-over-layers residual stack (n_rep x B_loc x S x d x 2B) under
+    ``budget_bytes``. The stack is the dominant training activation term
+    once per-sublayer remat is on (see DESIGN.md §memory)."""
+    dshard = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dshard *= mesh.shape[a]
+    b_loc = max(shape.global_batch // dshard, 1)
+    stack = cfg.n_rep * b_loc * shape.seq_len * cfg.d_model * 2
+    if cfg.is_encoder_decoder:
+        stack *= 2  # encoder stack of similar depth
+    mb = 1
+    while stack / mb > budget_bytes and mb < b_loc and mb < 64:
+        mb *= 2
+    return mb
+
+
+def make_prefill_step(cfg: ArchConfig, shape: InputShape):
+    window = cfg.window_for(shape.name)
+
+    def prefill_step(params, batch):
+        logits, cache, _ = T.prefill(
+            cfg, params, batch["tokens"],
+            modal_embeds=batch.get("modal_embeds"),
+            enc_embeds=batch.get("enc_embeds"),
+            window=window,
+        )
+        return logits, cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, shape: InputShape):
+    window = cfg.window_for(shape.name)
+
+    def serve_step(params, cache, token, pos):
+        return T.decode_step(cfg, params, cache, token, pos, window=window)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Input ShapeDtypeStructs
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ArchConfig, shape: InputShape, act_dtype=jnp.float32) -> dict:
+    """Training / prefill batch stand-ins (ShapeDtypeStruct pytree)."""
+    b = shape.global_batch
+    s_text = text_len(cfg, shape)
+    out = {
+        "tokens": jax.ShapeDtypeStruct((b, s_text), jnp.int32),
+    }
+    if shape.kind == "train":
+        out["labels"] = jax.ShapeDtypeStruct((b, s_text), jnp.int32)
+        out["mask"] = jax.ShapeDtypeStruct((b, s_text), jnp.float32)
+    if modal_tokens(cfg):
+        out["modal_embeds"] = jax.ShapeDtypeStruct(
+            (b, modal_tokens(cfg), cfg.d_model), act_dtype
+        )
+    if cfg.is_encoder_decoder:
+        out["enc_embeds"] = jax.ShapeDtypeStruct(
+            (b, encoder_frames(cfg, shape), cfg.d_model), act_dtype
+        )
+    return out
+
+
+def params_specs_tree(cfg: ArchConfig, param_dtype) -> Any:
+    return jax.eval_shape(
+        lambda: T.init_params(cfg, jax.random.key(0), dtype=param_dtype)
+    )
+
+
+def cache_spec_tree(cfg: ArchConfig, shape: InputShape, cache_dtype) -> Any:
+    window = cfg.window_for(shape.name)
+    mem = encoder_frames(cfg, shape)
+    return jax.eval_shape(
+        lambda: T.init_cache(
+            cfg, shape.global_batch, shape.seq_len, cache_dtype,
+            window=window, memory_len=mem,
+        )
+    )
+
+
+# ---------------------------------------------------------------------------
+# Sharding assignment
+# ---------------------------------------------------------------------------
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def batch_axes_for(mesh: Mesh, b: int):
+    """Largest divisible batch sharding among (pod+data), data, nothing."""
+    pod, data = _axis_size(mesh, "pod"), _axis_size(mesh, "data")
+    if "pod" in mesh.axis_names and b % (pod * data) == 0:
+        return ("pod", "data")
+    if b % data == 0:
+        return ("data",)
+    return None
+
+
+def cache_pspec(key_leaf: str, shape: tuple, cfg: ArchConfig, mesh: Mesh,
+                batch: Optional[tuple]) -> P:
+    """PartitionSpec for one cache leaf (leading axis = n_rep stack)."""
+    m = _axis_size(mesh, "model")
+    if key_leaf in ("k", "v") or key_leaf.endswith("_xk") or key_leaf.endswith("_xv"):
+        # (n_rep, B, S, Hkv, Dh)
+        hkv, hd = shape[3], shape[4]
+        if hkv % m == 0:
+            return P(None, batch, None, "model", None)
+        if hd % m == 0:
+            return P(None, batch, None, None, "model")
+        return P(None, batch, None, None, None)
+    if key_leaf == "conv":
+        # (n_rep, B, W-1, C)
+        return P(None, batch, None, "model" if shape[3] % m == 0 else None)
+    if key_leaf == "ssm":
+        # (n_rep, B, H, P, N)
+        return P(None, batch, "model" if shape[2] % m == 0 else None, None, None)
+    return P(*([None] * len(shape)))
+
+
+def cache_shardings(cfg: ArchConfig, mesh: Mesh, cache_tree, batch: Optional[tuple]):
+    def one(path, leaf):
+        key = None
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                key = str(p.key)
+                break
+        return NamedSharding(mesh, cache_pspec(key, leaf.shape, cfg, mesh, batch))
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def batch_shardings(mesh: Mesh, specs: dict, batch: Optional[tuple]):
+    return {
+        k: NamedSharding(mesh, P(batch, *([None] * (v.ndim - 1))))
+        for k, v in specs.items()
+    }
+
+
+def param_shardings_tree(cfg: ArchConfig, mesh: Mesh, params_tree, *, fsdp: bool):
+    # single source of truth (includes the divisibility safety net)
+    return param_shardings(mesh, params_tree, fsdp=fsdp)
+
+
+# ---------------------------------------------------------------------------
+# Program assembly
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Program:
+    """One jit target: fn(*args) with matching shardings."""
+    name: str
+    fn: Callable
+    args: tuple                  # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    out_shardings: Any
+    meta: dict
+
+
+def build_program(
+    cfg: ArchConfig,
+    shape: InputShape,
+    mesh: Mesh,
+    *,
+    param_dtype=jnp.bfloat16,
+    fsdp: bool = True,
+    microbatches: int = 0,   # 0 = auto
+    moments_dtype=jnp.float32,
+) -> Program:
+    """Assemble (fn, arg specs, shardings) for one (arch x shape) target."""
+    set_mesh(mesh)
+    set_ep2d(False)
+    batch = batch_axes_for(mesh, shape.global_batch)
+    params = params_specs_tree(cfg, param_dtype)
+    rep = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        # moments_dtype=bf16 halves Adam state (12.4 GiB/chip at jamba-398B
+        # scale) on TPU; kept opt-in because the CPU dry-run's f32 shadow
+        # copies cancel the saving in the MEASURED number (EXPERIMENTS
+        # §Perf H1g, refuted-on-CPU).
+        optimizer = optim.adamw(mu_dtype=moments_dtype)
+        schedule = optim.linear_warmup_cosine(3e-4, 100, 10_000)
+        mb = microbatches or auto_microbatches(cfg, shape, mesh)
+        fn = make_train_step(cfg, shape, optimizer, schedule, microbatches=mb)
+        opt_state = jax.eval_shape(optimizer.init, params)
+        bspecs = batch_specs(cfg, shape)
+        p_shard = param_shardings_tree(cfg, mesh, params, fsdp=fsdp)
+        # moments mirror param shardings; step scalar replicated
+        o_shard = optim.OptState(
+            step=rep,
+            moments={k: p_shard for k in opt_state.moments},
+        )
+        b_shard = batch_shardings(mesh, bspecs, batch)
+        metrics_shard = {k: rep for k in ("loss", "moe_aux", "grad_norm", "lr")}
+        return Program(
+            name=f"{cfg.name}:{shape.name}",
+            fn=fn,
+            args=(params, opt_state, bspecs),
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard, metrics_shard),
+            meta={"kind": "train", "batch_axes": batch,
+                  "window": cfg.window_for(shape.name), "microbatches": mb},
+        )
+
+    # Inference param sharding: model-TP only (weights stay resident, no
+    # per-step weight collectives) unless the model doesn't fit that way —
+    # then shard dim0 over data as well (jamba-398B: 796GB bf16 / 16 TP
+    # ranks = 50GB/chip >> 16GB HBM; over all 256 chips it's 3.1GB).
+    param_bytes = sum(
+        int(np.prod(l.shape)) * l.dtype.itemsize
+        for l in jax.tree.leaves(params)
+    )
+    per_dev_tp = param_bytes / _axis_size(mesh, "model")
+    infer_fsdp = per_dev_tp > 12e9
+    # decode of over-size MoE models: 2D expert sharding (experts x d_ff)
+    # keeps weights resident and moves the tiny token set instead (§Perf
+    # H2); prefill keeps FSDP weight-gathers (amortized over the whole
+    # 32k-token sequence — the arithmetic-intensity crossover).
+    ep2d = (infer_fsdp and shape.kind == "decode" and cfg.moe_experts > 0
+            and cfg.d_ff % (_axis_size(mesh, "data")
+                            * _axis_size(mesh, "pod")) == 0)
+    set_ep2d(ep2d)
+    if ep2d:
+        p_shard = param_shardings(mesh, params, fsdp=False, expert_data=True)
+    else:
+        p_shard = param_shardings_tree(cfg, mesh, params, fsdp=infer_fsdp)
+
+    if shape.kind == "prefill":
+        fn = make_prefill_step(cfg, shape)
+        bspecs = batch_specs(cfg, shape)
+        b_shard = batch_shardings(mesh, bspecs, batch)
+        cache = jax.eval_shape(fn, params, bspecs)[1]
+        c_shard = cache_shardings(cfg, mesh, cache, batch)
+        logits_shard = NamedSharding(mesh, P(batch, None, "model"))
+        return Program(
+            name=f"{cfg.name}:{shape.name}",
+            fn=fn,
+            args=(params, bspecs),
+            in_shardings=(p_shard, b_shard),
+            out_shardings=(logits_shard, c_shard),
+            meta={"kind": "prefill", "batch_axes": batch,
+                  "window": cfg.window_for(shape.name)},
+        )
+
+    # decode: one token against a seq_len cache
+    fn = make_serve_step(cfg, shape)
+    cache = cache_spec_tree(cfg, shape, param_dtype)
+    c_shard = cache_shardings(cfg, mesh, cache, batch)
+    token = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    t_shard = NamedSharding(mesh, P(batch, None))
+    logits_shard = NamedSharding(mesh, P(batch, None, "model"))
+    return Program(
+        name=f"{cfg.name}:{shape.name}",
+        fn=fn,
+        args=(params, cache, token, pos),
+        in_shardings=(p_shard, c_shard, t_shard, rep),
+        out_shardings=(logits_shard, c_shard),
+        meta={"kind": "decode", "batch_axes": batch,
+              "window": cfg.window_for(shape.name)},
+    )
+
+
+def lower_program(prog: Program, mesh: Mesh):
+    """jit + lower (no compile) under the mesh context."""
+    set_mesh(mesh)
+    jitted = jax.jit(
+        prog.fn, in_shardings=prog.in_shardings, out_shardings=prog.out_shardings
+    )
+    with mesh:
+        return jitted.lower(*prog.args)

@@ -1,0 +1,129 @@
+"""Training driver.
+
+Runs a real training loop on the local devices (CPU smoke / single host) or
+lowers for the production mesh. The same ``build_program`` the dry-run uses
+provides step + shardings, so what trains here is exactly what compiles
+there.
+
+Examples:
+  # ~100M-param model, a few hundred steps on CPU:
+  PYTHONPATH=src python -m repro.launch.train --arch mamba2-370m \\
+      --reduced --steps 200 --batch 8 --seq 256
+
+  # any assigned arch, reduced, quick smoke:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-moe-a2.7b \\
+      --reduced --steps 20 --batch 4 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.data import TokenStream
+from repro.models import transformer as T
+from repro.models.arch import get_arch
+from repro.models.sharding import param_shardings, set_mesh
+from .mesh import make_host_mesh
+from .shapes import InputShape
+from .steps import batch_shardings, batch_axes_for, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--data-par", type=int, default=1)
+    ap.add_argument("--model-par", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--param-dtype", choices=["f32", "bf16"], default="f32")
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    dtype = jnp.float32 if args.param_dtype == "f32" else jnp.bfloat16
+
+    mesh = make_host_mesh(args.data_par, args.model_par)
+    set_mesh(mesh)
+    shape = InputShape("cli", "train", args.seq, args.batch)
+
+    optimizer = optim.adamw()
+    schedule = optim.linear_warmup_cosine(args.lr, args.warmup, args.steps)
+    step_fn = make_train_step(cfg, shape, optimizer, schedule)
+
+    params = T.init_params(cfg, jax.random.key(args.seed), dtype=dtype)
+    opt_state = optimizer.init(params)
+    n_params = T.param_count(params)
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
+          f"(active {T.active_param_count(cfg, params)/1e6:.1f}M) "
+          f"mesh={dict(mesh.shape)}")
+
+    start = 0
+    if args.ckpt_dir:
+        last = latest_step(args.ckpt_dir)
+        if last is not None:
+            state = load_checkpoint(
+                args.ckpt_dir, last,
+                {"params": params, "opt": opt_state._asdict()},
+            )
+            params, opt_state = state["params"], optim.OptState(**state["opt"])
+            start = last
+            print(f"resumed from step {start}")
+
+    stream = TokenStream(
+        vocab=cfg.vocab, seq_len=args.seq - (cfg.modality_tokens or 0),
+        global_batch=args.batch, seed=args.seed,
+    )
+    p_shard = param_shardings(mesh, params, fsdp=True)
+    params = jax.device_put(params, p_shard)
+    batch_axes = batch_axes_for(mesh, args.batch)
+
+    jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+    losses = []
+    t0 = time.time()
+    with mesh:
+        for step in range(start, args.steps):
+            batch = {k: jnp.asarray(v) for k, v in stream.batch(step).items()}
+            if cfg.modality == "vision" and cfg.modality_tokens:
+                key = jax.random.fold_in(jax.random.key(args.seed), step)
+                batch["modal_embeds"] = 0.02 * jax.random.normal(
+                    key, (args.batch, cfg.modality_tokens, cfg.d_model))
+            if cfg.is_encoder_decoder:
+                key = jax.random.fold_in(jax.random.key(args.seed + 1), step)
+                batch["enc_embeds"] = 0.02 * jax.random.normal(
+                    key, (args.batch, max(args.seq // 4, 8), cfg.d_model))
+            params, opt_state, metrics = jitted(params, opt_state, batch)
+            losses.append(float(metrics["loss"]))
+            if (step + 1) % args.log_every == 0:
+                dt = time.time() - t0
+                print(f"step {step+1:5d} loss {losses[-1]:.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} "
+                      f"lr {float(metrics['lr']):.2e} "
+                      f"({dt/args.log_every:.2f}s/step)", flush=True)
+                t0 = time.time()
+            if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+                save_checkpoint(args.ckpt_dir, step + 1,
+                                {"params": params, "opt": opt_state._asdict()})
+
+    h0 = stream.unigram_entropy_bound()
+    print(f"final loss {np.mean(losses[-10:]):.4f} "
+          f"(unigram entropy bound {h0:.3f} nats)")
+
+
+if __name__ == "__main__":
+    main()

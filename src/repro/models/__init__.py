@@ -1,0 +1,3 @@
+"""Model substrate: arch registry, functional layers, assembly, sharding."""
+from .arch import ArchConfig, LayerSpec, get_arch, list_archs, register  # noqa: F401
+from .sharding import constrain, get_mesh, param_shardings, param_specs, set_mesh  # noqa: F401

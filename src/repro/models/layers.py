@@ -1,0 +1,754 @@
+"""Functional building blocks: norm, rope, attention, MLP, MoE, Mamba2-SSD.
+
+All modules are (init, apply) pairs of pure functions over dict pytrees.
+dtype policy: params in ``param_dtype`` (bf16 for big configs), math in f32
+where it matters (softmax, SSM scan, router), outputs cast back.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .sharding import constrain, get_mesh
+
+Init = jax.nn.initializers
+
+# ---------------------------------------------------------------------------
+# Pallas attention integration. Auto-on for TPU (native lowering), off for
+# CPU (interpret mode is Python-slow and pallas_call does not partition
+# under GSPMD without a shard_map wrapper — single-device / explicitly
+# enabled only; tests force it on with interpret=True to exercise the
+# integrated path end to end).
+# ---------------------------------------------------------------------------
+
+_PALLAS_ATTN: bool | None = None  # None = auto (TPU yes, CPU no)
+
+
+def set_pallas_attention(on) -> None:
+    global _PALLAS_ATTN
+    _PALLAS_ATTN = on
+
+
+def _use_pallas_attention() -> bool:
+    if get_mesh() is not None:
+        return False
+    if _PALLAS_ATTN is None:
+        return jax.default_backend() == "tpu"
+    return bool(_PALLAS_ATTN)
+
+
+def largest_divisor(n: int, cap: int) -> int:
+    """Largest divisor of ``n`` that is <= cap (for chunked loops over
+    sequences whose length need not be a power of two, e.g. VLM concats)."""
+    for c in range(min(cap, n), 0, -1):
+        if n % c == 0:
+            return c
+    return 1
+
+
+def _dense_init(key, shape, dtype, scale: float = 1.0):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _rmsnorm_core(scale: jax.Array, x: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(jnp.square(xf), axis=-1, keepdims=True) + eps)
+    return (xf * rms).astype(x.dtype) * scale
+
+
+def _rmsnorm_fwd(scale, x, eps):
+    return _rmsnorm_core(scale, x, eps), (scale, x)
+
+
+def _rmsnorm_bwd(eps, res, dy):
+    # Explicit VJP with f32 confined to THIS op: the autodiff rule would
+    # thread f32 (B,S,D) cotangents into the surrounding graph, and the TP
+    # dx all-reduce then runs at 4 bytes/elt instead of 2 (§Perf).
+    scale, x = res
+    xf = x.astype(jnp.float32)
+    dyf = dy.astype(jnp.float32)
+    sf = scale.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(jnp.square(xf), axis=-1, keepdims=True) + eps)
+    xhat = xf * rms
+    dscale = jnp.sum(dyf * xhat, axis=tuple(range(x.ndim - 1)))
+    g = dyf * sf
+    dx = rms * (g - xhat * jnp.mean(g * xhat, axis=-1, keepdims=True))
+    return dscale.astype(scale.dtype), dx.astype(x.dtype)
+
+
+_rmsnorm_core.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    return _rmsnorm_core(p["scale"], x, eps)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, Dh), positions: (..., S) broadcastable int32."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional sliding window / non-causal / cross)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg, dtype) -> dict:
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": _dense_init(ks[0], (d, h * hd), dtype),
+        "wk": _dense_init(ks[1], (d, hkv * hd), dtype),
+        "wv": _dense_init(ks[2], (d, hkv * hd), dtype),
+        "wo": _dense_init(ks[3], (h * hd, d), dtype),
+    }
+
+
+def _flash_attn(
+    q: jax.Array,  # (B, Sq, Hkv, G, Dh)
+    k: jax.Array,  # (B, Skv, Hkv, Dh)
+    v: jax.Array,
+    *,
+    causal: bool,
+    window: int,
+    q_offset: int = 0,
+    q_chunk: int = 1024,
+    k_chunk: int = 1024,
+) -> jax.Array:
+    """Chunked flash-style attention in pure JAX (online softmax over kv
+    chunks, scan over q chunks). Peak memory O(q_chunk * k_chunk) per head
+    instead of O(Sq * Skv) — required to even *lower* the 32k shapes.
+    """
+    b, sq, hkv, g, dh = q.shape
+    skv = k.shape[1]
+    qc = largest_divisor(sq, q_chunk)
+    kc = largest_divisor(skv, k_chunk)
+    nq, nk = sq // qc, skv // kc
+    scale = 1.0 / np.sqrt(dh)
+    q = q.reshape(b, nq, qc, hkv, g, dh)
+
+    def q_chunk_fn(qi, q_blk):
+        # q_blk: (B, qc, Hkv, G, Dh)
+        q_pos = q_offset + qi * qc + jnp.arange(qc)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(k, ki * kc, kc, axis=1)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, ki * kc, kc, axis=1)
+            s = jnp.einsum(
+                "bqhgd,bkhd->bhgqk", q_blk, k_blk,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            k_pos = ki * kc + jnp.arange(kc)
+            mask = jnp.ones((qc, kc), dtype=bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window:
+                mask &= k_pos[None, :] > q_pos[:, None] - window
+            s = jnp.where(mask[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            pv = jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(v_blk.dtype), v_blk,
+                preferred_element_type=jnp.float32,
+            )
+            acc_new = acc * alpha[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((b, hkv, g, qc), -1e30, jnp.float32),
+            jnp.zeros((b, hkv, g, qc), jnp.float32),
+            jnp.zeros((b, hkv, g, qc, dh), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.transpose(out, (0, 3, 1, 2, 4))  # (B, qc, Hkv, G, Dh)
+
+    body = jax.checkpoint(q_chunk_fn, policy=jax.checkpoint_policies.nothing_saveable)
+    outs = jax.lax.map(lambda args: body(*args), (jnp.arange(nq), jnp.moveaxis(q, 1, 0)))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, sq, hkv, g, dh)
+
+
+def attention(
+    p: dict,
+    x: jax.Array,                      # (B, S, D)
+    cfg,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    positions: Optional[jax.Array] = None,
+    memory: Optional[jax.Array] = None,  # cross-attention memory (B, Sm, D)
+    return_kv: bool = False,
+):
+    b, s, d = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    g = h // hkv
+    src = memory if memory is not None else x
+    sm = src.shape[1]
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (src @ p["wk"]).reshape(b, sm, hkv, hd)
+    v = (src @ p["wv"]).reshape(b, sm, hkv, hd)
+    q = constrain(q, "batch", None, "model", None)
+    # k/v: no head-axis constraint — hkv (8) rarely divides the TP axis (16);
+    # propagation from the column-sharded wk/wv picks an (hkv x hd) tiling.
+    k = constrain(k, "batch", None, None, None)
+    v = constrain(v, "batch", None, None, None)
+    if memory is None:  # self-attention: rope
+        if positions is None:
+            positions = jnp.arange(s)[None, :]
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    if _use_pallas_attention():
+        from repro.kernels.flash_prefill import flash_prefill
+
+        out = flash_prefill(
+            q, k, v,
+            causal=causal and memory is None,
+            window=window if memory is None else 0,
+            interpret=jax.default_backend() != "tpu",
+        ).reshape(b, s, hkv, g, hd)
+    else:
+        qg = q.reshape(b, s, hkv, g, hd)
+        out = _flash_attn(
+            qg, k, v,
+            causal=causal and memory is None,
+            window=window if memory is None else 0,
+        )
+    out = out.reshape(b, s, h * hd).astype(x.dtype)
+    out = constrain(out, "batch", None, "model")
+    out = constrain(out @ p["wo"], "batch", None, None)
+    if return_kv:
+        return out, (k, v)  # post-rope K/V — exactly what the decode cache holds
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode-step attention against a KV cache (single token)
+# ---------------------------------------------------------------------------
+
+def attention_decode(
+    p: dict,
+    x: jax.Array,          # (B, 1, D)
+    cache: dict,           # {'k','v': (B, Sbuf, Hkv, Dh)}
+    pos: jax.Array,        # scalar int32: current absolute position
+    cfg,
+    *,
+    window: int = 0,
+    memory_kv: Optional[tuple] = None,  # precomputed cross (k, v)
+):
+    b, _, d = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    g = h // hkv
+    q = (x @ p["wq"]).reshape(b, 1, h, hd)
+    if memory_kv is None:
+        k_new = (x @ p["wk"]).reshape(b, 1, hkv, hd)
+        v_new = (x @ p["wv"]).reshape(b, 1, hkv, hd)
+        q = rope(q, pos[None, None], cfg.rope_theta)
+        k_new = rope(k_new, pos[None, None], cfg.rope_theta)
+        sbuf = cache["k"].shape[1]
+        slot = pos % sbuf if window else jnp.minimum(pos, sbuf - 1)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+        cache = {"k": k_cache, "v": v_cache}
+        kk, vv = k_cache, v_cache
+        # validity: ring buffer when windowed (all slots valid once wrapped,
+        # prefix before), plain prefix when not windowed.
+        idx = jnp.arange(sbuf)
+        valid = idx <= jnp.minimum(pos, sbuf - 1) if window else idx <= pos
+    else:
+        kk, vv = memory_kv
+        valid = jnp.ones((kk.shape[1],), dtype=bool)
+    qg = q.reshape(b, hkv, g, hd)
+    # Pin the decode contraction to the CACHE's layout (launch.steps.
+    # cache_pspec: kv-heads over `model` when divisible, else head_dim):
+    # left free, GSPMD re-tiles the scores dot to an (hkv x hd) split it
+    # cannot reach from the cache sharding and replicates the whole cache
+    # per layer (1 GiB/layer at granite-8b decode_32k — the involuntary-
+    # remat warning). Pinning q (and s) to the matching sharding keeps the
+    # contraction local (+ one psum of the tiny scores for the hd split).
+    mesh = get_mesh()
+    msize = mesh.shape.get("model", 1) if mesh is not None else 1
+    if msize > 1 and hkv % msize == 0:
+        qg = constrain(qg, "batch", "model", None, None)
+        s = jnp.einsum("bhgd,bshd->bhgs", qg, kk,
+                       preferred_element_type=jnp.float32)
+        s = constrain(s, "batch", "model", None, None)
+    else:
+        qg = constrain(qg, "batch", None, None, "model")
+        s = jnp.einsum("bhgd,bshd->bhgs", qg, kk,
+                       preferred_element_type=jnp.float32)
+        s = constrain(s, "batch", None, None, None)
+    s = s / np.sqrt(hd)
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", pr.astype(vv.dtype), vv,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(b, 1, h * hd).astype(x.dtype)
+    return constrain(o @ p["wo"], "batch", None, None), cache
+
+
+def init_kv_cache(b: int, sbuf: int, hkv: int, hd: int, dtype) -> dict:
+    return {
+        "k": jnp.zeros((b, sbuf, hkv, hd), dtype=dtype),
+        "v": jnp.zeros((b, sbuf, hkv, hd), dtype=dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, f: int, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "wgate": _dense_init(ks[0], (d, f), dtype),
+        "wi": _dense_init(ks[1], (d, f), dtype),
+        "w_down": _dense_init(ks[2], (f, d), dtype),
+    }
+
+
+def mlp(p: dict, x: jax.Array) -> jax.Array:
+    hidden = jax.nn.silu(x @ p["wgate"]) * (x @ p["wi"])
+    hidden = constrain(hidden, "batch", None, "model")
+    return constrain(hidden @ p["w_down"], "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (token-choice top-k, capacity + drop, expert parallel)
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg, dtype) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.padded_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _dense_init(ks[0], (d, e), jnp.float32),
+        "exp_wgate": _dense_init(ks[1], (e, d, f), dtype),
+        "exp_wi": _dense_init(ks[2], (e, d, f), dtype),
+        "exp_w_down": _dense_init(ks[3], (e, f, d), dtype),
+    }
+    if cfg.moe_shared_ff:
+        p["shared"] = init_mlp(ks[4], d, cfg.moe_shared_ff, dtype)
+    return p
+
+
+def _route(p: dict, xf: jax.Array, cfg):
+    """Router: (gate (T,k), exp_ids (T,k), probs (T,E_pad))."""
+    e, k = cfg.padded_experts, cfg.moe_top_k
+    logits = (xf.astype(jnp.float32)) @ p["router"]          # (T, E_pad)
+    if e != cfg.moe_experts:  # mask padding experts out of routing
+        logits = jnp.where(jnp.arange(e) >= cfg.moe_experts, -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, exp_ids = jax.lax.top_k(probs, k)                  # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    return gate, exp_ids, probs
+
+
+def _aux_loss(probs: jax.Array, exp_ids: jax.Array, e: int) -> jax.Array:
+    """Switch-style load-balance loss over the given token set."""
+    density = jnp.mean(jax.nn.one_hot(exp_ids[:, 0], e), axis=0)
+    router_mean = jnp.mean(probs, axis=0)
+    return e * jnp.sum(density * router_mean)
+
+
+def _capacity(cfg, t: int, e: int) -> int:
+    cap = int(np.ceil(cfg.moe_capacity_factor * t * cfg.moe_top_k / e))
+    return max(8, -(-cap // 8) * 8)  # round up to 8 for TPU friendliness
+
+
+def _dispatch_ffn(xf, gate, exp_ids, wgate, wi, wdown, cap: int):
+    """Sort-based capacity dispatch + expert FFN + combine, over the experts
+    present in ``wgate`` (E_loc). ``exp_ids`` entries outside [0, E_loc) are
+    treated as not-mine (the expert-parallel path remaps and masks before
+    calling). Returns (T, d) partial output (zeros for foreign tokens).
+    """
+    t, d = xf.shape
+    e_loc = wgate.shape[0]
+    k = exp_ids.shape[1]
+    flat_exp = jnp.clip(exp_ids.reshape(-1), -1, e_loc)       # (T*k,)
+    mine = (flat_exp >= 0) & (flat_exp < e_loc)
+    sort_key = jnp.where(mine, flat_exp, e_loc)
+    order = jnp.argsort(sort_key, stable=True)
+    sorted_exp = sort_key[order]
+    sorted_tok = order // k
+    sorted_gate = gate.reshape(-1)[order]
+    counts = jnp.bincount(sort_key, length=e_loc + 1)[:e_loc]
+    starts = jnp.concatenate(
+        [jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]]
+    )
+    pos_in_exp = jnp.arange(t * k) - starts[jnp.clip(sorted_exp, 0, e_loc - 1)]
+    keep = (sorted_exp < e_loc) & (pos_in_exp < cap)
+    n_slots = e_loc * cap
+    slot = jnp.where(keep, sorted_exp * cap + pos_in_exp, n_slots)
+
+    # Invert the token->slot map and index PER SLOT: gathering xf by
+    # sorted_tok first would materialize a (T*k, d) tensor (4 GiB/device at
+    # jamba scale); the slot-indexed view touches only (E_loc*cap, d).
+    tok_for_slot = jnp.zeros(n_slots + 1, jnp.int32).at[slot].set(sorted_tok)
+    gate_for_slot = jnp.zeros(n_slots + 1, sorted_gate.dtype).at[slot].set(sorted_gate)
+    valid_slot = jnp.zeros(n_slots + 1, bool).at[slot].set(keep)
+    tok_idx = tok_for_slot[:n_slots]
+    slot_gate = (gate_for_slot[:n_slots] * valid_slot[:n_slots])
+
+    buf = jnp.where(valid_slot[:n_slots, None], xf[tok_idx], 0)
+    buf = buf.reshape(e_loc, cap, d)
+    hidden = jnp.einsum("ecd,edf->ecf", buf, wgate)
+    hidden = jax.nn.silu(hidden) * jnp.einsum("ecd,edf->ecf", buf, wi)
+    out_buf = jnp.einsum("ecf,efd->ecd", hidden, wdown).reshape(n_slots, d)
+    contrib = out_buf * slot_gate[:, None].astype(xf.dtype)
+    return jnp.zeros((t, d), xf.dtype).at[tok_idx].add(contrib)
+
+
+def moe(p: dict, x: jax.Array, cfg) -> tuple[jax.Array, jax.Array]:
+    """Returns (output, load-balance aux loss).
+
+    Two execution paths with identical math (tested against each other):
+
+    * no mesh (CPU smoke): single-device sort-based capacity dispatch.
+    * mesh installed: **expert-parallel shard_map** — tokens stay on their
+      data shard (the global GSPMD sort would all-gather every token);
+      each model rank routes all of its local tokens but runs the FFN only
+      for its E/M local experts, then one psum over ``model`` combines
+      expert contributions — the same single-collective profile as a dense
+      TP MLP. Capacity is per (data-shard x expert), the standard
+      data-parallel Switch semantics.
+    """
+    from . import sharding as _sh
+
+    b, s, d = x.shape
+    e = cfg.padded_experts
+    mesh = _sh.get_mesh()
+    use_ep = (
+        mesh is not None
+        and "model" in mesh.axis_names
+        and e % mesh.shape["model"] == 0
+    )
+
+    if not use_ep:
+        xf = x.reshape(b * s, d)
+        gate, exp_ids, probs = _route(p, xf, cfg)
+        aux = _aux_loss(probs, exp_ids, e)
+        cap = _capacity(cfg, b * s, e)
+        out = _dispatch_ffn(
+            xf, gate, exp_ids, p["exp_wgate"], p["exp_wi"], p["exp_w_down"], cap
+        ).reshape(b, s, d)
+    else:
+        out, aux = _moe_expert_parallel(p, x, cfg, mesh)
+    if "shared" in p:
+        out = out + mlp(p["shared"], x)
+    return constrain(out, "batch", None, None), aux
+
+
+def _moe_expert_parallel(p, x, cfg, mesh):
+    from . import sharding as _sh
+
+    e = cfg.padded_experts
+    msize = mesh.shape["model"]
+    e_loc = e // msize
+    b = x.shape[0]
+    # batch axes that divide b (long-context decode has b=1: replicate)
+    baxes = tuple(
+        a for a in ("pod", "data") if a in mesh.axis_names
+    )
+    bsize = 1
+    for a in baxes:
+        bsize *= mesh.shape[a]
+    if b % max(bsize, 1) != 0:
+        baxes, bsize = (), 1
+    bspec = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
+    data_axes = baxes  # aux-loss mean over these
+
+    f = cfg.d_ff
+    dsize = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dsize *= mesh.shape[a]
+    if _sh.get_ep2d() and dsize > 1 and f % dsize == 0:
+        return _moe_ep2d(p, x, cfg, mesh, e, e_loc, bspec, baxes, bsize)
+
+    # Expert weights are stored FSDP-sharded over `data` (training). The
+    # shard_map in_specs MATCH that layout and the un-FSDP all-gather is
+    # issued EXPLICITLY inside the body: letting shard_map reshard to a
+    # data-replicated spec instead makes GSPMD materialize the full
+    # (E, d, f) tensor on the multi-pod mesh (12 GiB f32 per copy at jamba
+    # scale — the same device-order "last resort" replication as the embed
+    # gather). f divisibility decides whether the stored layout is f-over-
+    # data; fall back to replicated specs otherwise (small experts).
+    dsize2 = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dsize2 *= mesh.shape[a]
+    daxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    f_sharded = bool(daxes) and cfg.d_ff % dsize2 == 0
+
+    def body(x_loc, router, wg, wi, wd):
+        bl, sl, d = x_loc.shape
+        if f_sharded:  # un-FSDP the expert shards for this step's compute
+            wg = jax.lax.all_gather(wg, daxes, axis=2, tiled=True)
+            wi = jax.lax.all_gather(wi, daxes, axis=2, tiled=True)
+            wd = jax.lax.all_gather(wd, daxes, axis=1, tiled=True)
+        xf = x_loc.reshape(bl * sl, d)
+        gate, exp_ids, probs = _route({"router": router}, xf, cfg)
+        aux = _aux_loss(probs, exp_ids, e)
+        if data_axes:
+            aux = jax.lax.pmean(aux, data_axes)
+        midx = jax.lax.axis_index("model")
+        local_ids = exp_ids - midx * e_loc   # out-of-range => masked in dispatch
+        cap = _capacity(cfg, bl * sl, e)
+        part = _dispatch_ffn(xf, gate, local_ids, wg, wi, wd, cap)
+        out = jax.lax.psum(part, "model")
+        return out.reshape(bl, sl, d), aux
+
+    P = jax.sharding.PartitionSpec
+    if f_sharded:
+        w_specs = (P("model", None, "data"), P("model", None, "data"),
+                   P("model", "data", None))
+    else:
+        w_specs = (P("model", None, None), P("model", None, None),
+                   P("model", None, None))
+    out, aux = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(bspec, None, None), P(None, None)) + w_specs,
+        out_specs=(P(bspec, None, None), P()),
+        check_vma=False,
+    )(x, p["router"], p["exp_wgate"], p["exp_wi"], p["exp_w_down"])
+    return out, aux
+
+
+def _moe_ep2d(p, x, cfg, mesh, e, e_loc, bspec, data_axes, dsize):
+    """Decode-serving MoE for experts too big for model-TP alone.
+
+    Weights: experts over `model`, d_ff over `data` (2D) — fully resident,
+    never gathered. Activations move instead: the (tiny) decode token set
+    is all-gathered over `data`, every device runs routing + its expert's
+    FFN on its d_ff slice, and ONE psum over (model, data) sums both the
+    expert contributions and the d_ff partial products. Per MoE layer the
+    wire cost is O(T*d) (~MB at decode batch sizes) instead of O(E_loc *
+    d * d_ff) weight gathers (~GB): the weight-stationary inversion.
+    The d_ff nonlinearity is elementwise, so f-slices compose exactly.
+    """
+
+    def body(x_loc, router, wg, wi, wd):
+        bl, sl, dm = x_loc.shape
+        x_all = jax.lax.all_gather(x_loc, data_axes, axis=0, tiled=True)
+        xf = x_all.reshape(-1, dm)
+        gate, exp_ids, probs = _route({"router": router}, xf, cfg)
+        aux = _aux_loss(probs, exp_ids, e)  # identical on all ranks
+        midx = jax.lax.axis_index("model")
+        local_ids = exp_ids - midx * e_loc
+        cap = _capacity(cfg, xf.shape[0], e)
+        part = _dispatch_ffn(xf, gate, local_ids, wg, wi, wd, cap)
+        out = jax.lax.psum(part, ("model",) + tuple(data_axes))
+        out = out.reshape(bl * dsize, sl, dm)
+        didx = jax.lax.axis_index(data_axes)
+        out_loc = jax.lax.dynamic_slice_in_dim(out, didx * bl, bl, axis=0)
+        return out_loc, aux
+
+    P = jax.sharding.PartitionSpec
+    out, aux = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(bspec, None, None),
+            P(None, None),
+            P("model", None, "data"),
+            P("model", None, "data"),
+            P("model", "data", None),
+        ),
+        out_specs=(P(bspec, None, None), P()),
+        check_vma=False,
+    )(x, p["router"], p["exp_wgate"], p["exp_wi"], p["exp_w_down"])
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD — state space duality, arXiv:2405.21060) chunked scan
+# ---------------------------------------------------------------------------
+
+def init_mamba(key, cfg, dtype) -> dict:
+    d, di, n, hd_s = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
+    nh = cfg.ssm_heads
+    conv_ch = di + 2 * n
+    ks = jax.random.split(key, 5)
+    return {
+        # projects to [z (di), x (di), B (n), C (n), dt (nh)]
+        "in_proj": _dense_init(ks[0], (d, 2 * di + 2 * n + nh), dtype),
+        "conv_w": _dense_init(ks[1], (cfg.ssm_conv_width, conv_ch), dtype, scale=3.0),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.log(
+            jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)
+        ),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "ssm_d": jnp.ones((nh,), jnp.float32),
+        "out_proj": _dense_init(ks[4], (di, d), dtype),
+        "norm_scale": jnp.ones((di,), dtype),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv, width W: xbc (B, S, C), w (W, C)."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xbc.shape[1], :] * w[i][None, None, :] for i in range(width)
+    )
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def _ssd_scan(xh, dt, a_log, bmat, cmat, chunk: int):
+    """Chunked SSD (state-space duality, arXiv:2405.21060 §6).
+
+    xh (B,S,H,P) f32, dt (B,S,H) post-softplus, B/C (B,S,N).
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+
+    Structured as ONE sequential ``lax.scan`` over chunks carrying the
+    (B,H,P,N) state; each step processes every head at once:
+      * intra-chunk: the masked "attention" form — scores C_i.B_j are shared
+        across heads, scaled by the per-head decay exp(cum_i - cum_j);
+      * inter-chunk: contract the carried state against C and the decay.
+    The decay mask is applied to the EXPONENT (where -> exp), not the value:
+    exp of a positive masked slot would be inf and inf*0 NaNs the backward.
+    Peak per-step memory is the (B,l,l,H) decay — ``_ssd_sizes`` picks l.
+    """
+    b, s, h, p_dim = xh.shape
+    n = bmat.shape[-1]
+    l = largest_divisor(s, chunk)
+    nc = s // l
+    mask = jnp.tril(jnp.ones((l, l), bool))  # i >= j
+
+    a = -jnp.exp(a_log)[None, None, :]                       # (1,1,H)
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape(b, nc, l, *t.shape[2:]), 1, 0)
+
+    xs = (to_chunks(xh), to_chunks(dt), to_chunks(bmat), to_chunks(cmat))
+
+    def chunk_step(hstate, inp):
+        xcc, dtcc, bcc, ccc = inp                            # (B,l,H,P) ...
+        la = a * dtcc                                        # (B,l,H), <= 0
+        cum = jnp.cumsum(la, axis=1)                         # (B,l,H)
+        scores = jnp.einsum("bin,bjn->bij", ccc, bcc)        # head-shared
+        diff = cum[:, :, None, :] - cum[:, None, :, :]       # (B,l,l,H) i,j
+        diff = jnp.where(mask[None, :, :, None], diff, -jnp.inf)
+        decay = jnp.exp(diff)                                # masked slots -> 0
+        w = scores[:, :, :, None] * decay                    # (B,l,l,H)
+        y_intra = jnp.einsum("bijh,bjh,bjhp->bihp", w, dtcc, xcc)
+        y_inter = jnp.einsum("bin,bhpn,bih->bihp", ccc, hstate, jnp.exp(cum))
+        seg = jnp.exp(cum[:, -1:, :] - cum)                  # (B,l,H)
+        state_c = jnp.einsum("bjh,bjn,bjhp->bhpn", seg * dtcc, bcc, xcc)
+        hnew = hstate * jnp.exp(cum[:, -1, :])[:, :, None, None] + state_c
+        return hnew, y_intra + y_inter
+
+    init = jnp.zeros((b, h, p_dim, n), jnp.float32)
+    h_final, y = jax.lax.scan(chunk_step, init, xs)
+    y = jnp.moveaxis(y, 0, 1).reshape(b, s, h, p_dim)
+    return y, h_final
+
+
+def _ssd_sizes(b: int, s: int, h: int, budget_bytes: int = 4 * 2**30):
+    """Chunk length l so the intra-chunk decay tensor B*l*l*H*4 stays under
+    ``budget_bytes`` GLOBALLY (so ~budget/16 per data shard) — jamba-scale
+    d_inner would otherwise materialize multi-GB decays per scan step."""
+    for l in (256, 128, 64, 32):
+        if b * l * l * h * 4 <= budget_bytes:
+            return l
+    return 16
+
+
+def mamba(p: dict, x: jax.Array, cfg, *, chunk: int = 0, return_cache: bool = False):
+    b, s, d = x.shape
+    di, n, nh, hd_s = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = x @ p["in_proj"]
+    proj = constrain(proj, "batch", None, "model")
+    z, xin, bmat, cmat, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1
+    )
+    xbc_raw = jnp.concatenate([xin, bmat, cmat], axis=-1)
+    xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    xin, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    xh = xin.reshape(b, s, nh, hd_s).astype(jnp.float32)
+    auto_chunk = _ssd_sizes(b, s, nh)
+    y, h_final = _ssd_scan(
+        xh, dt, p["a_log"], bmat.astype(jnp.float32), cmat.astype(jnp.float32),
+        chunk or auto_chunk,
+    )
+    y = y + p["ssm_d"][None, None, :, None] * xh
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)  # gated
+    y = rmsnorm({"scale": p["norm_scale"]}, y)
+    out = constrain(y @ p["out_proj"], "batch", None, None)
+    if return_cache:
+        w = cfg.ssm_conv_width
+        # decode expects the raw (pre-conv) last W-1 inputs
+        conv_cache = xbc_raw[:, -(w - 1):, :] if s >= w - 1 else jnp.pad(
+            xbc_raw, ((0, 0), (w - 1 - s, 0), (0, 0))
+        )
+        return out, {"conv": conv_cache, "ssm": h_final}
+    return out
+
+
+def mamba_decode(p: dict, x: jax.Array, cache: dict, cfg):
+    """Single-token SSD step. cache: {'conv': (B, W-1, C), 'ssm': (B,H,P,N)}."""
+    b, _, d = x.shape
+    di, n, nh, hd_s = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = x @ p["in_proj"]
+    z, xin, bmat, cmat, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1
+    )
+    xbc = jnp.concatenate([xin, bmat, cmat], axis=-1)  # (B,1,C)
+    conv_in = jnp.concatenate([cache["conv"], xbc], axis=1)  # (B,W,C)
+    conv_out = jnp.sum(conv_in * p["conv_w"][None], axis=1, keepdims=True)
+    xbc = jax.nn.silu(conv_out + p["conv_b"][None, None, :])
+    new_conv = conv_in[:, 1:, :]
+    xin, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    a = jnp.exp(-jnp.exp(p["a_log"])[None, :] * dt)  # (B,H)
+    xh = xin.reshape(b, nh, hd_s).astype(jnp.float32)
+    bm = bmat[:, 0].astype(jnp.float32)  # (B,N)
+    cm = cmat[:, 0].astype(jnp.float32)
+    dbx = jnp.einsum("bh,bn,bhp->bhpn", dt, bm, xh)
+    hstate = cache["ssm"] * a[:, :, None, None] + dbx
+    y = jnp.einsum("bn,bhpn->bhp", cm, hstate) + p["ssm_d"][None, :, None] * xh
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm({"scale": p["norm_scale"]}, y)
+    out = constrain(y @ p["out_proj"], "batch", None, None)
+    return out, {"conv": new_conv, "ssm": hstate}
+
+
+def init_mamba_cache(b: int, cfg, dtype) -> dict:
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((b, cfg.ssm_conv_width - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((b, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+    }

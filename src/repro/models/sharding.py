@@ -1,0 +1,197 @@
+"""Sharding rules: parameter PartitionSpecs + activation constraints.
+
+Global-view GSPMD style (the MaxText pattern): model code is written on
+global shapes and annotated with ``with_sharding_constraint``; the mesh is
+installed process-wide by the launcher via :func:`set_mesh`. When no mesh is
+set (CPU smoke tests) all constraints are no-ops, so the same model code
+runs on 1 device and on the 512-chip production mesh.
+
+Axes:
+  * ``model`` — tensor parallel (attention heads / ffn hidden / experts /
+    vocab) — the vertical axis, mirroring the paper's feature partition.
+  * ``data``  — batch + FSDP shard of the weights.
+  * ``pod``   — outer data axis (pure DP between pods) on the multi-pod mesh.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: Optional[Mesh] = None
+_EP2D: bool = False
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def set_ep2d(on: bool) -> None:
+    """2D expert sharding for decode of models whose experts don't fit
+    model-TP (jamba-398B): experts over `model`, d_ff over `data`; the MoE
+    layer then moves ACTIVATIONS (all-gather the handful of decode tokens)
+    instead of gathering GBs of expert weights per token (see
+    layers._moe_expert_parallel and EXPERIMENTS.md §Perf H2)."""
+    global _EP2D
+    _EP2D = on
+
+
+def get_ep2d() -> bool:
+    return _EP2D
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+def batch_axes():
+    """Mesh axes a global batch dim is sharded over."""
+    if _MESH is None:
+        return None
+    names = _MESH.axis_names
+    return tuple(a for a in ("pod", "data") if a in names) or None
+
+
+def fsdp_axis():
+    if _MESH is None:
+        return None
+    return "data" if "data" in _MESH.axis_names else None
+
+
+def constrain(x: jax.Array, *spec):
+    """with_sharding_constraint if a mesh is installed, else identity.
+
+    ``spec`` entries: None, axis name, tuple of axis names, or the sentinel
+    'batch' which expands to the (pod, data) batch axes. Axes that do not
+    divide the corresponding dim are dropped (a constraint that forces
+    padding triggers involuntary full rematerialization in SPMD).
+    """
+    if _MESH is None:
+        return x
+    spec = tuple(batch_axes() if s == "batch" else s for s in spec)
+    fixed = []
+    for dim, s in zip(x.shape, spec):
+        axes = s if isinstance(s, tuple) else (s,) if s else ()
+        size = 1
+        for a in axes:
+            size *= _MESH.shape[a]
+        fixed.append(s if dim % max(size, 1) == 0 else None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, P(*fixed)))
+
+
+# ---------------------------------------------------------------------------
+# Parameter partition rules, keyed on the trailing path element (leaf name).
+# Specs are for the UNSTACKED parameter; scan-stacked leaves (ndim = rule
+# ndim + 1) get a leading None automatically.
+# ---------------------------------------------------------------------------
+
+_RULES: list[tuple[str, tuple]] = [
+    # name-regex, spec for trailing dims (fsdp added separately)
+    (r"embed$", ("model", None)),  # vocab over TP: GSPMD lowers the token
+                                   # gather as local-shard gather + mask +
+                                   # all-reduce (d-sharded tables rematerialize)
+    (r"unembed$", (None, "model")),
+    (r"w(q|k|v)$", (None, "model")),
+    (r"wo$", ("model", None)),
+    (r"w(i|gate)$", (None, "model")),
+    (r"w_down$", ("model", None)),
+    (r"router$", (None, None)),
+    (r"exp_w(i|gate)$", ("model", None, None)),     # expert parallel
+    (r"exp_w_down$", ("model", None, None)),
+    (r"in_proj$", (None, "model")),
+    (r"out_proj$", ("model", None)),
+    (r"conv_w$", (None, "model")),
+    (r"conv_b$", ("model",)),
+    (r"(a_log|dt_bias|ssm_d)$", ("model",)),
+    (r"(scale|bias)$", (None,)),
+    (r"pos_embed$", (None, None)),
+]
+
+
+def spec_for(path: str, ndim: int, *, fsdp: bool = True) -> P:
+    name = path.split("/")[-1]
+    for pat, spec in _RULES:
+        if re.search(pat, name):
+            spec = list(spec)
+            if fsdp and len(spec) >= 2:
+                # FSDP: shard one replicated dim over data. Prefer dim 0.
+                for i, s in enumerate(spec):
+                    if s is None:
+                        spec[i] = "data"
+                        break
+            while len(spec) < ndim:
+                spec.insert(0, None)  # scan-stacked leading dim(s)
+            if len(spec) != ndim:
+                spec = [None] * (ndim - len(spec)) + list(spec)[-ndim:]
+            return P(*spec)
+    return P(*([None] * ndim))
+
+
+_EP2D_RULES = {
+    "exp_wgate": ("model", None, "data"),   # (E, d, f): f over data
+    "exp_wi": ("model", None, "data"),
+    "exp_w_down": ("model", "data", None),  # (E, f, d)
+}
+
+
+def param_specs(params, *, fsdp: bool = True, expert_data: bool = False):
+    """PartitionSpec pytree matching ``params`` (by leaf path rules).
+
+    ``expert_data``: override the expert-weight rules with the 2D layout
+    (experts over model, d_ff over data) — decode-serving of MoE models
+    too big for model-TP alone."""
+
+    def one(path, leaf):
+        keys = [getattr(p, "key", getattr(p, "idx", "")) for p in path]
+        name = str(keys[-1]) if keys else ""
+        if expert_data and name in _EP2D_RULES:
+            spec = list(_EP2D_RULES[name])
+            while len(spec) < leaf.ndim:
+                spec.insert(0, None)
+            return P(*spec)
+        return spec_for("/".join(str(k) for k in keys), leaf.ndim, fsdp=fsdp)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def _drop_indivisible(mesh: Mesh, spec: P, shape: tuple) -> P:
+    """Drop mesh axes whose size does not divide the corresponding dim —
+    jit in/out shardings require exact divisibility (unlike constraints)."""
+    fixed = []
+    for dim, s in zip(shape, spec):
+        axes = s if isinstance(s, tuple) else (s,) if s else ()
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        fixed.append(s if size and dim % max(size, 1) == 0 else None)
+    return P(*fixed)
+
+
+def constrain_tree(tree, *, fsdp: bool = True):
+    """with_sharding_constraint a param-shaped pytree to the rule-derived
+    specs (no-op when no mesh is installed). Used to pin gradient
+    accumulators to the same layout as the params they mirror."""
+    if _MESH is None:
+        return tree
+    specs = param_specs(tree, fsdp=fsdp)
+    return jax.tree.map(
+        lambda leaf, spec: jax.lax.with_sharding_constraint(
+            leaf,
+            NamedSharding(_MESH, _drop_indivisible(_MESH, spec, leaf.shape)),
+        ),
+        tree,
+        specs,
+    )
+
+
+def param_shardings(mesh: Mesh, params, *, fsdp: bool = True,
+                    expert_data: bool = False):
+    specs = param_specs(params, fsdp=fsdp, expert_data=expert_data)
+    return jax.tree.map(
+        lambda s, leaf: NamedSharding(mesh, _drop_indivisible(mesh, s, leaf.shape)),
+        specs,
+        params,
+    )

@@ -1,0 +1,460 @@
+"""Model assembly: embeddings, superblock scan stacks, decode, enc-dec.
+
+The layer stack is a single ``lax.scan`` over ``cfg.n_rep`` superblocks
+(each superblock = ``cfg.pattern``, a short heterogeneous list of sublayers)
+with ``jax.checkpoint`` on the body — so HLO size is O(pattern), not
+O(n_layers), which keeps the 512-device dry-run compile tractable and is
+the standard remat policy for training memory.
+
+Params layout:
+  params = {
+    'embed': (V, D), 'unembed': (D, V), 'final_norm': {...},
+    'blocks': pytree stacked over n_rep,       # decoder / main stack
+    'enc_blocks': ..., 'enc_norm': {...},      # encoder-decoder only
+  }
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import layers, sharding
+from .arch import ArchConfig, LayerSpec
+from .sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_sublayer(key, cfg: ArchConfig, spec: LayerSpec, dtype) -> dict:
+    ks = jax.random.split(key, 6)
+    p: dict = {}
+    if spec.mixer == "attn":
+        p["mixer_norm"] = layers.init_rmsnorm(cfg.d_model, dtype)
+        p["mixer"] = layers.init_attention(ks[0], cfg, dtype)
+    else:
+        p["mixer_norm"] = layers.init_rmsnorm(cfg.d_model, dtype)
+        p["mixer"] = layers.init_mamba(ks[0], cfg, dtype)
+    if spec.cross_attn:
+        p["cross_norm"] = layers.init_rmsnorm(cfg.d_model, dtype)
+        p["cross"] = layers.init_attention(ks[1], cfg, dtype)
+    if spec.ff == "mlp":
+        p["ff_norm"] = layers.init_rmsnorm(cfg.d_model, dtype)
+        p["ff"] = layers.init_mlp(ks[2], cfg.d_model, cfg.d_ff, dtype)
+    elif spec.ff == "moe":
+        p["ff_norm"] = layers.init_rmsnorm(cfg.d_model, dtype)
+        p["ff"] = layers.init_moe(ks[2], cfg, dtype)
+    return p
+
+
+def _init_block(key, cfg: ArchConfig, pattern, dtype) -> dict:
+    ks = jax.random.split(key, len(pattern))
+    return {f"l{i}": _init_sublayer(ks[i], cfg, spec, dtype)
+            for i, spec in enumerate(pattern)}
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32) -> dict:
+    k_emb, k_unemb, k_blocks, k_enc = jax.random.split(key, 4)
+    d = cfg.d_model
+    params: dict = {
+        "embed": (jax.random.normal(k_emb, (cfg.padded_vocab, d)) * 0.02).astype(dtype),
+        "final_norm": layers.init_rmsnorm(d, dtype),
+        "blocks": jax.vmap(
+            lambda k: _init_block(k, cfg, cfg.pattern, dtype)
+        )(jax.random.split(k_blocks, cfg.n_rep)),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = (
+            jax.random.normal(k_unemb, (d, cfg.padded_vocab)) / np.sqrt(d)
+        ).astype(dtype)
+    if cfg.is_encoder_decoder:
+        n_enc_rep = cfg.encoder_layers // len(cfg.encoder_pattern)
+        params["enc_blocks"] = jax.vmap(
+            lambda k: _init_block(k, cfg, cfg.encoder_pattern, dtype)
+        )(jax.random.split(k_enc, n_enc_rep))
+        params["enc_norm"] = layers.init_rmsnorm(d, dtype)
+    return params
+
+
+def param_count(params) -> int:
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(params)))
+
+
+def active_param_count(cfg: ArchConfig, params) -> int:
+    """Params touched per token (MoE: top_k of routed experts)."""
+    total = param_count(params)
+    if not cfg.moe_experts:
+        return total
+    inactive = 0
+    for pat_idx, spec in enumerate(cfg.pattern):
+        if spec.ff != "moe":
+            continue
+        blk = params["blocks"][f"l{pat_idx}"]["ff"]
+        for name in ("exp_wgate", "exp_wi", "exp_w_down"):
+            per_expert = np.prod(blk[name].shape) // cfg.padded_experts
+            inactive += (cfg.padded_experts - cfg.moe_top_k) * per_expert
+    return total - int(inactive)
+
+
+# ---------------------------------------------------------------------------
+# Forward (full sequence: training / prefill)
+# ---------------------------------------------------------------------------
+
+def _apply_sublayer(p, x, *, cfg, spec: LayerSpec, window, memory, positions,
+                    collect: bool = False):
+    cache = {}
+    h = layers.rmsnorm(p["mixer_norm"], x, cfg.norm_eps)
+    if spec.mixer == "attn":
+        h = layers.attention(
+            p["mixer"], h, cfg,
+            causal=spec.causal, window=window, positions=positions,
+            return_kv=collect,
+        )
+        if collect:
+            h, (k, v) = h
+            cache = {"k": k, "v": v}
+    else:
+        h = layers.mamba(p["mixer"], h, cfg, return_cache=collect)
+        if collect:
+            h, cache = h
+    x = x + h
+    if spec.cross_attn and memory is not None:
+        h = layers.rmsnorm(p["cross_norm"], x, cfg.norm_eps)
+        h = layers.attention(p["cross"], h, cfg, memory=memory)
+        x = x + h
+    aux = jnp.zeros((), jnp.float32)
+    if spec.ff == "mlp":
+        h = layers.rmsnorm(p["ff_norm"], x, cfg.norm_eps)
+        x = x + layers.mlp(p["ff"], h)
+    elif spec.ff == "moe":
+        h = layers.rmsnorm(p["ff_norm"], x, cfg.norm_eps)
+        out, aux = layers.moe(p["ff"], h, cfg)
+        x = x + out
+    if collect:
+        return x, aux, cache
+    return x, aux
+
+
+def _run_stack(blocks, x, cfg, pattern, *, window=0, memory=None, positions=None,
+               collect: bool = False):
+    # remat at BOTH levels: each sublayer is checkpointed so the backward
+    # of a superblock re-materializes one sublayer at a time (jamba's
+    # 8-sublayer block would otherwise hold every mamba/MoE intermediate
+    # alive simultaneously), and the scan body is checkpointed so only the
+    # n_rep block boundaries are saved.
+    def body(carry, block_p):
+        x, aux = carry
+        # re-assert the FSDP/TP sharding on the block params INSIDE the
+        # scan body: the transpose of a sharding constraint constrains the
+        # COTANGENT, so per-layer param grads come out reduce-scattered
+        # over `data` instead of all-reduced to replicated slices
+        # (335 GiB/step -> ~20 GiB at granite-8b scale, §Perf iter 1b).
+        block_p = sharding.constrain_tree(block_p, fsdp=True)
+        caches = {}
+        for i, spec in enumerate(pattern):
+            sub = functools.partial(
+                _apply_sublayer, cfg=cfg, spec=spec,
+                window=window, memory=memory, positions=positions,
+                collect=collect,
+            )
+            if len(pattern) > 1:
+                # inner remat only pays off for heterogeneous superblocks
+                # (jamba's 8 sublayers); for single-sublayer blocks it
+                # nests inside the body checkpoint and doubles the
+                # recomputed forward (§Perf iter 1c: -25% dot FLOPs).
+                sub = jax.checkpoint(
+                    sub, policy=jax.checkpoint_policies.nothing_saveable)
+            out = sub(block_p[f"l{i}"], x)
+            if collect:
+                x, a, caches[f"l{i}"] = out
+            else:
+                x, a = out
+            aux = aux + a
+        x = constrain(x, "batch", None, None)
+        return (x, aux), caches
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    (x, aux), caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), blocks)
+    if collect:
+        return x, aux, caches
+    return x, aux
+
+
+def encode(cfg: ArchConfig, params, enc_embeds: jax.Array) -> jax.Array:
+    """Encoder stack over modality frame embeddings (B, Sm, D)."""
+    x = constrain(enc_embeds, "batch", None, None)
+    x, _ = _run_stack(params["enc_blocks"], x, cfg, cfg.encoder_pattern)
+    return layers.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def forward(
+    cfg: ArchConfig,
+    params,
+    tokens: jax.Array,                       # (B, S_text)
+    *,
+    modal_embeds: Optional[jax.Array] = None,  # (B, P, D) vision/audio stub
+    enc_embeds: Optional[jax.Array] = None,    # (B, Sm, D) enc-dec source
+    window: int = 0,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (hidden (B, S_total, D), moe_aux)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if modal_embeds is not None:
+        x = jnp.concatenate([modal_embeds.astype(x.dtype), x], axis=1)
+    x = constrain(x, "batch", None, None)
+    memory = None
+    if cfg.is_encoder_decoder:
+        assert enc_embeds is not None
+        memory = encode(cfg, params, enc_embeds)
+    s = x.shape[1]
+    positions = jnp.arange(s)[None, :]
+    x, aux = _run_stack(
+        params["blocks"], x, cfg, cfg.pattern,
+        window=window, memory=memory, positions=positions,
+    )
+    return layers.rmsnorm(params["final_norm"], x, cfg.norm_eps), aux
+
+
+_VOCAB_PAD_NEG = -1e30
+
+
+def _mask_pad_logits(cfg: ArchConfig, logits: jax.Array) -> jax.Array:
+    """Force vocab-padding logits to -inf so softmax/argmax never see them."""
+    if cfg.padded_vocab == cfg.vocab:
+        return logits
+    neg = jnp.asarray(_VOCAB_PAD_NEG, logits.dtype)
+    col = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+    return jnp.where(col, neg, logits)
+
+
+def logits_fn(cfg: ArchConfig, params, hidden: jax.Array) -> jax.Array:
+    unemb = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = constrain(hidden @ unemb, "batch", None, "model")
+    return _mask_pad_logits(cfg, logits)
+
+
+def lm_loss(
+    cfg: ArchConfig,
+    params,
+    hidden: jax.Array,        # (B, S, D)
+    targets: jax.Array,       # (B, S) int32
+    mask: Optional[jax.Array] = None,
+    chunk: int = 512,
+) -> jax.Array:
+    """Chunked softmax cross-entropy — never materializes (B, S, V) in f32."""
+    b, s, d = hidden.shape
+    unemb = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    # un-FSDP the unembedding BEFORE the matmul: contracting-dim (d) sharding
+    # would make XLA all-reduce the full (B,c,V) f32 product (2 GiB/device at
+    # jamba scale); gathering the (d, V/16) weight shard is ~64 MB.
+    unemb = constrain(unemb, None, "model")
+    if mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+    c = layers.largest_divisor(s, chunk)
+    nc = s // c
+
+    def chunk_loss(args):
+        h, t, m = args  # (B, c, D), (B, c), (B, c)
+        logits = (h @ unemb).astype(jnp.float32)
+        logits = constrain(logits, "batch", None, "model")
+        logits = _mask_pad_logits(cfg, logits)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # correct-class logit via masked reduction, NOT take_along_axis:
+        # a gather over the vocab-sharded dim makes GSPMD replicate the
+        # whole (B, c, V) f32 logits per device (2 GiB at jamba scale);
+        # the elementwise mask + sum partitions cleanly (local + psum).
+        onehot = (
+            jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2) == t[..., None]
+        )
+        correct = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+        return jnp.sum((lse - correct) * m), jnp.sum(m)
+
+    chunk_loss = jax.checkpoint(chunk_loss)
+    xs = (
+        jnp.moveaxis(hidden.reshape(b, nc, c, d), 1, 0),
+        jnp.moveaxis(targets.reshape(b, nc, c), 1, 0),
+        jnp.moveaxis(mask.reshape(b, nc, c), 1, 0),
+    )
+    losses, counts = jax.lax.map(chunk_loss, xs)
+    return jnp.sum(losses) / jnp.maximum(jnp.sum(counts), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token against caches)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype, *, window: int = 0,
+               memory_len: int = 0) -> dict:
+    """Per-superblock caches, stacked over n_rep (leading axis)."""
+    sbuf = min(max_len, window) if window else max_len
+    c = {}
+    for i, spec in enumerate(cfg.pattern):
+        if spec.mixer == "attn":
+            c[f"l{i}"] = layers.init_kv_cache(
+                batch, sbuf, cfg.n_kv_heads, cfg.hd, dtype
+            )
+        else:
+            c[f"l{i}"] = layers.init_mamba_cache(batch, cfg, dtype)
+        if spec.cross_attn and memory_len:
+            c[f"l{i}_xk"] = jnp.zeros(
+                (batch, memory_len, cfg.n_kv_heads, cfg.hd), dtype
+            )
+            c[f"l{i}_xv"] = jnp.zeros_like(c[f"l{i}_xk"])
+    # stack over superblocks (leading n_rep axis, matching params['blocks'])
+    return jax.tree.map(
+        lambda l: jnp.zeros((cfg.n_rep,) + l.shape, l.dtype), c
+    )
+
+
+def prefill_cross_cache(cfg: ArchConfig, params, cache, memory: jax.Array):
+    """Precompute cross-attention K/V from encoder memory into the cache."""
+    b, sm, _ = memory.shape
+
+    def per_block(block_p, block_c):
+        block_c = dict(block_c)
+        for i, spec in enumerate(cfg.pattern):
+            if spec.cross_attn:
+                p = block_p[f"l{i}"]["cross"]
+                block_c[f"l{i}_xk"] = (memory @ p["wk"]).reshape(
+                    b, sm, cfg.n_kv_heads, cfg.hd
+                ).astype(block_c[f"l{i}_xk"].dtype)
+                block_c[f"l{i}_xv"] = (memory @ p["wv"]).reshape(
+                    b, sm, cfg.n_kv_heads, cfg.hd
+                ).astype(block_c[f"l{i}_xv"].dtype)
+        return block_c
+
+    return jax.vmap(per_block)(params["blocks"], cache)
+
+
+def decode_step(
+    cfg: ArchConfig,
+    params,
+    cache,
+    token: jax.Array,    # (B, 1) int32
+    pos: jax.Array,      # scalar int32
+    *,
+    window: int = 0,
+) -> tuple[jax.Array, dict]:
+    """One serve step: returns (logits (B, 1, V), new cache)."""
+    x = jnp.take(params["embed"], token, axis=0)  # (B, 1, D)
+    x = constrain(x, "batch", None, None)
+    pos = jnp.asarray(pos, jnp.int32)
+
+    def body(x, inp):
+        block_p, block_c = inp
+        new_c = dict(block_c)
+        for i, spec in enumerate(cfg.pattern):
+            p = block_p[f"l{i}"]
+            h = layers.rmsnorm(p["mixer_norm"], x, cfg.norm_eps)
+            if spec.mixer == "attn":
+                h, new_c[f"l{i}"] = layers.attention_decode(
+                    p["mixer"], h, block_c[f"l{i}"], pos, cfg, window=window
+                )
+            else:
+                h, new_c[f"l{i}"] = layers.mamba_decode(
+                    p["mixer"], h, block_c[f"l{i}"], cfg
+                )
+            x = x + h
+            if spec.cross_attn and f"l{i}_xk" in block_c:
+                h = layers.rmsnorm(p["cross_norm"], x, cfg.norm_eps)
+                h, _ = layers.attention_decode(
+                    p["cross"], h, block_c[f"l{i}"], pos, cfg,
+                    memory_kv=(block_c[f"l{i}_xk"], block_c[f"l{i}_xv"]),
+                )
+                x = x + h
+            if spec.ff == "mlp":
+                h = layers.rmsnorm(p["ff_norm"], x, cfg.norm_eps)
+                x = x + layers.mlp(p["ff"], h)
+            elif spec.ff == "moe":
+                h = layers.rmsnorm(p["ff_norm"], x, cfg.norm_eps)
+                out, _ = layers.moe(p["ff"], h, cfg)
+                x = x + out
+        return x, new_c
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return logits_fn(cfg, params, x), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill (full-sequence forward that also produces the decode cache)
+# ---------------------------------------------------------------------------
+
+def prefill(
+    cfg: ArchConfig,
+    params,
+    tokens: jax.Array,                         # (B, S_text)
+    *,
+    modal_embeds: Optional[jax.Array] = None,
+    enc_embeds: Optional[jax.Array] = None,
+    window: int = 0,
+    max_len: int = 0,
+):
+    """Run the full sequence, returning (last_logits (B,1,V), cache, aux).
+
+    The cache layout matches :func:`init_cache` (leading n_rep axis) so
+    ``decode_step`` continues from position S. Attention caches hold the
+    post-rope K/V of the whole prefix; mamba caches hold the final SSM
+    state + conv tail. Windowed prefill requires S <= window (the serve
+    driver chunks longer prefixes through decode).
+    """
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if modal_embeds is not None:
+        x = jnp.concatenate([modal_embeds.astype(x.dtype), x], axis=1)
+    x = constrain(x, "batch", None, None)
+    memory = None
+    if cfg.is_encoder_decoder:
+        assert enc_embeds is not None
+        memory = encode(cfg, params, enc_embeds)
+    s = x.shape[1]
+    if window:
+        assert s <= window, "windowed prefill longer than the window"
+    positions = jnp.arange(s)[None, :]
+    x, aux, cache = _run_stack(
+        params["blocks"], x, cfg, cfg.pattern,
+        window=window, memory=memory, positions=positions, collect=True,
+    )
+    if max_len and max_len > s and not window:
+        # pad attention K/V buffers so decode can append after position S
+        def pad_kv(block_c):
+            block_c = dict(block_c)
+            for i, spec in enumerate(cfg.pattern):
+                if spec.mixer == "attn":
+                    c = dict(block_c[f"l{i}"])
+                    pad = ((0, 0), (0, 0), (0, max_len - s), (0, 0), (0, 0))
+                    c["k"] = jnp.pad(c["k"], pad)
+                    c["v"] = jnp.pad(c["v"], pad)
+                    block_c[f"l{i}"] = c
+            return block_c
+
+        cache = pad_kv(cache)
+    if cfg.is_encoder_decoder:
+        cache = prefill_cross_cache_from(cfg, params, cache, memory)
+    x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = logits_fn(cfg, params, x[:, -1:, :])
+    return logits, cache, aux
+
+
+def prefill_cross_cache_from(cfg: ArchConfig, params, cache, memory: jax.Array):
+    """Attach cross-attention K/V (computed from encoder memory) to a
+    prefill-collected cache (adds the ``l{i}_xk/xv`` entries)."""
+    b, sm, _ = memory.shape
+
+    def per_block(block_p, block_c):
+        block_c = dict(block_c)
+        for i, spec in enumerate(cfg.pattern):
+            if spec.cross_attn:
+                p = block_p[f"l{i}"]["cross"]
+                block_c[f"l{i}_xk"] = (memory @ p["wk"]).reshape(
+                    b, sm, cfg.n_kv_heads, cfg.hd
+                )
+                block_c[f"l{i}_xv"] = (memory @ p["wv"]).reshape(
+                    b, sm, cfg.n_kv_heads, cfg.hd
+                )
+        return block_c
+
+    return jax.vmap(per_block)(params["blocks"], cache)

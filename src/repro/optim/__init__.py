@@ -1,0 +1,9 @@
+"""Optimizers (pure JAX, functional) + schedules + gradient utilities."""
+from .optimizers import (  # noqa: F401
+    OptState,
+    adamw,
+    clip_by_global_norm,
+    global_norm,
+    sgd,
+)
+from .schedules import constant, cosine_decay, linear_warmup_cosine  # noqa: F401

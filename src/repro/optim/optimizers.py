@@ -1,0 +1,115 @@
+"""Optimizers as (init, update) pairs of pure functions over pytrees.
+
+The optimizer state is a plain dict pytree so it shards with the same
+``param_specs`` rules as the parameters (moments inherit the param's
+PartitionSpec leaf-for-leaf) and checkpoints with the same codec.
+
+``update(grads, state, params, lr)`` returns ``(new_params, new_state)``;
+the learning rate is a traced scalar so one compiled step serves the whole
+schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array          # scalar int32
+    moments: dict            # optimizer-specific pytrees
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable         # (grads, state, params, lr) -> (params, state)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32))) for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    """Returns (clipped_tree, pre_clip_norm)."""
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), norm
+
+
+def adamw(
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    mu_dtype=jnp.float32,
+) -> Optimizer:
+    """AdamW with decoupled weight decay and bias correction.
+
+    Moments are kept in ``mu_dtype`` (f32 by default); params may be bf16 —
+    the update math is f32 and cast back, the standard mixed-precision
+    training recipe.
+    """
+
+    def init(params) -> OptState:
+        zeros = lambda p: jnp.zeros(p.shape, mu_dtype)
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            moments={
+                "mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params),
+            },
+        )
+
+    def update(grads, state: OptState, params, lr):
+        step = state.step + 1
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def one(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1.0 - b1) * g
+            v = b2 * v + (1.0 - b2) * jnp.square(g)
+            upd = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            upd = upd + weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+            return new_p, m.astype(mu_dtype), v.astype(mu_dtype)
+
+        flat = jax.tree.map(
+            one, grads, state.moments["mu"], state.moments["nu"], params
+        )
+        is3 = lambda x: isinstance(x, tuple)
+        new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=is3)
+        mu = jax.tree.map(lambda t: t[1], flat, is_leaf=is3)
+        nu = jax.tree.map(lambda t: t[2], flat, is_leaf=is3)
+        return new_params, OptState(step=step, moments={"mu": mu, "nu": nu})
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd(momentum: float = 0.9, nesterov: bool = False) -> Optimizer:
+    """SGD with (optionally Nesterov) momentum."""
+
+    def init(params) -> OptState:
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            moments={"v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)},
+        )
+
+    def update(grads, state: OptState, params, lr):
+        def one(g, v, p):
+            g = g.astype(jnp.float32)
+            v = momentum * v + g
+            step_dir = g + momentum * v if nesterov else v
+            return (p.astype(jnp.float32) - lr * step_dir).astype(p.dtype), v
+
+        flat = jax.tree.map(one, grads, state.moments["v"], params)
+        is2 = lambda x: isinstance(x, tuple)
+        new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=is2)
+        v = jax.tree.map(lambda t: t[1], flat, is_leaf=is2)
+        return new_params, OptState(step=state.step + 1, moments={"v": v})
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,30 @@
+"""Learning-rate schedules: step -> lr, traced-scalar friendly."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_decay(lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.clip(step.astype(jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return lr * (final_frac + (1.0 - final_frac) * cos)
+
+    return fn
+
+
+def linear_warmup_cosine(
+    lr: float, warmup_steps: int, total_steps: int, final_frac: float = 0.1
+):
+    decay = cosine_decay(lr, max(total_steps - warmup_steps, 1), final_frac)
+
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = lr * step / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, decay(step - warmup_steps))
+
+    return fn

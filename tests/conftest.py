@@ -1,0 +1,15 @@
+# NOTE: no XLA_FLAGS / device-count overrides here — smoke tests run on the
+# single real CPU device (the dry-run sets its own 512-device flag in its
+# own process; multi-device tests spawn subprocesses).
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

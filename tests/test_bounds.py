@@ -1,0 +1,138 @@
+"""Paper's error bounds: Lemmas 3-4, Theorem 1, Theorem 2 / eq. (43)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import bounds as B
+from repro.core import estimators as E
+from repro.core import quantizers as Q
+from repro.core import sampler, trees, chow_liu
+
+
+def test_shared_node_probs_sum_and_sanity():
+    """(p0,p1,p2) of eqs. 18-20 are a distribution and match Monte Carlo."""
+    rho1, rho2 = 0.9, 0.1
+    p0, p1, p2 = B.shared_node_probs(rho1, rho2)
+    assert p0 + p1 + p2 == pytest.approx(1.0, abs=1e-12)
+    assert min(p0, p1, p2) >= 0.0
+
+    # Monte Carlo on the 3-node chain x_j - x_k - x_s (Fig. 4)
+    rng = np.random.default_rng(0)
+    n = 1_000_000
+    xk = rng.normal(size=n)
+    xj = rho1 * xk + np.sqrt(1 - rho1**2) * rng.normal(size=n)
+    xs = rho2 * xk + np.sqrt(1 - rho2**2) * rng.normal(size=n)
+    ujk = np.sign(xj) * np.sign(xk)
+    uks = np.sign(xk) * np.sign(xs)
+    mc_p0 = np.mean(ujk == uks)
+    mc_p1 = np.mean((ujk == -1) & (uks == 1))
+    assert p0 == pytest.approx(mc_p0, abs=3e-3)
+    assert p1 == pytest.approx(mc_p1, abs=3e-3)
+
+
+def test_chernoff_bound_dominates_exact_and_is_tight():
+    """Lemma 3: bound >= exact error; exponent approaches the bound's
+    (eq. 15) as n grows — the Fig. 5/6 behaviour."""
+    p0, p1, p2 = B.shared_node_probs(0.9, 0.1)
+    e_star = B.chernoff_exponent(p0, p1, p2)
+    prev_gap = None
+    for n in (20, 60, 120):
+        exact = B.crossover_exact(n, p0, p1, p2)
+        cher = B.crossover_chernoff(n, p0, p1, p2)
+        assert cher >= exact - 1e-12
+        emp_exp = -np.log(exact) / n
+        gap = abs(emp_exp - e_star)
+        if prev_gap is not None:
+            assert gap <= prev_gap + 1e-3  # exponent converging
+        prev_gap = gap
+
+
+def test_hoeffding_dominates_chernoff_error():
+    """Lemma 4 is looser: its bound is >= the Chernoff bound for the same
+    pair (both are upper bounds on the same probability)."""
+    rho1, rho2 = 0.8, 0.2
+    p0, p1, p2 = B.shared_node_probs(rho1, rho2)
+    t1 = float(E.theta_from_rho(jnp.asarray(rho1)))
+    t2 = float(E.theta_from_rho(jnp.asarray(rho2)))
+    for n in (10, 50, 200, 800):
+        assert B.crossover_hoeffding(n, t1, t2) >= B.crossover_chernoff(n, p0, p1, p2) - 1e-12
+
+
+def test_crossover_bounds_vs_monte_carlo():
+    """Both bounds dominate the empirical crossover rate on sign data."""
+    rho1, rho2, n, reps = 0.7, 0.2, 40, 3000
+    rng = np.random.default_rng(1)
+    xk = rng.normal(size=(reps, n))
+    xj = rho1 * xk + np.sqrt(1 - rho1**2) * rng.normal(size=(reps, n))
+    xs = rho2 * xk + np.sqrt(1 - rho2**2) * rng.normal(size=(reps, n))
+    th_e = np.mean(np.sign(xj) * np.sign(xk) > 0, axis=1)
+    th_ep = np.mean(np.sign(xk) * np.sign(xs) > 0, axis=1)
+    emp = np.mean(th_e <= th_ep)
+    p0, p1, p2 = B.shared_node_probs(rho1, rho2)
+    assert B.crossover_chernoff(n, p0, p1, p2) >= emp - 0.02
+    t1 = float(E.theta_from_rho(jnp.asarray(rho1)))
+    t2 = float(E.theta_from_rho(jnp.asarray(rho2)))
+    assert B.crossover_hoeffding(n, t1, t2) >= emp - 0.02
+
+
+def test_h_alpha_beta_properties():
+    """h(a,b) > 0 for 0<a<b<1 and increases as the gap widens (Lemma 6)."""
+    assert B.h_alpha_beta(0.4, 0.9) > 0
+    assert B.h_alpha_beta(0.4, 0.6) > B.h_alpha_beta(0.4, 0.9)  # smaller beta, bigger margin
+    # degenerate: alpha==beta==rho -> h = (arcsin r - arcsin r^2)/pi > 0
+    assert B.h_alpha_beta(0.5, 0.5) > 0
+
+
+def test_theorem1_dominates_empirical_star():
+    """Pr(T_hat != T) <= d^3 exp(-n h^2/2) on the star tree (Fig. 7 setup)
+    — checked at an n where the empirical error is already small."""
+    d, rho, n, reps = 8, 0.5, 1500, 60
+    edges = trees.star_tree(d)
+    w = np.full(d - 1, rho)
+    errs = 0
+    for r in range(reps):
+        x = sampler.sample_tree_ggm(jax.random.key(r), n, d, edges, w)
+        est = chow_liu.learn_structure(x, method="sign")
+        errs += trees.tree_edit_distance(edges, est) > 0
+    emp = errs / reps
+    bound = B.theorem1_bound(n, d, rho, rho)
+    assert bound >= emp - 1e-9
+
+
+def test_theorem2_relative_error_bound():
+    """err_rel <= sqrt(D1)+sqrt(D2)+sqrt(D1 D2) on per-symbol data."""
+    rho, n, reps, rate = 0.5, 1000, 200, 2
+    q = Q.PerSymbolQuantizer(rate)
+    d_rate = Q.reconstruction_distortion(rate)
+    rng = np.random.default_rng(2)
+    errs = []
+    for _ in range(reps):
+        x = rng.normal(size=n)
+        y = rho * x + np.sqrt(1 - rho**2) * rng.normal(size=n)
+        xq = np.asarray(q.quantize(jnp.asarray(x, jnp.float32)))
+        yq = np.asarray(q.quantize(jnp.asarray(y, jnp.float32)))
+        errs.append(abs(np.mean(x * y) - np.mean(xq * yq)))
+    assert np.mean(errs) <= B.theorem2_bound(d_rate, d_rate)
+
+
+def test_eq43_estimation_error_bound():
+    rho, n, reps, rate = 0.5, 1000, 200, 3
+    q = Q.PerSymbolQuantizer(rate)
+    rng = np.random.default_rng(3)
+    errs = []
+    for _ in range(reps):
+        x = rng.normal(size=n)
+        y = rho * x + np.sqrt(1 - rho**2) * rng.normal(size=n)
+        xq = np.asarray(q.quantize(jnp.asarray(x, jnp.float32)))
+        yq = np.asarray(q.quantize(jnp.asarray(y, jnp.float32)))
+        errs.append(abs(rho - np.mean(xq * yq)))
+    assert np.mean(errs) <= B.persymbol_est_error_bound(rate, n, rho)
+
+
+def test_union_bound_monotone_in_n():
+    th_e = np.asarray([0.8, 0.75])
+    th_r = np.asarray([0.7, 0.7])
+    b1 = B.union_bound_recovery(100, th_e, th_r)
+    b2 = B.union_bound_recovery(1000, th_e, th_r)
+    assert b2 < b1

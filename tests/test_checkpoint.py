@@ -1,0 +1,75 @@
+"""Checkpoint codec: exact round-trips, atomicity conventions, mismatch."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro import optim
+
+
+def _tree():
+    return {
+        "params": {
+            "embed": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "blocks": {"l0": {"w": jnp.ones((2, 2), jnp.bfloat16) * 1.5}},
+        },
+        "ints": jnp.asarray([1, 2, 3], jnp.int32),
+        "scalar": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_roundtrip_exact(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 5, t)
+    back = load_checkpoint(str(tmp_path), 5, t)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        assert bool(jnp.all(a == b))
+
+
+def test_latest_step(tmp_path):
+    assert latest_step(str(tmp_path)) is None
+    t = _tree()
+    save_checkpoint(str(tmp_path), 1, t)
+    save_checkpoint(str(tmp_path), 30, t)
+    save_checkpoint(str(tmp_path), 7, t)
+    assert latest_step(str(tmp_path)) == 30
+
+
+def test_structure_mismatch_raises(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 2, t)
+    wrong = dict(t)
+    wrong["extra"] = jnp.zeros(2)
+    with pytest.raises(ValueError):
+        load_checkpoint(str(tmp_path), 2, wrong)
+    renamed = {"params": t["params"], "ints": t["ints"], "zcalar": t["scalar"]}
+    with pytest.raises(ValueError):
+        load_checkpoint(str(tmp_path), 2, renamed)
+
+
+def test_no_tmp_left_behind(tmp_path):
+    save_checkpoint(str(tmp_path), 9, _tree())
+    assert all(not f.endswith(".tmp") for f in os.listdir(tmp_path))
+
+
+def test_optimizer_state_roundtrip(tmp_path):
+    """Full train-state checkpoint (the train driver's layout)."""
+    params = {"w": jnp.ones((4, 4), jnp.bfloat16)}
+    opt = optim.adamw()
+    state = opt.init(params)
+    g = {"w": jnp.full((4, 4), 0.5, jnp.bfloat16)}
+    params, state = opt.update(g, state, params, 1e-2)
+    blob = {"params": params, "opt": state._asdict()}
+    save_checkpoint(str(tmp_path), 1, blob)
+    back = load_checkpoint(str(tmp_path), 1, blob)
+    restored = optim.OptState(**back["opt"])
+    assert int(restored.step) == 1
+    assert bool(jnp.all(restored.moments["mu"]["w"] == state.moments["mu"]["w"]))
+    # training continues identically from the restored state
+    p2a, s2a = opt.update(g, state, params, 1e-2)
+    p2b, s2b = opt.update(g, restored, back["params"], 1e-2)
+    assert bool(jnp.all(p2a["w"] == p2b["w"]))

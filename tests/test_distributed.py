@@ -1,0 +1,235 @@
+"""Multi-device tests (subprocesses — the main pytest process must keep the
+single real CPU device; see the dry-run device-count note in the brief)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def run_devices(script: str, n_devices: int = 8, timeout: int = 600) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(script)],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+def test_distributed_ggm_matches_centralized():
+    """The shard_map vertical-model pipeline (quantize -> all-gather ->
+    Gram -> MWST) returns the same weights and tree as the centralized
+    reference, for both methods and both compute placements."""
+    run_devices("""
+        import numpy as np, jax, jax.numpy as jnp
+        import repro.core as core
+        from repro.core import estimators, quantizers
+        from repro.core.distributed import distributed_weights, distributed_learn_structure
+        rng = np.random.default_rng(0)
+        d, n = 16, 4096
+        edges = core.random_tree(d, rng)
+        w = rng.uniform(0.4, 0.9, d - 1)
+        x = core.sampler.sample_tree_ggm(jax.random.key(0), n, d, edges, w)
+        mesh = jax.make_mesh((2, 4), ('data', 'model'),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        for method, ref_w in [
+            ('sign', estimators.sign_method_weights(quantizers.sign_quantize(x))),
+            ('persymbol', estimators.persymbol_method_weights(
+                quantizers.PerSymbolQuantizer(3).quantize(x))),
+        ]:
+            for compute in ('replicated', 'rowblock'):
+                got = distributed_weights(x, mesh, method=method, rate=3,
+                                          compute=compute)
+                err = float(jnp.abs(got - ref_w).max())
+                assert err < 1e-4, (method, compute, err)
+                est = distributed_learn_structure(x, mesh, method=method, rate=3,
+                                                  compute=compute)
+                assert core.tree_edit_distance(edges, est) == 0, (method, compute)
+        print('distributed == centralized OK')
+    """)
+
+
+def test_moe_expert_parallel_matches_dense():
+    run_devices("""
+        import dataclasses, jax, jax.numpy as jnp
+        from repro.models import get_arch, set_mesh
+        from repro.models import layers
+        cfg = dataclasses.replace(get_arch('qwen2-moe-a2.7b').reduced(),
+                                  moe_capacity_factor=64.0)
+        pm = layers.init_moe(jax.random.key(5), cfg, jnp.float32)
+        x = jax.random.normal(jax.random.key(6), (4, 16, cfg.d_model)) * 0.1
+        set_mesh(None)
+        o_ref, _ = layers.moe(pm, x, cfg)
+        mesh = jax.make_mesh((2, 4), ('data', 'model'),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        set_mesh(mesh)
+        with mesh:
+            o_ep, _ = jax.jit(lambda pm, x: layers.moe(pm, x, cfg))(pm, x)
+        err = float(jnp.abs(o_ref - o_ep).max())
+        assert err < 1e-5, err
+        print('EP MoE OK', err)
+    """)
+
+
+def test_sharded_train_step_matches_single_device():
+    """Loss/grad parity: the same train step on a (2,2) mesh and on 1
+    device produce the same loss trajectory (GSPMD is semantics-preserving;
+    this guards OUR sharding constraints)."""
+    run_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.models import get_arch, set_mesh
+        from repro.models import transformer as T
+        from repro.models.sharding import param_shardings
+        from repro import optim
+        from repro.launch.steps import make_train_step
+        from repro.launch.shapes import InputShape
+
+        cfg = get_arch('stablelm-3b').reduced()
+        shape = InputShape('t', 'train', 32, 4)
+        opt = optim.adamw()
+        sched = optim.constant(1e-3)
+        params = T.init_params(cfg, jax.random.key(0))
+        batch = {
+            'tokens': jax.random.randint(jax.random.key(1), (4, 32), 0, cfg.vocab),
+            'labels': jax.random.randint(jax.random.key(2), (4, 32), 0, cfg.vocab),
+            'mask': jnp.ones((4, 32), jnp.float32),
+        }
+        # single device
+        set_mesh(None)
+        step = make_train_step(cfg, shape, opt, sched)
+        p1, s1, m1 = jax.jit(step)(params, opt.init(params), batch)
+        # 2x2 mesh
+        mesh = jax.make_mesh((2, 2), ('data', 'model'),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        set_mesh(mesh)
+        ps = param_shardings(mesh, params, fsdp=True)
+        params_sh = jax.device_put(params, ps)
+        step2 = make_train_step(cfg, shape, opt, sched)
+        with mesh:
+            p2, s2, m2 = jax.jit(step2)(params_sh, opt.init(params_sh), batch)
+        d_loss = abs(float(m1['loss']) - float(m2['loss']))
+        d_gn = abs(float(m1['grad_norm']) - float(m2['grad_norm']))
+        assert d_loss < 1e-4, d_loss
+        assert d_gn < 5e-3 * max(1.0, float(m1['grad_norm'])), d_gn
+        # params after one step agree
+        err = max(jax.tree.leaves(jax.tree.map(
+            lambda a, b: float(jnp.abs(a - b).max()), p1, p2)))
+        assert err < 1e-4, err
+        print('sharded parity OK', d_loss, err)
+    """)
+
+
+def test_compressed_collectives_and_error_feedback():
+    run_devices("""
+        import functools
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.comm import compressed_pmean, error_feedback_init, error_feedback_apply
+        mesh = jax.make_mesh((8,), ('data',),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        g_global = jax.random.normal(jax.random.key(0), (8, 256))
+
+        def body(g):
+            return compressed_pmean(g.reshape(-1), 'data', rate=6).reshape(g.shape)
+
+        out = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=(P('data', None),),
+                                    out_specs=P('data', None)))(g_global)
+        want = jnp.mean(g_global, axis=0, keepdims=True)
+        got_rows = out.reshape(8, -1)
+        # every rank got (approximately) the true mean; RMSE is the right
+        # metric for a stochastic per-symbol codec (max-norm is set by the
+        # codebook's tail bins)
+        err = float(jnp.sqrt(jnp.mean((got_rows - want) ** 2))
+                    / jnp.sqrt(jnp.mean(want ** 2)))
+        assert err < 0.15, err  # 6-bit quantization noise bound
+
+        # error feedback: residuals shrink the bias over repeated rounds
+        def ef_round(g, res):
+            out, new_res = error_feedback_apply({'g': g}, res, 'data', rate=3)
+            return out['g'], new_res
+
+        res = error_feedback_init({'g': jnp.zeros(256)})
+        accum_plain = jnp.zeros(256)
+        accum_ef = jnp.zeros(256)
+        def run(g_global):
+            def body2(g):
+                g = g.reshape(-1)
+                res = {'g': jnp.zeros_like(g)}
+                acc = jnp.zeros_like(g)
+                for _ in range(8):
+                    out, res = ef_round(g, res)
+                    acc = acc + out
+                return (acc / 8).reshape(1, -1)
+            return jax.shard_map(body2, mesh=mesh, in_specs=(P('data', None),),
+                                 out_specs=P(None, None), check_vma=False)(g_global)
+        avg_ef = run(g_global)[0]
+        want1 = jnp.mean(g_global, axis=0)
+        rel = float(jnp.linalg.norm(avg_ef - want1) / jnp.linalg.norm(want1))
+        # single-shot (no EF) 3-bit error for comparison
+        def body1(g):
+            out, _ = ef_round(g.reshape(-1), {'g': jnp.zeros(g.size)})
+            return out.reshape(1, -1)
+        one_shot = jax.shard_map(body1, mesh=mesh, in_specs=(P('data', None),),
+                                 out_specs=P(None, None), check_vma=False)(g_global)[0]
+        rel1 = float(jnp.linalg.norm(one_shot - want1) / jnp.linalg.norm(want1))
+        # EF time-average error ~ |e_T|/T: must clearly beat one-shot and
+        # land near the bin-width/T scale (~0.05-0.1 at rate 3, T=8)
+        assert rel < 0.7 * rel1, (rel, rel1)
+        assert rel < 0.15, rel
+        print('compressed collectives OK', err, rel, rel1)
+    """)
+
+
+def test_communication_cost_accounting():
+    """Sign method over the wire is n*d*R bits (paper §3)."""
+    from repro.core.distributed import communication_bits
+    assert communication_bits(1000, 20, 1) == 20_000
+    assert communication_bits(500, 20, 4) == 40_000
+
+
+def test_wire_formats_and_ep2d():
+    """Packed R-bit wire == int8 wire == centralized; 2D-EP MoE == dense."""
+    run_devices("""
+        import dataclasses
+        import numpy as np, jax, jax.numpy as jnp
+        import repro.core as core
+        from repro.core import estimators, quantizers
+        from repro.core.distributed import distributed_weights
+        rng = np.random.default_rng(0)
+        d, n = 16, 4096
+        edges = core.random_tree(d, rng)
+        w = rng.uniform(0.4, 0.9, d - 1)
+        x = core.sampler.sample_tree_ggm(jax.random.key(0), n, d, edges, w)
+        mesh = jax.make_mesh((2, 4), ('data', 'model'),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        off = ~np.eye(d, dtype=bool)
+        ref = estimators.sign_method_weights(quantizers.sign_quantize(x))
+        for wire in ('int8', 'packed'):
+            got = distributed_weights(x, mesh, method='sign', wire=wire)
+            err = float(np.abs(np.asarray(got - ref))[off].max())
+            assert err < 1e-4, (wire, err)
+        refo = estimators.gaussian_weights(x)
+        got = distributed_weights(x, mesh, wire='float32')
+        assert float(np.abs(np.asarray(got - refo))[off].max()) < 1e-4
+
+        # 2D expert-parallel MoE
+        from repro.models import get_arch, layers, sharding
+        cfg = dataclasses.replace(get_arch('qwen2-moe-a2.7b').reduced(),
+                                  moe_capacity_factor=64.0, d_ff=512)
+        pm = layers.init_moe(jax.random.key(5), cfg, jnp.float32)
+        xx = jax.random.normal(jax.random.key(6), (4, 16, cfg.d_model)) * 0.1
+        sharding.set_mesh(None); sharding.set_ep2d(False)
+        o_ref, _ = layers.moe(pm, xx, cfg)
+        sharding.set_mesh(mesh); sharding.set_ep2d(True)
+        with mesh:
+            o_ep, _ = jax.jit(lambda pm, xx: layers.moe(pm, xx, cfg))(pm, xx)
+        sharding.set_mesh(None); sharding.set_ep2d(False)
+        assert float(jnp.abs(o_ref - o_ep).max()) < 1e-5
+        print('wire formats + ep2d OK')
+    """)

@@ -1,0 +1,111 @@
+"""Central-machine estimators (paper §4.2, §5): eqs. 1,3,4,8,30,32."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import estimators as E
+from repro.core import quantizers as Q
+from repro.core import sampler, trees
+
+
+@given(st.floats(-0.999, 0.999))
+@settings(max_examples=100, deadline=None)
+def test_theta_rho_inverse(rho):
+    """eq. (3) and its inverse round-trip."""
+    theta = E.theta_from_rho(jnp.asarray(rho))
+    back = E.rho_from_theta(theta)
+    assert float(jnp.abs(back - rho)) < 1e-5
+
+
+@given(
+    st.floats(0.01, 0.98), st.floats(0.01, 0.98),
+)
+@settings(max_examples=100, deadline=None)
+def test_lemma1_order_preservation(r1, r2):
+    """sign() preserves MI order: I_gauss(r1) > I_gauss(r2) iff
+    I_sign(theta(r1)) > I_sign(theta(r2)) (Lemma 1)."""
+    g1, g2 = float(E.mi_gaussian(jnp.asarray(r1))), float(E.mi_gaussian(jnp.asarray(r2)))
+    s1 = float(E.mi_sign(E.theta_from_rho(jnp.asarray(r1))))
+    s2 = float(E.mi_sign(E.theta_from_rho(jnp.asarray(r2))))
+    if abs(g1 - g2) > 1e-6:
+        assert (g1 > g2) == (s1 > s2)
+
+
+def test_lemma1_with_negative_correlations():
+    """Order preservation uses |rho| (the paper's h(theta)=h(1-theta) case)."""
+    for r1, r2 in [(-0.9, 0.5), (0.9, -0.5), (-0.3, -0.6)]:
+        g1 = float(E.mi_gaussian(jnp.asarray(r1)))
+        g2 = float(E.mi_gaussian(jnp.asarray(r2)))
+        s1 = float(E.mi_sign(E.theta_from_rho(jnp.asarray(r1))))
+        s2 = float(E.mi_sign(E.theta_from_rho(jnp.asarray(r2))))
+        assert (g1 > g2) == (s1 > s2)
+
+
+def test_theta_hat_consistency():
+    """theta_hat -> theta(rho) on real sign data (eq. 8 vs eq. 3)."""
+    rho = 0.6
+    n = 400_000
+    key = jax.random.key(0)
+    z1 = jax.random.normal(key, (n,))
+    z2 = rho * z1 + np.sqrt(1 - rho**2) * jax.random.normal(jax.random.key(1), (n,))
+    u = Q.sign_quantize(jnp.stack([z1, z2], axis=1))
+    th = float(E.theta_hat(u)[0, 1])
+    assert th == pytest.approx(float(E.theta_from_rho(jnp.asarray(rho))), abs=2e-3)
+
+
+def test_theta_hat_is_mean_indicator():
+    u = jnp.asarray([[1, 1], [1, -1], [-1, 1], [1, 1]], jnp.float32)
+    th = E.theta_hat(u)
+    # agreements in column pair (0,1): rows 0,3 agree -> 2/4
+    assert float(th[0, 1]) == pytest.approx(0.5)
+    assert float(th[0, 0]) == pytest.approx(1.0)  # self-agreement
+
+
+def test_rho_squared_unbiased():
+    """eq. (30) is unbiased for rho^2 (Monte-Carlo over many estimates)."""
+    rho, n, reps = 0.5, 64, 4000
+    rng = np.random.default_rng(0)
+    z1 = rng.normal(size=(reps, n))
+    z2 = rho * z1 + np.sqrt(1 - rho * rho) * rng.normal(size=(reps, n))
+    rho_bar = (z1 * z2).mean(axis=1)
+    est = np.asarray(E.rho_squared_unbiased(jnp.asarray(rho_bar), n))
+    assert est.mean() == pytest.approx(rho * rho, abs=0.01)
+
+
+def test_mi_gaussian_matches_closed_form():
+    rho = jnp.asarray([0.0, 0.3, 0.9])
+    expect = -0.5 * np.log(1 - np.asarray(rho) ** 2)
+    assert np.allclose(np.asarray(E.mi_gaussian(rho)), expect, atol=1e-6)
+
+
+def test_binary_entropy_edges():
+    h = E.binary_entropy(jnp.asarray([0.0, 0.5, 1.0]))
+    assert not bool(jnp.isnan(h).any())
+    assert float(h[1]) == pytest.approx(1.0)
+
+
+def test_weight_matrices_recover_structure_orderings():
+    """On a known tree, all three weight matrices rank true edges above
+    their strongest rivals (large-n sanity of the whole §4/§5 pipeline)."""
+    rng = np.random.default_rng(2)
+    d, n = 10, 60_000
+    edges = trees.random_tree(d, rng)
+    w = rng.uniform(0.5, 0.9, size=d - 1)
+    x = sampler.sample_tree_ggm(jax.random.key(2), n, d, edges, w)
+    for weights in (
+        E.sign_method_weights(Q.sign_quantize(x)),
+        E.persymbol_method_weights(Q.PerSymbolQuantizer(3).quantize(x)),
+        E.gaussian_weights(x),
+    ):
+        W = np.asarray(weights)
+        for j, k in edges:
+            # the true edge must outweigh every non-edge touching j or k
+            rivals = [
+                W[a, b]
+                for a in (j, k)
+                for b in range(d)
+                if b not in (j, k) and (min(a, b), max(a, b)) not in trees.edges_canonical(edges)
+            ]
+            assert W[j, k] > max(rivals) - 1e-9

@@ -1,0 +1,150 @@
+"""Beyond-paper extensions: glasso over quantized data (the paper's §7
+future work), forest learning, streaming estimation."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.core as core
+from repro.core import chow_liu, estimators, glasso, sampler, trees
+from repro.core.streaming import StreamingGram
+
+
+# ---------------------------------------------------------------------------
+# glasso (sparse non-tree structures from quantized data)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def sparse_ggm():
+    rng = np.random.default_rng(0)
+    d = 12
+    theta = glasso.random_sparse_precision(d, density=0.2, rng=rng)
+    cov = np.linalg.inv(theta)
+    x = sampler.sample_ggm(jax.random.key(0), 30_000, cov)
+    true_adj = np.abs(theta) > 1e-8
+    np.fill_diagonal(true_adj, False)
+    return x, true_adj
+
+
+def _f1(est, true):
+    tp = (est & true).sum()
+    prec = tp / max(est.sum(), 1)
+    rec = tp / max(true.sum(), 1)
+    return 2 * prec * rec / max(prec + rec, 1e-12)
+
+
+def test_glasso_recovers_sparse_support_original(sparse_ggm):
+    x, true_adj = sparse_ggm
+    est = glasso.learn_sparse_structure(x, lam=0.06, tol=5e-3)
+    assert _f1(est, true_adj) > 0.85
+
+
+def test_glasso_quantized_close_to_original(sparse_ggm):
+    """The paper's §7 conjecture: glasso over 4-bit per-symbol data recovers
+    (nearly) the same support as over the original data."""
+    x, true_adj = sparse_ggm
+    est_orig = glasso.learn_sparse_structure(x, lam=0.06, tol=5e-3)
+    est_q4 = glasso.learn_sparse_structure(
+        x, lam=0.06, tol=5e-3, method="persymbol", rate=4)
+    # quantized estimate close to the unquantized one AND to the truth
+    agree = (est_orig == est_q4).mean()
+    assert agree > 0.93, agree
+    assert _f1(est_q4, true_adj) > 0.8
+
+
+def test_glasso_sign_method(sparse_ggm):
+    """1-bit signs + arcsine-law correlation -> glasso still finds most of
+    the support (needs more samples / denser signal than 4-bit)."""
+    x, true_adj = sparse_ggm
+    est = glasso.learn_sparse_structure(x, lam=0.06, tol=5e-3, method="sign")
+    assert _f1(est, true_adj) > 0.7
+
+
+def test_glasso_lambda_controls_sparsity(sparse_ggm):
+    x, _ = sparse_ggm
+    n_small = glasso.learn_sparse_structure(x, lam=0.02, tol=5e-3).sum()
+    n_big = glasso.learn_sparse_structure(x, lam=0.3, tol=5e-3).sum()
+    assert n_big < n_small
+
+
+def test_glasso_output_is_spd(sparse_ggm):
+    x, _ = sparse_ggm
+    S = estimators.sample_correlation(x)
+    theta = glasso.glasso(S, 0.06)
+    w = np.linalg.eigvalsh(np.asarray(theta))
+    assert w.min() > 0
+    assert np.allclose(np.asarray(theta), np.asarray(theta).T, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# forest learning
+# ---------------------------------------------------------------------------
+
+def test_forest_recovers_disconnected_components():
+    """Two independent trees: thresholded Kruskal returns the union and
+    does NOT bridge the components (full Chow-Liu must, by construction)."""
+    rng = np.random.default_rng(1)
+    d1, d2, n = 8, 7, 20_000
+    e1 = trees.random_tree(d1, rng)
+    e2_local = trees.random_tree(d2, rng)
+    e2 = [(a + d1, b + d1) for a, b in e2_local]
+    w1 = rng.uniform(0.5, 0.9, d1 - 1)
+    w2 = rng.uniform(0.5, 0.9, d2 - 1)
+    x1 = sampler.sample_tree_ggm(jax.random.key(1), n, d1, e1, w1)
+    x2 = sampler.sample_tree_ggm(jax.random.key(2), n, d2, e2_local, w2)
+    x = jnp.concatenate([x1, x2], axis=1)
+    W = np.asarray(estimators.sign_method_weights(
+        core.sign_quantize(x)))
+    forest = chow_liu.kruskal_forest(W, min_weight=0.02)
+    true_edges = trees.edges_canonical(e1) | trees.edges_canonical(e2)
+    assert trees.edges_canonical(forest) == true_edges
+    # the full spanning tree is forced to add a spurious bridge
+    full = chow_liu.kruskal_mst(W)
+    assert len(full) == len(forest) + 1
+
+
+def test_forest_equals_tree_when_connected():
+    rng = np.random.default_rng(3)
+    d, n = 10, 8_000
+    edges = trees.random_tree(d, rng)
+    w = rng.uniform(0.5, 0.9, d - 1)
+    x = sampler.sample_tree_ggm(jax.random.key(3), n, d, edges, w)
+    W = np.asarray(estimators.gaussian_weights(x))
+    assert trees.edges_canonical(chow_liu.kruskal_forest(W, 1e-3)) == \
+        trees.edges_canonical(chow_liu.kruskal_mst(W))
+
+
+# ---------------------------------------------------------------------------
+# streaming estimation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method,rate", [("sign", 1), ("persymbol", 3),
+                                         ("original", 0)])
+def test_streaming_equals_batch(method, rate):
+    rng = np.random.default_rng(4)
+    d, n = 10, 4_096
+    edges = trees.random_tree(d, rng)
+    w = rng.uniform(0.4, 0.9, d - 1)
+    x = sampler.sample_tree_ggm(jax.random.key(4), n, d, edges, w)
+    stream = StreamingGram(d=d, method=method, rate=max(rate, 1))
+    for i in range(0, n, 512):
+        stream.update(x[i:i + 512])
+    assert stream.n == n
+    batch = core.learn_structure(x, method=method, rate=max(rate, 1))
+    est = stream.learn_structure()
+    assert trees.edges_canonical(est) == trees.edges_canonical(batch)
+
+
+def test_streaming_weights_match_batch_estimator():
+    rng = np.random.default_rng(5)
+    d, n = 8, 2_048
+    edges = trees.random_tree(d, rng)
+    w = rng.uniform(0.4, 0.9, d - 1)
+    x = sampler.sample_tree_ggm(jax.random.key(5), n, d, edges, w)
+    stream = StreamingGram(d=d, method="sign")
+    for i in range(0, n, 100):  # ragged final batch
+        stream.update(x[i:i + 100])
+    from repro.core import quantizers
+    ref = estimators.sign_method_weights(quantizers.sign_quantize(x))
+    np.testing.assert_allclose(
+        np.asarray(stream.weights()), np.asarray(ref), atol=1e-5)

@@ -1,0 +1,220 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.quantize import quantize_fused
+from repro.kernels.sign_corr import sign_corr
+
+I = dict(interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# sign_corr: Gram contraction over quantized codes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,d", [(8, 8), (100, 30), (256, 128), (300, 257),
+                                 (1024, 64), (37, 5)])
+def test_sign_corr_shapes(n, d):
+    rng = np.random.default_rng(n * 1000 + d)
+    u = jnp.asarray(rng.choice([-1, 1], size=(n, d)), jnp.int8)
+    got = sign_corr(u, **I)
+    want = ref.sign_corr_ref(u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.int8, jnp.float32, jnp.bfloat16])
+def test_sign_corr_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    u = jnp.asarray(rng.choice([-1, 1], size=(64, 48)), dtype)
+    got = sign_corr(u, **I)
+    want = ref.sign_corr_ref(u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-2)
+
+
+@pytest.mark.parametrize("bn,bd", [(128, 128), (512, 256), (64, 128)])
+def test_sign_corr_block_sweep(bn, bd):
+    rng = np.random.default_rng(1)
+    u = jnp.asarray(rng.choice([-1, 1], size=(200, 100)), jnp.int8)
+    got = sign_corr(u, block_n=bn, block_d=bd, **I)
+    want = ref.sign_corr_ref(u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_sign_corr_centroid_values():
+    """Works on centroid floats too (per-symbol path). The kernel feeds
+    bf16 tiles to the MXU (its design point — signs are exact in bf16), so
+    centroid inputs carry bf16 rounding vs the f32 oracle."""
+    from repro.core.quantizers import PerSymbolQuantizer
+
+    q = PerSymbolQuantizer(3)
+    x = jax.random.normal(jax.random.key(0), (128, 32))
+    u = q.quantize(x)
+    got = sign_corr(u, **I)
+    want = ref.sign_corr_ref(u.astype(jnp.bfloat16))  # same-precision oracle
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-2, atol=0.5
+    )
+    # and full-precision agreement stays within bf16 mantissa error
+    want_f32 = ref.sign_corr_ref(u)
+    rel = np.abs(np.asarray(got) - np.asarray(want_f32)) / (
+        np.abs(np.asarray(want_f32)) + 1.0)
+    assert rel.max() < 0.02
+
+
+# ---------------------------------------------------------------------------
+# quantize_fused: R-bit encode + centroid decode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rate", [1, 2, 3, 4, 7])
+@pytest.mark.parametrize("m,n", [(8, 128), (100, 30), (256, 512)])
+def test_quantize_fused(rate, m, n):
+    x = jax.random.normal(jax.random.key(rate), (m, n))
+    codes, vals = quantize_fused(x, rate, **I)
+    codes_ref, vals_ref = ref.quantize_fused_ref(x, rate)
+    assert bool(jnp.all(codes == codes_ref))
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(vals_ref), atol=1e-6)
+
+
+def test_quantize_fused_block_sweep():
+    x = jax.random.normal(jax.random.key(9), (130, 70))
+    for bm, bn in [(64, 128), (256, 512), (8, 128)]:
+        codes, vals = quantize_fused(x, 4, block_m=bm, block_n=bn, **I)
+        codes_ref, vals_ref = ref.quantize_fused_ref(x, 4)
+        assert bool(jnp.all(codes == codes_ref))
+        np.testing.assert_allclose(np.asarray(vals), np.asarray(vals_ref), atol=1e-6)
+
+
+def test_quantize_fused_extreme_values():
+    x = jnp.asarray([[-50.0, -1e-9, 0.0, 1e-9, 50.0] * 4] * 8)
+    codes, vals = quantize_fused(x, 3, **I)
+    codes_ref, vals_ref = ref.quantize_fused_ref(x, 3)
+    assert bool(jnp.all(codes == codes_ref))
+
+
+# ---------------------------------------------------------------------------
+# decode_attention: single-token flash decode w/ GQA + window
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,hq,hkv,s,dh", [
+    (1, 8, 8, 128, 64),    # MHA
+    (2, 8, 2, 256, 64),    # GQA g=4
+    (2, 16, 1, 512, 128),  # MQA
+    (1, 4, 4, 640, 128),   # s not a block multiple
+])
+def test_decode_attention_shapes(b, hq, hkv, s, dh):
+    ks = jax.random.split(jax.random.key(b * 100 + s), 3)
+    q = jax.random.normal(ks[0], (b, hq, dh))
+    k = jax.random.normal(ks[1], (b, hkv, s, dh))
+    v = jax.random.normal(ks[2], (b, hkv, s, dh))
+    pos = s // 2
+    got = decode_attention(q, k, v, pos, **I)
+    want = ref.decode_attention_ref(q, k, v, pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [16, 64, 200])
+def test_decode_attention_window(window):
+    ks = jax.random.split(jax.random.key(7), 3)
+    b, hq, hkv, s, dh = 2, 8, 4, 384, 64
+    q = jax.random.normal(ks[0], (b, hq, dh))
+    k = jax.random.normal(ks[1], (b, hkv, s, dh))
+    v = jax.random.normal(ks[2], (b, hkv, s, dh))
+    pos = 300
+    got = decode_attention(q, k, v, pos, window=window, **I)
+    want = ref.decode_attention_ref(q, k, v, pos, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_decode_attention_bf16():
+    ks = jax.random.split(jax.random.key(3), 3)
+    q = jax.random.normal(ks[0], (1, 8, 64), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 2, 128, 64), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 2, 128, 64), jnp.bfloat16)
+    got = decode_attention(q, k, v, 64, **I)
+    want = ref.decode_attention_ref(q, k, v, 64)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=3e-2
+    )
+
+
+def test_decode_attention_pos_edges():
+    """pos=1 (single valid key) and pos=s (all valid)."""
+    ks = jax.random.split(jax.random.key(4), 3)
+    b, hq, hkv, s, dh = 1, 4, 2, 128, 64
+    q = jax.random.normal(ks[0], (b, hq, dh))
+    k = jax.random.normal(ks[1], (b, hkv, s, dh))
+    v = jax.random.normal(ks[2], (b, hkv, s, dh))
+    for pos in (1, s):
+        got = decode_attention(q, k, v, pos, **I)
+        want = ref.decode_attention_ref(q, k, v, pos)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash_prefill: full-sequence flash attention (train/prefill hot spot)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.flash_prefill import flash_prefill
+
+
+@pytest.mark.parametrize("b,sq,hq,hkv,dh", [
+    (1, 128, 4, 4, 64),     # MHA
+    (2, 256, 8, 2, 64),     # GQA g=4
+    (1, 300, 4, 1, 128),    # MQA, ragged seq (padding path)
+])
+def test_flash_prefill_causal(b, sq, hq, hkv, dh):
+    ks = jax.random.split(jax.random.key(sq), 3)
+    q = jax.random.normal(ks[0], (b, sq, hq, dh))
+    k = jax.random.normal(ks[1], (b, sq, hkv, dh))
+    v = jax.random.normal(ks[2], (b, sq, hkv, dh))
+    got = flash_prefill(q, k, v, causal=True, block_q=128, block_k=128, **I)
+    want = ref.flash_prefill_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)
+
+
+@pytest.mark.parametrize("window", [32, 100])
+def test_flash_prefill_window(window):
+    ks = jax.random.split(jax.random.key(7), 3)
+    b, s, hq, hkv, dh = 1, 256, 4, 2, 64
+    q = jax.random.normal(ks[0], (b, s, hq, dh))
+    k = jax.random.normal(ks[1], (b, s, hkv, dh))
+    v = jax.random.normal(ks[2], (b, s, hkv, dh))
+    got = flash_prefill(q, k, v, causal=True, window=window,
+                        block_q=128, block_k=128, **I)
+    want = ref.flash_prefill_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)
+
+
+def test_flash_prefill_non_causal():
+    ks = jax.random.split(jax.random.key(9), 3)
+    b, s, h, dh = 1, 128, 2, 64
+    q = jax.random.normal(ks[0], (b, s, h, dh))
+    k = jax.random.normal(ks[1], (b, s, h, dh))
+    v = jax.random.normal(ks[2], (b, s, h, dh))
+    got = flash_prefill(q, k, v, causal=False, block_q=64, block_k=128, **I)
+    want = ref.flash_prefill_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)
+
+
+def test_flash_prefill_matches_jnp_flash_attention():
+    """The Pallas kernel and the model's pure-JAX `_flash_attn` implement
+    the same math — this ties the kernel to the layer it will replace."""
+    from repro.models.layers import _flash_attn
+
+    ks = jax.random.split(jax.random.key(11), 3)
+    b, s, hkv, g, dh = 1, 256, 2, 2, 64
+    q5 = jax.random.normal(ks[0], (b, s, hkv, g, dh))
+    k = jax.random.normal(ks[1], (b, s, hkv, dh))
+    v = jax.random.normal(ks[2], (b, s, hkv, dh))
+    jnp_out = _flash_attn(q5, k, v, causal=True, window=0)
+    pallas_out = flash_prefill(
+        q5.reshape(b, s, hkv * g, dh), k, v, causal=True,
+        block_q=128, block_k=128, **I,
+    )
+    np.testing.assert_allclose(
+        np.asarray(jnp_out.reshape(b, s, hkv * g, dh)),
+        np.asarray(pallas_out), atol=3e-5)

@@ -1,0 +1,149 @@
+"""Launch layer: shapes registry, program assembly, HLO analysis, and a
+reduced in-process lower+compile (1-device mesh) for every step kind."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import SHAPES, InputShape
+from repro.launch import hlo_analysis as H
+from repro.launch import steps as S
+from repro.launch.mesh import make_host_mesh
+from repro.models import get_arch
+from repro.models.sharding import set_mesh
+
+
+@pytest.fixture(autouse=True)
+def _clear_mesh():
+    yield
+    set_mesh(None)
+
+
+def test_shape_table_matches_brief():
+    assert SHAPES["train_4k"].seq_len == 4096 and SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768 and SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].seq_len == 32768 and SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288 and SHAPES["long_500k"].global_batch == 1
+    assert SHAPES["train_4k"].lowers == "train_step"
+    assert SHAPES["decode_32k"].lowers == "serve_step"
+
+
+def test_batch_axes_for():
+    mesh = make_host_mesh(1, 1)
+    assert S.batch_axes_for(mesh, 4) == ("data",)
+    # b=1 divisible by data=1
+    assert S.batch_axes_for(mesh, 1) == ("data",)
+
+
+def test_long_500k_uses_window_for_dense_and_not_for_ssm():
+    dense = get_arch("granite-8b")
+    assert dense.window_for("long_500k") == dense.long_context_window > 0
+    assert dense.window_for("train_4k") == 0
+    ssm = get_arch("mamba2-370m")
+    assert ssm.attention_free and ssm.window_for("long_500k") == 0
+
+
+@pytest.mark.parametrize("shape_name", ["train_4k", "prefill_32k", "decode_32k"])
+def test_build_program_args_and_shardings_match(shape_name):
+    """Structural check on the full production shapes (specs only; nothing
+    is allocated or compiled here)."""
+    cfg = get_arch("granite-8b")
+    mesh = make_host_mesh(1, 1)
+    prog = S.build_program(cfg, SHAPES[shape_name], mesh)
+    flat_args = jax.tree.leaves(prog.args)
+    flat_shard = jax.tree.leaves(
+        prog.in_shardings, is_leaf=lambda x: hasattr(x, "spec"))
+    assert len(flat_args) == len(flat_shard)
+    assert all(hasattr(s, "spec") for s in flat_shard)
+
+
+@pytest.mark.parametrize("kind", ["train", "prefill", "decode"])
+def test_reduced_lower_compile_1device(kind):
+    """End-to-end AOT path on the real local device: lower + compile +
+    cost/memory analysis for each step kind (reduced arch + tiny shape)."""
+    cfg = get_arch("stablelm-3b").reduced()
+    shape = InputShape("tiny", kind, seq_len=32, global_batch=2)
+    mesh = make_host_mesh(1, 1)
+    prog = S.build_program(cfg, shape, mesh, param_dtype=jnp.float32)
+    lowered = S.lower_program(prog, mesh)
+    compiled = lowered.compile()
+    assert compiled.cost_analysis().get("flops", 0) > 0
+    mem = compiled.memory_analysis()
+    assert mem.argument_size_in_bytes > 0
+    coll = H.collective_bytes(compiled.as_text())
+    assert coll["total_bytes"] >= 0.0
+
+
+def test_shape_bytes_parser():
+    assert H.shape_bytes("f32[128,2048]") == 128 * 2048 * 4
+    assert H.shape_bytes("bf16[16]") == 32
+    assert H.shape_bytes("(f32[2,2], s8[8])") == 16 + 8
+    assert H.shape_bytes("pred[]") == 1  # scalar: empty dims -> 1 element
+    assert H.shape_bytes("token[]") == 0  # non-array types ignored
+
+
+def test_collective_bytes_parser():
+    hlo = """
+HloModule test
+
+ENTRY %main (a: f32[64]) -> f32[64] {
+  %a = f32[64]{0} parameter(0)
+  %ar = f32[64]{0} all-reduce(%a), replica_groups={}, to_apply=%sum
+  %ag = f32[128]{0} all-gather(%ar), dimensions={0}
+  ROOT %out = f32[64]{0} slice(%ag), slice={[0:64]}
+}
+"""
+    got = H.collective_bytes(hlo)
+    assert got["by_op"]["all-reduce"] == 256
+    assert got["by_op"]["all-gather"] == 512
+    assert got["total_bytes"] == 768
+
+
+def test_collective_bytes_loop_multiplier():
+    hlo = """
+HloModule test
+
+%cond (s: (s32[], f32[8])) -> pred[] {
+  %s = (s32[], f32[8]) parameter(0)
+  %iv = s32[] get-tuple-element(%s), index=0
+  %trip = s32[] constant(12)
+  ROOT %lt = pred[] compare(%iv, %trip), direction=LT
+}
+
+%body (s: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %s = (s32[], f32[8]) parameter(0)
+  %x = f32[8]{0} get-tuple-element(%s), index=1
+  %ar = f32[8]{0} all-reduce(%x), to_apply=%sum
+  ROOT %t = (s32[], f32[8]) tuple(%iv, %ar)
+}
+
+ENTRY %main () -> f32[8] {
+  %w = (s32[], f32[8]) while(%init), condition=%cond, body=%body
+  ROOT %r = f32[8]{0} get-tuple-element(%w), index=1
+}
+"""
+    got = H.collective_bytes(hlo)
+    assert got["by_op"]["all-reduce"] == 8 * 4 * 12  # multiplied by trip count
+    assert got["count"]["all-reduce"] == 12
+
+
+def test_cache_pspec_rules():
+    mesh = make_host_mesh(1, 1)
+    cfg = get_arch("mistral-nemo-12b")
+    # kv=8 doesn't divide model=1? model size 1 divides everything ->
+    # use a fake 16-rank check through the pure function instead
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    p = S.cache_pspec("k", (40, 128, 32768, 8, 128), cfg, FakeMesh(), ("data",))
+    assert p == jax.sharding.PartitionSpec(None, ("data",), None, None, "model")
+    p2 = S.cache_pspec("k", (40, 128, 32768, 16, 128), cfg, FakeMesh(), ("data",))
+    assert p2 == jax.sharding.PartitionSpec(None, ("data",), None, "model", None)
+    p3 = S.cache_pspec("ssm", (48, 1, 32, 64, 128), cfg, FakeMesh(), None)
+    assert p3 == jax.sharding.PartitionSpec(None, None, "model", None, None)
+
+
+def test_reduced_shapes_helper():
+    from repro.launch.shapes import reduced_shape
+    r = reduced_shape(SHAPES["decode_32k"])
+    assert r.kind == "decode" and r.seq_len <= 128 and r.global_batch <= 2

@@ -1,0 +1,264 @@
+"""Per-arch smoke tests (REDUCED configs per the brief: <=2 superblocks,
+d_model<=512, <=4 experts): forward/train-step shapes + no NaNs, decode
+consistency, param counting, sharding rules."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import optim
+from repro.models import get_arch, list_archs
+from repro.models import transformer as T
+from repro.models.arch import ArchConfig
+from repro.models.sharding import param_specs
+
+ALL_ARCHS = list_archs()
+
+
+def _inputs(cfg: ArchConfig, b=2, s=32, seed=0):
+    ks = jax.random.split(jax.random.key(seed), 3)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (b, s), 0, cfg.vocab),
+    }
+    kw = {}
+    if cfg.modality == "vision" and cfg.modality_tokens:
+        kw["modal_embeds"] = 0.02 * jax.random.normal(
+            ks[1], (b, cfg.modality_tokens, cfg.d_model))
+    if cfg.is_encoder_decoder:
+        kw["enc_embeds"] = 0.02 * jax.random.normal(ks[2], (b, 16, cfg.d_model))
+    return batch, kw
+
+
+def test_all_ten_assigned_archs_registered():
+    expected = {
+        "llava-next-mistral-7b", "jamba-1.5-large-398b", "granite-8b",
+        "stablelm-3b", "qwen2-moe-a2.7b", "seamless-m4t-large-v2",
+        "llama4-scout-17b-a16e", "granite-34b", "mistral-nemo-12b",
+        "mamba2-370m",
+    }
+    assert expected <= set(ALL_ARCHS)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_full_config_dimensions(arch):
+    """Exact dims from the assignment table."""
+    spec = {
+        "llava-next-mistral-7b": (32, 4096, 32, 8, 14336, 32000),
+        "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+        "granite-8b": (36, 4096, 32, 8, 14336, 49152),
+        "stablelm-3b": (32, 2560, 32, 32, 6912, 50304),
+        "qwen2-moe-a2.7b": (24, 2048, 16, 16, 1408, 151936),
+        "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+        "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+        "granite-34b": (88, 6144, 48, 1, 24576, 49152),
+        "mistral-nemo-12b": (40, 5120, 32, 8, 14336, 131072),
+        "mamba2-370m": (48, 1024, 1, 1, 0, 50280),
+    }[arch]
+    cfg = get_arch(arch)
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab)
+    assert got == spec
+    assert cfg.source  # citation present
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_forward_shapes_no_nans(arch):
+    cfg = get_arch(arch).reduced()
+    assert cfg.n_layers <= 2 * len(cfg.pattern)
+    assert cfg.d_model <= 512 and (cfg.moe_experts or 0) <= 4
+    params = T.init_params(cfg, jax.random.key(0))
+    batch, kw = _inputs(cfg)
+    h, aux = T.forward(cfg, params, batch["tokens"], **kw)
+    s_total = 32 + (cfg.modality_tokens if cfg.modality == "vision" else 0)
+    assert h.shape == (2, s_total, cfg.d_model)
+    assert not bool(jnp.isnan(h).any())
+    logits = T.logits_fn(cfg, params, h[:, -1:, :])
+    assert logits.shape == (2, 1, cfg.padded_vocab)
+    assert not bool(jnp.isnan(logits).any())
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_train_step(arch):
+    """One forward/backward/update step on CPU: finite loss + grads."""
+    cfg = get_arch(arch).reduced()
+    params = T.init_params(cfg, jax.random.key(1))
+    batch, kw = _inputs(cfg)
+    opt = optim.adamw()
+    state = opt.init(params)
+
+    def loss_fn(p):
+        h, aux = T.forward(cfg, p, batch["tokens"], **kw)
+        if cfg.modality == "vision" and cfg.modality_tokens:
+            h = h[:, cfg.modality_tokens:, :]
+        return T.lm_loss(cfg, p, h, batch["tokens"]) + 0.01 * aux
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert np.isfinite(float(loss))
+    gn = float(optim.global_norm(grads))
+    assert np.isfinite(gn) and gn > 0
+    new_params, _ = opt.update(grads, state, params, 1e-3)
+    moved = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()), params, new_params)
+    assert max(jax.tree.leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_decode_consistency(arch):
+    """prefill + decode_step == full forward at the next position.
+    MoE archs use a capacity factor large enough that no token drops
+    (dropping is batch-composition-dependent by design)."""
+    cfg = get_arch(arch).reduced()
+    if cfg.moe_experts:
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=64.0)
+    params = T.init_params(cfg, jax.random.key(2))
+    b, s = 2, 16
+    toks = jax.random.randint(jax.random.key(3), (b, s + 1), 0, cfg.vocab)
+    _, kw = _inputs(cfg, b=b)
+    n_modal = cfg.modality_tokens if cfg.modality == "vision" else 0
+    logits_pre, cache, _ = T.prefill(cfg, params, toks[:, :s],
+                                     max_len=s + n_modal + 4, **kw)
+    h_full, _ = T.forward(cfg, params, toks[:, :s], **kw)
+    ref_last = T.logits_fn(cfg, params, h_full[:, -1:, :])
+    np.testing.assert_allclose(
+        np.asarray(logits_pre), np.asarray(ref_last), atol=1e-4
+    )
+    lg, _ = T.decode_step(cfg, params, cache, toks[:, s:s + 1],
+                          jnp.asarray(s + n_modal))
+    h2, _ = T.forward(cfg, params, toks[:, :s + 1], **kw)
+    ref2 = T.logits_fn(cfg, params, h2[:, -1:, :])
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(ref2), atol=1e-3)
+
+
+def test_sliding_window_masks_old_tokens():
+    """With window w, logits must not depend on tokens older than w."""
+    cfg = dataclasses.replace(get_arch("granite-8b").reduced(), sliding_window=8)
+    params = T.init_params(cfg, jax.random.key(4))
+    t1 = jax.random.randint(jax.random.key(5), (1, 24), 0, cfg.vocab)
+    t2 = t1.at[:, :8].set((t1[:, :8] + 7) % cfg.vocab)  # differ only in old tokens
+    h1, _ = T.forward(cfg, params, t1, window=8)
+    h2, _ = T.forward(cfg, params, t2, window=8)
+    np.testing.assert_allclose(
+        np.asarray(h1[:, -1]), np.asarray(h2[:, -1]), atol=1e-5
+    )
+
+
+def test_causality():
+    """Changing a future token never changes past positions."""
+    cfg = get_arch("stablelm-3b").reduced()
+    params = T.init_params(cfg, jax.random.key(6))
+    t1 = jax.random.randint(jax.random.key(7), (1, 16), 0, cfg.vocab)
+    t2 = t1.at[:, -1].set((t1[:, -1] + 3) % cfg.vocab)
+    h1, _ = T.forward(cfg, params, t1)
+    h2, _ = T.forward(cfg, params, t2)
+    np.testing.assert_allclose(
+        np.asarray(h1[:, :-1]), np.asarray(h2[:, :-1]), atol=1e-5
+    )
+
+
+def test_mamba_causality():
+    cfg = get_arch("mamba2-370m").reduced()
+    params = T.init_params(cfg, jax.random.key(8))
+    t1 = jax.random.randint(jax.random.key(9), (1, 16), 0, cfg.vocab)
+    t2 = t1.at[:, -1].set((t1[:, -1] + 3) % cfg.vocab)
+    h1, _ = T.forward(cfg, params, t1)
+    h2, _ = T.forward(cfg, params, t2)
+    np.testing.assert_allclose(
+        np.asarray(h1[:, :-1]), np.asarray(h2[:, :-1]), atol=1e-4
+    )
+
+
+def test_param_counts_active_vs_total():
+    cfg = get_arch("qwen2-moe-a2.7b").reduced()
+    params = T.init_params(cfg, jax.random.key(10))
+    total = T.param_count(params)
+    active = T.active_param_count(cfg, params)
+    assert 0 < active < total
+
+
+def test_vocab_padding_masked():
+    cfg = dataclasses.replace(get_arch("granite-8b").reduced(), vocab=1000)
+    assert cfg.padded_vocab == 1024
+    params = T.init_params(cfg, jax.random.key(11))
+    h, _ = T.forward(cfg, params, jnp.zeros((1, 8), jnp.int32))
+    logits = T.logits_fn(cfg, params, h)
+    assert float(logits[..., 1000:].max()) < -1e29
+
+
+def test_param_spec_rules_shard_big_leaves():
+    """Every 2D+ leaf bigger than d_model gets at least one sharded dim."""
+    cfg = get_arch("granite-8b").reduced()
+    params = T.init_params(cfg, jax.random.key(12))
+    specs = param_specs(params)
+    flat = jax.tree_util.tree_leaves_with_path(params)
+    sflat = jax.tree_util.tree_leaves(specs, is_leaf=lambda x: x is None or hasattr(x, "index"))
+    for (path, leaf), spec in zip(flat, sflat):
+        if leaf.ndim >= 2 and np.prod(leaf.shape) > cfg.d_model * 4:
+            assert any(ax is not None for ax in spec), (path, spec)
+
+
+def test_rmsnorm_custom_vjp_matches_autodiff():
+    """layers.rmsnorm has a hand-written VJP (f32 confined); check it
+    against the reference autodiff gradient."""
+    from repro.models import layers
+
+    def ref(scale, x, eps=1e-5):
+        xf = x.astype(jnp.float32)
+        rms = jax.lax.rsqrt(
+            jnp.mean(jnp.square(xf), axis=-1, keepdims=True) + eps)
+        return (xf * rms).astype(x.dtype) * scale
+
+    x = jax.random.normal(jax.random.key(0), (2, 8, 64))
+    sc = jax.random.normal(jax.random.key(1), (64,)) * 0.1 + 1.0
+    dy = jax.random.normal(jax.random.key(2), (2, 8, 64))
+    g1 = jax.grad(
+        lambda s, x: jnp.sum(layers.rmsnorm({"scale": s}, x) * dy),
+        argnums=(0, 1))(sc, x)
+    g2 = jax.grad(lambda s, x: jnp.sum(ref(s, x) * dy), argnums=(0, 1))(sc, x)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_microbatched_train_step_matches_full_batch():
+    from repro import optim
+    from repro.launch.shapes import InputShape
+    from repro.launch.steps import make_train_step
+
+    cfg = get_arch("stablelm-3b").reduced()
+    params = T.init_params(cfg, jax.random.key(0))
+    opt = optim.adamw()
+    sched = optim.constant(1e-3)
+    shape = InputShape("t", "train", 32, 4)
+    batch = {
+        "tokens": jax.random.randint(jax.random.key(1), (4, 32), 0, cfg.vocab),
+        "labels": jax.random.randint(jax.random.key(2), (4, 32), 0, cfg.vocab),
+        "mask": jnp.ones((4, 32), jnp.float32),
+    }
+    outs = {}
+    for mb in (1, 2, 4):
+        step = jax.jit(make_train_step(cfg, shape, opt, sched, microbatches=mb))
+        p, s, m = step(params, opt.init(params), batch)
+        outs[mb] = (float(m["loss"]), float(m["grad_norm"]), p)
+    assert outs[1][0] == pytest.approx(outs[4][0], abs=2e-5)
+    assert outs[1][1] == pytest.approx(outs[4][1], rel=1e-3)
+    err = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.abs(a - b).max()), outs[1][2], outs[4][2])))
+    assert err < 5e-4  # Adam amplifies f32-accumulation rounding slightly
+
+
+def test_pallas_attention_integration():
+    """forward() with the Pallas flash-prefill kernel enabled (interpret
+    mode on CPU) matches the pure-JAX attention path."""
+    from repro.models import layers
+
+    cfg = get_arch("granite-8b").reduced()
+    params = T.init_params(cfg, jax.random.key(0))
+    tok = jax.random.randint(jax.random.key(1), (1, 64), 0, cfg.vocab)
+    h_ref, _ = T.forward(cfg, params, tok)
+    layers.set_pallas_attention(True)
+    try:
+        h_pal, _ = T.forward(cfg, params, tok)
+    finally:
+        layers.set_pallas_attention(None)
+    np.testing.assert_allclose(
+        np.asarray(h_ref), np.asarray(h_pal), atol=2e-4)

@@ -1,0 +1,79 @@
+"""Optimizers, clipping, schedules."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import optim
+
+
+def _quadratic_target():
+    a = jnp.asarray([3.0, 1.0, 0.5])
+
+    def loss(p):
+        return jnp.sum(a * jnp.square(p["w"] - 2.0))
+
+    return loss, {"w": jnp.zeros(3)}
+
+
+@pytest.mark.parametrize("make_opt", [
+    lambda: optim.adamw(weight_decay=0.0),
+    lambda: optim.sgd(momentum=0.9),
+    lambda: optim.sgd(momentum=0.9, nesterov=True),
+])
+def test_optimizers_converge_on_quadratic(make_opt):
+    loss, params = _quadratic_target()
+    opt = make_opt()
+    state = opt.init(params)
+    for _ in range(300):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params, 0.05)
+    assert float(loss(params)) < 1e-3
+
+
+def test_adamw_weight_decay_pulls_to_zero():
+    opt = optim.adamw(weight_decay=0.5)
+    params = {"w": jnp.full((4,), 5.0)}
+    state = opt.init(params)
+    zeros = {"w": jnp.zeros(4)}
+    for _ in range(200):
+        params, state = opt.update(zeros, state, params, 0.05)
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+
+
+def test_adamw_bf16_params_f32_moments():
+    opt = optim.adamw()
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    state = opt.init(params)
+    g = {"w": jnp.full((4,), 0.1, jnp.bfloat16)}
+    new_params, state = opt.update(g, state, params, 1e-2)
+    assert new_params["w"].dtype == jnp.bfloat16
+    assert state.moments["mu"]["w"].dtype == jnp.float32
+    assert int(state.step) == 1
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.full((3,), 4.0), "b": jnp.full((4,), -3.0)}
+    clipped, norm = optim.clip_by_global_norm(tree, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(3 * 16 + 4 * 9))
+    assert float(optim.global_norm(clipped)) == pytest.approx(1.0, rel=1e-4)
+    # under the limit -> unchanged
+    clipped2, _ = optim.clip_by_global_norm(tree, 100.0)
+    assert float(jnp.abs(clipped2["a"] - tree["a"]).max()) < 1e-6
+
+
+def test_schedules():
+    sched = optim.linear_warmup_cosine(1.0, 10, 110, final_frac=0.1)
+    assert float(sched(jnp.asarray(0))) == pytest.approx(0.0)
+    assert float(sched(jnp.asarray(5))) == pytest.approx(0.5)
+    assert float(sched(jnp.asarray(10))) == pytest.approx(1.0, abs=1e-3)
+    end = float(sched(jnp.asarray(110)))
+    assert end == pytest.approx(0.1, abs=1e-2)
+    c = optim.constant(3e-4)
+    assert float(c(jnp.asarray(7))) == pytest.approx(3e-4)
+
+
+def test_cosine_monotone_decreasing_after_warmup():
+    sched = optim.linear_warmup_cosine(1.0, 5, 100)
+    vals = [float(sched(jnp.asarray(s))) for s in range(5, 100, 5)]
+    assert all(a >= b - 1e-9 for a, b in zip(vals, vals[1:]))

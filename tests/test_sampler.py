@@ -1,0 +1,67 @@
+"""GGM samplers: topological (tree) and Cholesky — moments + agreement."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import sampler, trees
+
+
+def test_tree_sampler_matches_target_covariance():
+    rng = np.random.default_rng(0)
+    d, n = 8, 200_000
+    edges = trees.random_tree(d, rng)
+    w = rng.uniform(0.3, 0.9, size=d - 1)
+    Q = trees.tree_correlation_matrix(d, edges, w)
+    x = np.asarray(sampler.sample_tree_ggm(jax.random.key(0), n, d, edges, w))
+    emp = np.corrcoef(x.T)
+    assert np.abs(emp - Q).max() < 0.02
+    assert np.abs(x.mean(axis=0)).max() < 0.02
+    assert np.abs(x.var(axis=0) - 1).max() < 0.03
+
+
+def test_cholesky_sampler_matches_target_covariance():
+    rng = np.random.default_rng(1)
+    d, n = 6, 200_000
+    edges = trees.chain_tree(d)
+    w = rng.uniform(0.4, 0.8, size=d - 1)
+    Q = trees.tree_correlation_matrix(d, edges, w)
+    x = np.asarray(sampler.sample_ggm(jax.random.key(1), n, Q))
+    emp = np.corrcoef(x.T)
+    assert np.abs(emp - Q).max() < 0.02
+
+
+def test_samplers_agree_in_distribution():
+    """Same tree -> same first/second moments from both samplers."""
+    rng = np.random.default_rng(2)
+    d, n = 10, 100_000
+    edges = trees.star_tree(d)
+    w = rng.uniform(0.5, 0.7, size=d - 1)
+    Q = trees.tree_correlation_matrix(d, edges, w)
+    x1 = np.asarray(sampler.sample_tree_ggm(jax.random.key(2), n, d, edges, w))
+    x2 = np.asarray(sampler.sample_ggm(jax.random.key(3), n, Q))
+    assert np.abs(np.corrcoef(x1.T) - np.corrcoef(x2.T)).max() < 0.03
+
+
+def test_sampler_deterministic_in_key():
+    d = 5
+    edges = trees.chain_tree(d)
+    w = np.full(d - 1, 0.5)
+    a = sampler.sample_tree_ggm(jax.random.key(7), 64, d, edges, w)
+    b = sampler.sample_tree_ggm(jax.random.key(7), 64, d, edges, w)
+    c = sampler.sample_tree_ggm(jax.random.key(8), 64, d, edges, w)
+    assert bool(jnp.all(a == b))
+    assert not bool(jnp.all(a == c))
+
+
+def test_bfs_order_covers_all_nodes():
+    rng = np.random.default_rng(3)
+    d = 17
+    edges = trees.random_tree(d, rng)
+    order, parent, pedge = sampler.bfs_order(d, edges)
+    assert sorted(order.tolist()) == list(range(d))
+    assert parent[order[0]] == -1
+    # every non-root's parent appears earlier in the order
+    pos = {int(v): i for i, v in enumerate(order)}
+    for v in order[1:]:
+        assert pos[int(parent[int(v)])] < pos[int(v)]

@@ -1,0 +1,98 @@
+"""End-to-end system behaviour: the paper's pipeline + framework glue."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.core as core
+from repro.core import bounds, chow_liu, sampler, trees
+from repro.data import GGMDataset
+
+
+def test_paper_pipeline_sign_vs_persymbol_vs_original():
+    """Fig. 3 qualitative shape at one n: original >= persymbol(4) >=
+    persymbol(1)/sign in recovery count over seeds."""
+    d, n, reps = 20, 700, 12
+    wins = {"original": 0, "ps4": 0, "sign": 0}
+    for seed in range(reps):
+        ds = GGMDataset(d=d, seed=seed, rho_min=0.4, rho_max=0.9)
+        edges, _ = ds.structure()
+        x = ds.sample(n, batch_seed=0)
+        for name, kw in [
+            ("original", dict(method="original")),
+            ("ps4", dict(method="persymbol", rate=4)),
+            ("sign", dict(method="sign")),
+        ]:
+            est = chow_liu.learn_structure(x, **kw)
+            wins[name] += trees.tree_edit_distance(edges, est) == 0
+    assert wins["original"] >= wins["sign"]
+    assert wins["ps4"] >= wins["sign"] - 2  # 4-bit ~ original (paper Fig. 3)
+    assert wins["sign"] > 0                  # sign works at moderate n
+
+
+def test_sign_error_decays_with_n():
+    """More samples -> fewer recovery errors (the exponential decay)."""
+    d, reps = 12, 15
+    errs = {}
+    for n in (100, 400, 1600):
+        bad = 0
+        for seed in range(reps):
+            ds = GGMDataset(d=d, seed=100 + seed, rho_min=0.5, rho_max=0.9)
+            edges, _ = ds.structure()
+            x = ds.sample(n, batch_seed=1)
+            est = chow_liu.learn_structure(x, method="sign")
+            bad += trees.tree_edit_distance(edges, est) > 0
+        errs[n] = bad
+    assert errs[1600] <= errs[400] <= errs[100] + 1
+
+
+def test_quality_vs_quantity_tradeoff_exists():
+    """Fixed bit budget K: some R in the middle beats both extremes on
+    correlation estimation error (Fig. 9)."""
+    from repro.core.quantizers import PerSymbolQuantizer
+
+    K, n, rho, reps = 1024, 1024, 0.5, 300
+    rng = np.random.default_rng(0)
+    errs = {}
+    for rate in (1, 4, 10):
+        q = PerSymbolQuantizer(rate)
+        n_sub = K // rate
+        acc = []
+        for _ in range(reps):
+            x = rng.normal(size=n_sub)
+            y = rho * x + np.sqrt(1 - rho**2) * rng.normal(size=n_sub)
+            xq = np.asarray(q.quantize(jnp.asarray(x, jnp.float32)))
+            yq = np.asarray(q.quantize(jnp.asarray(y, jnp.float32)))
+            acc.append(abs(rho - (xq * yq).mean()))
+        errs[rate] = float(np.mean(acc))
+    assert errs[4] < errs[1] and errs[4] < errs[10]
+
+
+def test_skeleton_recovery_synthetic_mad():
+    """Figs. 10-11 stand-in: a GGM with the 20-joint body-skeleton topology
+    is recovered perfectly from quantized data at moderate rates."""
+    ds = GGMDataset(d=20, tree="skeleton", rho_min=0.6, rho_max=0.95, seed=0)
+    edges, _ = ds.structure()
+    assert trees.edges_canonical(edges) == trees.edges_canonical(trees.SKELETON_EDGES)
+    x = ds.sample(20_000, batch_seed=0)
+    for method, rate in [("sign", 1), ("persymbol", 3), ("persymbol", 6)]:
+        est = chow_liu.learn_structure(x, method=method, rate=rate)
+        assert trees.tree_edit_distance(edges, est) == 0, (method, rate)
+
+
+def test_theorem1_bound_nontrivial_at_paper_scale():
+    """The Thm-1 bound is < 1 (informative) at the Fig. 7 operating point."""
+    b = bounds.theorem1_bound(4000, 20, 0.5, 0.5)
+    assert 0 < b < 1
+
+
+def test_negative_correlations_recovered():
+    """Lemma 2: signs of correlations don't matter for recovery."""
+    rng = np.random.default_rng(9)
+    d, n = 10, 6000
+    edges = trees.random_tree(d, rng)
+    w = rng.uniform(0.5, 0.9, d - 1) * rng.choice([-1, 1], size=d - 1)
+    x = sampler.sample_tree_ggm(jax.random.key(1), n, d, edges, w)
+    for method in ("sign", "persymbol", "original"):
+        est = chow_liu.learn_structure(x, method=method, rate=3)
+        assert trees.tree_edit_distance(edges, est) == 0, method

@@ -1,0 +1,68 @@
+"""Tree utilities: random trees, eq. (24) covariance, edit distance."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import trees
+
+
+@given(st.integers(2, 40), st.integers(0, 10_000))
+@settings(max_examples=50, deadline=None)
+def test_random_tree_is_tree(d, seed):
+    rng = np.random.default_rng(seed)
+    edges = trees.random_tree(d, rng)
+    assert trees.is_tree(d, edges)
+
+
+def test_star_chain_skeleton_are_trees():
+    assert trees.is_tree(7, trees.star_tree(7))
+    assert trees.is_tree(7, trees.chain_tree(7))
+    assert trees.is_tree(20, trees.SKELETON_EDGES)
+    assert len(trees.SKELETON_JOINTS) == 20
+
+
+@given(st.integers(3, 15), st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+def test_correlation_matrix_path_products(d, seed):
+    """Off-diagonals equal products of edge correlations along paths (eq 24)."""
+    rng = np.random.default_rng(seed)
+    edges = trees.random_tree(d, rng)
+    w = rng.uniform(0.2, 0.9, size=d - 1)
+    Q = trees.tree_correlation_matrix(d, edges, w)
+    # symmetric with unit diagonal
+    assert np.allclose(Q, Q.T)
+    assert np.allclose(np.diag(Q), 1.0)
+    # neighbors carry the edge weight exactly
+    for (j, k), wv in zip(edges, w):
+        assert Q[j, k] == pytest.approx(wv)
+    # PSD (valid covariance)
+    assert np.linalg.eigvalsh(Q).min() > -1e-9
+
+
+def test_correlation_decay_property():
+    """Any (r,s) correlation is <= every edge correlation on its path —
+    the Lemma 5 ingredient."""
+    rng = np.random.default_rng(3)
+    d = 12
+    edges = trees.random_tree(d, rng)
+    w = rng.uniform(0.3, 0.95, size=d - 1)
+    Q = trees.tree_correlation_matrix(d, edges, w)
+    adj = trees.tree_adjacency(d, edges)
+    for r in range(d):
+        for s_ in range(d):
+            if r != s_ and not adj[r, s_]:
+                assert abs(Q[r, s_]) <= max(abs(Q[i, j]) for i, j in edges) + 1e-12
+
+
+def test_edit_distance():
+    e1 = [(0, 1), (1, 2), (2, 3)]
+    e2 = [(1, 0), (2, 1), (3, 2)]  # same tree, flipped pairs
+    assert trees.tree_edit_distance(e1, e2) == 0
+    e3 = [(0, 1), (1, 2), (1, 3)]
+    assert trees.tree_edit_distance(e1, e3) == 2
+
+
+def test_is_tree_rejects_cycle_and_forest():
+    assert not trees.is_tree(4, [(0, 1), (1, 2), (2, 0)])      # cycle
+    assert not trees.is_tree(4, [(0, 1), (2, 3)])              # forest, too few
+    assert not trees.is_tree(4, [(0, 1), (0, 1), (2, 3)])      # dup edge
