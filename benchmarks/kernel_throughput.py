@@ -10,9 +10,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.quantizers import pack_codes
 from repro.kernels import ref
 from repro.kernels.quantize import quantize_fused
-from repro.kernels.sign_corr import sign_corr
+from repro.kernels.sign_corr import sign_corr, sign_corr_packed
 from repro.kernels.decode_attention import decode_attention
 from .common import save_artifact
 
@@ -33,8 +34,12 @@ def vmem_working_set() -> dict:
     quant = bm * bnq * 4 + bm * bnq * 1 + bm * bnq * 4 + (127 + 128) * 4
     g, dh, bs = 8, 128, 512
     dec = g * dh * 4 + 2 * bs * dh * 4 + g * bs * 4 + g * dh * 4 + 2 * g * 4
-    return {"sign_corr": sign, "quantize": quant, "decode_attention": dec,
-            "vmem_budget": 16 * 2**20}
+    # packed popcount: two (bd, bb) byte tiles in, one (bd, bd, bb) uint8 XOR
+    # intermediate (the dominant term), int32 accumulator out
+    pbd, pbb = 128, 128
+    packed = 2 * pbd * pbb + pbd * pbd * pbb + pbd * pbd * 4
+    return {"sign_corr": sign, "sign_corr_packed": packed, "quantize": quant,
+            "decode_attention": dec, "vmem_budget": 16 * 2**20}
 
 
 def run(quick: bool = False) -> dict:
@@ -50,6 +55,19 @@ def run(quick: bool = False) -> dict:
         rows.append({"kernel": "sign_corr", "shape": [n, d],
                      "t_interpret": t_k, "t_ref": t_r, "max_err": err})
         print(f"kernel sign_corr {n}x{d}: err={err} "
+              f"interp={t_k*1e3:.1f}ms ref={t_r*1e3:.1f}ms", flush=True)
+
+    for n, d in ([(1024, 128)] if quick else [(1024, 128), (4096, 256)]):
+        u = np.random.default_rng(1).choice([-1, 1], size=(n, d)).astype(np.int8)
+        bits = jnp.asarray(((u.T + 1) // 2).astype(np.int32))
+        packed = pack_codes(bits, 1)
+        t_k = _time(lambda p: sign_corr_packed(p, n, interpret=True), packed)
+        t_r = _time(lambda p: ref.sign_corr_packed_ref(p, n), packed)
+        err = float(jnp.abs(sign_corr_packed(packed, n, interpret=True)
+                            - ref.sign_corr_ref(jnp.asarray(u))).max())
+        rows.append({"kernel": "sign_corr_packed", "shape": [n, d],
+                     "t_interpret": t_k, "t_ref": t_r, "max_err": err})
+        print(f"kernel sign_corr_packed {n}x{d}: err={err} "
               f"interp={t_k*1e3:.1f}ms ref={t_r*1e3:.1f}ms", flush=True)
 
     x = jax.random.normal(jax.random.key(0), (512, 256))

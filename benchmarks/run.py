@@ -3,16 +3,20 @@
   PYTHONPATH=src python -m benchmarks.run            # full (slow)
   PYTHONPATH=src python -m benchmarks.run --quick    # CI-sized
   PYTHONPATH=src python -m benchmarks.run --only fig3,roofline
+  PYTHONPATH=src python -m benchmarks.run --only gram --json   # BENCH_gram.json
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 
 from . import (ext_glasso, fig3_structure_error, fig56_crossover, fig7_star,
                fig8_rel_error, fig9_quality_quantity, fig1011_skeleton,
-               ggm_comm, ggm_roofline, kernel_throughput, roofline)
+               ggm_comm, ggm_roofline, gram_engine, kernel_throughput,
+               roofline)
 
 BENCHES = {
     "fig3": fig3_structure_error.run,
@@ -24,17 +28,44 @@ BENCHES = {
     "ggm_comm": ggm_comm.run,
     "ggm_roofline": ggm_roofline.run,
     "ext_glasso": ext_glasso.run,
+    "gram": gram_engine.run,
     "kernels": kernel_throughput.run,
     "roofline": roofline.run,
 }
+
+BENCH_GRAM_JSON = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_gram.json")
+
+
+def write_bench_gram(payload: dict, path: str = BENCH_GRAM_JSON) -> str:
+    """Persist the perf-trajectory artifact tracked across PRs: per-backend
+    GB/s and GFLOP/s for every Gram path, plus the bytes-moved check."""
+    slim = {
+        "rows": [
+            {k: r[k] for k in ("path", "backend", "n", "d", "bytes_moved",
+                               "gbps", "gflops_per_s", "seconds")}
+            for r in payload["rows"]
+        ],
+        "acceptance": payload["acceptance"],
+        "checks": payload["checks"],
+    }
+    with open(path, "w") as f:
+        json.dump(slim, f, indent=1, default=float)
+    return path
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default="")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_gram.json (runs the gram bench if it "
+                         "was not already selected)")
     args = ap.parse_args()
     names = [n for n in args.only.split(",") if n] or list(BENCHES)
+    if args.json and "gram" not in names:
+        names.append("gram")
 
     failures = []
     for name in names:
@@ -42,6 +73,8 @@ def main() -> int:
         t0 = time.time()
         try:
             result = BENCHES[name](quick=args.quick)
+            if name == "gram" and args.json:
+                print("wrote", write_bench_gram(result), flush=True)
             checks = (result or {}).get("checks", {})
             bad = [k for k, v in checks.items() if not v]
             status = "PASS" if not bad else f"CHECKS-FAILED:{bad}"

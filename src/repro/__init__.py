@@ -1,1 +1,4 @@
 """repro: distributed tree-GGM structure learning + multi-pod JAX framework."""
+from . import _jaxcompat
+
+_jaxcompat.ensure()

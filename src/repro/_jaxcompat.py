@@ -1,0 +1,54 @@
+"""Forward-compat shims so the repo runs on both jax>=0.5 and jax 0.4.x.
+
+The codebase targets the modern public API (``jax.shard_map``,
+``jax.sharding.AxisType``, ``jax.make_mesh(..., axis_types=...)``). Older
+0.4.x wheels (like the one baked into the CPU test container) only ship the
+``jax.experimental.shard_map`` spelling with ``check_rep`` instead of
+``check_vma`` and no explicit axis types. ``ensure()`` polyfills the modern
+names onto the ``jax`` namespace when (and only when) they are missing, so
+the same sources run unmodified on either version; on current jax it is a
+no-op. Called once from ``repro.__init__``.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+
+
+def ensure() -> None:
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+        @functools.wraps(_legacy_shard_map)
+        def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True, **kw):
+            return _legacy_shard_map(
+                f, mesh, in_specs=in_specs, out_specs=out_specs,
+                check_rep=check_vma, **kw)
+
+        jax.shard_map = shard_map
+
+    if not hasattr(jax.lax, "axis_size"):
+        # axis_size(name) landed in 0.5; the psum-of-ones idiom is its
+        # classic spelling and constant-folds under shard_map.
+        jax.lax.axis_size = lambda axis_name: jax.lax.psum(1, axis_name)
+
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        _legacy_make_mesh = jax.make_mesh
+
+        @functools.wraps(_legacy_make_mesh)
+        def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):
+            del axis_types  # pre-0.5 meshes are implicitly fully Auto
+            return _legacy_make_mesh(axis_shapes, axis_names, **kw)
+
+        jax.make_mesh = make_mesh

@@ -156,6 +156,7 @@ def learn_structure(
     method: str = "sign",
     rate: int = 1,
     backend: str = "kruskal",
+    engine=None,
 ) -> list[tuple[int, int]]:
     """End-to-end centralized Chow-Liu on (n, d) data.
 
@@ -163,17 +164,22 @@ def learn_structure(
       'sign'      — sign method (§4): 1-bit codes, MI of signs (eq. 4).
       'persymbol' — R-bit per-symbol quantization (§5), eq. (30) estimator.
       'original'  — unquantized baseline (centralized Chow-Liu, eq. 1).
+    engine: ``repro.core.gram.GramEngine`` the pairwise Gram dispatches
+      through (None = process default). Codes feed the Gram backend as int8
+      (sign) / int8 bin codes with in-kernel centroid decode (persymbol).
     """
     from . import estimators, quantizers
 
     x = jnp.asarray(x)
     if method == "sign":
-        w = estimators.sign_method_weights(quantizers.sign_quantize(x))
+        w = estimators.sign_method_weights(
+            quantizers.sign_codes(x), engine=engine)
     elif method == "persymbol":
         q = quantizers.PerSymbolQuantizer(rate)
-        w = estimators.persymbol_method_weights(q.quantize(x))
+        codes = q.encode(x).astype(jnp.int8)
+        w = estimators.persymbol_code_weights(codes, q.centroids, engine=engine)
     elif method == "original":
-        w = estimators.gaussian_weights(x)
+        w = estimators.gaussian_weights(x, engine=engine)
     else:
         raise ValueError(f"unknown method {method!r}")
     return chow_liu(np.asarray(w), backend=backend)

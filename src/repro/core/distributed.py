@@ -15,6 +15,13 @@ sharding problem:
     **psum over the data axis**; the MWST then runs on the replicated
     weight matrix (device-side Boruvka) or on the host (Kruskal).
 
+Every Gram goes through :class:`repro.core.gram.GramEngine` (Pallas kernels
+on TPU/GPU, XLA matmuls on CPU). For ``wire="packed"`` with the sign method
+the Gram is computed **directly on the packed payload** via XNOR+popcount
+(G = n - 2*popcount(xor)) — the gathered wire bytes are the kernel operand,
+nothing is unpacked back to int8/f32. For int8 wires, codes enter the kernel
+as int8 (sign upcast / centroid decode fused per tile).
+
 Two compute placements are provided (see EXPERIMENTS.md §Perf):
   * ``replicated``: every device computes the full (d, d) Gram of its sample
     shard — redundant over the model axis but collective-minimal (one
@@ -26,7 +33,6 @@ Two compute placements are provided (see EXPERIMENTS.md §Perf):
 """
 from __future__ import annotations
 
-import functools
 from typing import Literal
 
 import numpy as np
@@ -36,22 +42,13 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import estimators
 from .chow_liu import boruvka_mst
-from .quantizers import PerSymbolQuantizer, pack_codes, sign_quantize, unpack_codes
+from .gram import GramEngine, resolve_engine
+from .quantizers import PerSymbolQuantizer, pack_codes, unpack_codes
 
 
 def communication_bits(n: int, d: int, rate: int) -> int:
     """The paper's total communication cost: n*d*R bits (§3)."""
     return n * d * rate
-
-
-def _pairwise_weights_local(u_full: jax.Array, method: str, rate: int, n: int):
-    """Per-device partial Gram -> (d, d) contribution (pre-psum)."""
-    if method == "sign":
-        # theta_hat = 1/2 + gram/(2n); accumulate gram only, affine map later
-        return u_full.T @ u_full
-    elif method == "persymbol":
-        return u_full.T @ u_full
-    raise ValueError(method)
 
 
 def _weights_from_gram(gram: jax.Array, method: str, n) -> jax.Array:
@@ -77,6 +74,7 @@ def build_weights_fn(
     model_axis: str = "model",
     compute: Literal["replicated", "rowblock"] = "replicated",
     wire: Literal["int8", "packed", "float32"] = "int8",
+    engine: GramEngine | None = None,
 ):
     """shard_map pipeline (n, d) samples -> (d, d) Chow-Liu weights.
 
@@ -85,49 +83,81 @@ def build_weights_fn(
       * 'int8'    — one byte per symbol (codes, any R <= 7): the easy
         baseline, already 4-8x under float.
       * 'packed'  — dense R bits/symbol via :func:`pack_codes` — the
-        paper's actual budget (sign = 1 bit/symbol on the wire).
+        paper's actual budget (sign = 1 bit/symbol on the wire). For the
+        sign method the Gram is contracted directly on this payload.
       * 'float32' — unquantized samples (the centralized-equivalent
         baseline the paper compares against).
 
     Compute placements: 'replicated' Gram on every rank (collective-
     minimal) vs 'rowblock' (each model rank computes its (d/M, d) rows —
-    16x fewer FLOPs, one extra (small) all-gather).
+    M-fold fewer FLOPs, one extra (small) all-gather).
+
+    engine: GramEngine the Gram contractions dispatch through (must be a
+    traced backend — 'pallas' or 'xla' — inside shard_map; None = process
+    default, which auto-selects per platform).
     """
     quant = PerSymbolQuantizer(rate) if method == "persymbol" else None
     if wire == "packed":
         assert method == "sign" or 8 % rate == 0
 
     def local_fn(x_loc: jax.Array) -> jax.Array:
+        # resolved at trace time so a build with engine=None tracks the
+        # process default (set_default_engine) like every other entry point
+        eng = resolve_engine(engine)
         n = x_loc.shape[0] * jax.lax.axis_size(data_axis)
+        n_loc, d_loc = x_loc.shape
+        midx = jax.lax.axis_index(model_axis)
         # ---- paper step 1: local encoding, R bits/symbol ----------------
         if method == "sign":
             codes = (x_loc >= 0).astype(jnp.int8)  # bit
         else:
             codes = quant.encode(x_loc).astype(jnp.int8)  # R <= 7 fits int8
         # ---- paper step 2: transmit to center == all-gather over model --
+        # and step 3's Gram operand, in whatever dtype the wire delivered
+        packed_full = codes_full = u_full = None
         if wire == "float32":
-            wire_full = jax.lax.all_gather(x_loc, model_axis, axis=1, tiled=True)
-            u_full = wire_full
+            u_full = jax.lax.all_gather(x_loc, model_axis, axis=1, tiled=True)
         elif wire == "packed":
             # pack along the SAMPLE axis (always >> 8/R symbols; the local
             # feature count can be as small as 1 machine per device)
-            payload = pack_codes(jnp.swapaxes(codes, 0, 1), rate)  # (d_loc, nR/8)
-            payload_full = jax.lax.all_gather(
-                payload, model_axis, axis=0, tiled=True)           # (d, nR/8)
-            codes_full = jnp.swapaxes(unpack_codes(payload_full, rate), 0, 1)
-            u_full = _decode_codes(codes_full, method, quant)
+            payload = pack_codes(
+                jnp.swapaxes(codes, 0, 1),
+                rate if method != "sign" else 1)              # (d_loc, nR/8)
+            packed_full = jax.lax.all_gather(
+                payload, model_axis, axis=0, tiled=True)      # (d, nR/8)
+            if method != "sign":
+                # per-symbol packed: unpack to bin codes; the centroid
+                # decode stays fused inside the Gram backend
+                codes_full = jnp.swapaxes(
+                    unpack_codes(packed_full, rate), 0, 1).astype(jnp.int8)
         else:
-            codes_full = jax.lax.all_gather(codes, model_axis, axis=1, tiled=True)
-            u_full = _decode_codes(codes_full.astype(jnp.int32), method, quant)
-        # ---- paper step 3: central statistic ----------------------------
-        if compute == "replicated":
-            gram = u_full.T @ u_full
-        else:
-            # only this model-rank's feature rows: (d_loc, d)
-            midx = jax.lax.axis_index(model_axis)
-            d_loc = x_loc.shape[1]
-            u_rows = jax.lax.dynamic_slice_in_dim(u_full, midx * d_loc, d_loc, 1)
-            gram = u_rows.T @ u_full  # (d_loc, d)
+            codes_full = jax.lax.all_gather(
+                codes, model_axis, axis=1, tiled=True)
+            if method == "sign":
+                u_full = (codes_full * 2 - 1).astype(jnp.int8)  # ±1 codes
+                codes_full = None
+        # ---- paper step 3: central statistic via the Gram engine --------
+        if u_full is not None:          # values (f32 samples or ±1 int8)
+            if compute == "replicated":
+                gram = eng.gram(u_full)
+            else:
+                u_rows = jax.lax.dynamic_slice_in_dim(
+                    u_full, midx * d_loc, d_loc, 1)
+                gram = eng.gram(u_rows, u_full)  # (d_loc, d)
+        elif codes_full is not None:    # int8 bin codes, decode in-kernel
+            if compute == "replicated":
+                gram = eng.code_gram(codes_full, quant.centroids)
+            else:
+                c_rows = jax.lax.dynamic_slice_in_dim(
+                    codes_full, midx * d_loc, d_loc, 1)
+                gram = eng.code_gram(c_rows, quant.centroids, codes_full)
+        else:                           # sign bits: contract the wire bytes
+            if compute == "replicated":
+                gram = eng.packed_sign_gram(packed_full, n_loc)
+            else:
+                p_rows = jax.lax.dynamic_slice_in_dim(
+                    packed_full, midx * d_loc, d_loc, 0)
+                gram = eng.packed_sign_gram(p_rows, n_loc, packed_full)
         gram = jax.lax.psum(gram, data_axis)
         if compute == "rowblock":
             # tiled all_gather replicates the row blocks; VMA inference cannot
@@ -151,12 +181,6 @@ def build_weights_fn(
     ), NamedSharding(mesh, in_spec)
 
 
-def _decode_codes(codes_full, method, quant):
-    if method == "sign":
-        return (codes_full * 2 - 1).astype(jnp.float32)
-    return quant.decode(codes_full)
-
-
 def distributed_weights(
     x: jax.Array,
     mesh: Mesh,
@@ -167,6 +191,7 @@ def distributed_weights(
     model_axis: str = "model",
     compute: Literal["replicated", "rowblock"] = "replicated",
     wire: Literal["int8", "packed", "float32"] = "int8",
+    engine: GramEngine | None = None,
 ) -> jax.Array:
     """Pairwise Chow-Liu weight matrix from vertically-sharded data.
 
@@ -178,7 +203,7 @@ def distributed_weights(
     """
     fn, sharding = build_weights_fn(
         mesh, method=method, rate=rate, data_axis=data_axis,
-        model_axis=model_axis, compute=compute, wire=wire)
+        model_axis=model_axis, compute=compute, wire=wire, engine=engine)
     x = jax.device_put(x, sharding)
     return jax.jit(fn)(x)
 

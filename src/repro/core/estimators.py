@@ -1,25 +1,39 @@
 """Statistic estimators used by the central machine (paper §4.2, §5).
 
 All estimators take the full received code matrix U of shape (n, d) and
-produce pairwise (d, d) statistic matrices; they are pure jnp and jit-able.
-The pairwise contraction U^T U is the compute hot spot — the Pallas kernel in
-``repro.kernels.sign_corr`` implements the same contraction with MXU tiling;
-these functions are its reference semantics.
+produce pairwise (d, d) statistic matrices; they are pure and jit-able.
+The pairwise contraction U^T U is the compute hot spot: every estimator
+routes it through :class:`repro.core.gram.GramEngine` (Pallas kernels on
+TPU/GPU, plain XLA matmuls on CPU, numpy host reference), so the same code
+serves as both the production path and the kernels' reference semantics.
+Pass ``engine=`` to pin a backend; ``None`` uses the process default.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from .gram import GramEngine, resolve_engine
 
-def theta_hat(u: jax.Array) -> jax.Array:
+
+def theta_hat(u: jax.Array, *, engine: GramEngine | None = None) -> jax.Array:
     """UMVE of theta_jk = Pr(u_j u_k = 1) from sign data (eq. 8).
 
     With u in {-1,+1}: I(u_j u_k = 1) = (1 + u_j u_k)/2, so
     theta_hat = 1/2 + (U^T U) / (2n).
     """
     n = u.shape[0]
-    gram = u.T @ u
+    gram = resolve_engine(engine).gram(u)
+    return 0.5 + gram / (2.0 * n)
+
+
+def theta_hat_packed(
+    packed: jax.Array, n: int, *, engine: GramEngine | None = None
+) -> jax.Array:
+    """theta_hat (eq. 8) straight from the 1-bit packed wire payload —
+    (d, ceil(n/8)) uint8, ``quantizers.pack_codes`` layout — via the
+    XNOR+popcount Gram. Exact: equals :func:`theta_hat` on the unpacked u."""
+    gram = resolve_engine(engine).packed_sign_gram(packed, n)
     return 0.5 + gram / (2.0 * n)
 
 
@@ -55,7 +69,9 @@ def mi_gaussian(rho: jax.Array) -> jax.Array:
     return -0.5 * jnp.log1p(-r2)
 
 
-def sample_correlation(u: jax.Array) -> jax.Array:
+def sample_correlation(
+    u: jax.Array, *, engine: GramEngine | None = None
+) -> jax.Array:
     """rho_bar_q = (1/n) sum_i u_j^(i) u_k^(i) (eqs. 31/32).
 
     Note the paper's estimator deliberately does NOT renormalize by sample
@@ -63,7 +79,7 @@ def sample_correlation(u: jax.Array) -> jax.Array:
     machine treats quantized codes as if Gaussian.
     """
     n = u.shape[0]
-    return (u.T @ u) / n
+    return resolve_engine(engine).gram(u) / n
 
 
 def rho_squared_unbiased(rho_bar: jax.Array, n: int) -> jax.Array:
@@ -71,17 +87,29 @@ def rho_squared_unbiased(rho_bar: jax.Array, n: int) -> jax.Array:
     return (n / (n + 1.0)) * (jnp.square(rho_bar) - 1.0 / n)
 
 
-def sign_method_weights(u_signs: jax.Array) -> jax.Array:
+def sign_method_weights(
+    u_signs: jax.Array, *, engine: GramEngine | None = None
+) -> jax.Array:
     """Edge-weight matrix for Chow-Liu under the sign method: hat I(u_j; u_k).
 
     Any strictly increasing transform of |theta - 1/2| yields the same MWST
     (Kruskal depends only on the order); we return the MI itself for
     interpretability and parity with the paper.
     """
-    return mi_sign(theta_hat(u_signs))
+    return mi_sign(theta_hat(u_signs, engine=engine))
 
 
-def persymbol_method_weights(u_centroids: jax.Array) -> jax.Array:
+def sign_method_weights_packed(
+    packed: jax.Array, n: int, *, engine: GramEngine | None = None
+) -> jax.Array:
+    """Sign-method Chow-Liu weights computed directly on the 1-bit packed
+    payload (no unpack): mi_sign(theta_hat_packed(...))."""
+    return mi_sign(theta_hat_packed(packed, n, engine=engine))
+
+
+def persymbol_method_weights(
+    u_centroids: jax.Array, *, engine: GramEngine | None = None
+) -> jax.Array:
     """Edge weights for Chow-Liu under per-symbol quantization (§5).
 
     Estimates rho^2 via eq. (30) applied to the quantized sample correlation
@@ -89,11 +117,28 @@ def persymbol_method_weights(u_centroids: jax.Array) -> jax.Array:
     rho^2, so using rho^2_hat directly is order-equivalent; we report MI.
     """
     n = u_centroids.shape[0]
-    rho_bar = sample_correlation(u_centroids)
+    rho_bar = sample_correlation(u_centroids, engine=engine)
     r2 = jnp.clip(rho_squared_unbiased(rho_bar, n), 0.0, 1.0 - 1e-9)
     return -0.5 * jnp.log1p(-r2)
 
 
-def gaussian_weights(x: jax.Array) -> jax.Array:
+def persymbol_code_weights(
+    codes: jax.Array,
+    centroids: jax.Array,
+    *,
+    engine: GramEngine | None = None,
+) -> jax.Array:
+    """Per-symbol weights straight from int8 bin codes + codebook: the
+    centroid decode happens inside the Gram backend (in-kernel on pallas),
+    so no decoded copy of U is materialized."""
+    n = codes.shape[0]
+    rho_bar = resolve_engine(engine).code_gram(codes, centroids) / n
+    r2 = jnp.clip(rho_squared_unbiased(rho_bar, n), 0.0, 1.0 - 1e-9)
+    return -0.5 * jnp.log1p(-r2)
+
+
+def gaussian_weights(
+    x: jax.Array, *, engine: GramEngine | None = None
+) -> jax.Array:
     """Centralized (unquantized) baseline: MI from the sample correlation."""
-    return mi_gaussian(sample_correlation(x))
+    return mi_gaussian(sample_correlation(x, engine=engine))

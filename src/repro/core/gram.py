@@ -1,0 +1,207 @@
+"""GramEngine: one dispatch point for every pairwise-statistic contraction.
+
+Every pipeline in the repo — batch estimators (``core.estimators``), the
+streaming accumulator (``core.streaming``), and both compute placements of
+the distributed shard_map runtime (``core.distributed``) — reduces to the
+same hot spot: the Gram contraction ``G = U^T V`` over quantized codes
+(paper §4.2 eq. 8 for the sign method, §5 eq. 32 per-symbol). This module
+routes all of them through a single engine with three backends:
+
+* ``pallas``  — the fused TPU kernels in ``repro.kernels.sign_corr``. Codes
+  stay in their wire dtype all the way into VMEM (int8 upcast / centroid
+  decode / bit-unpack happen per tile); on CPU the kernels run in
+  ``interpret=True`` mode so tier-1 tests exercise the exact same code path.
+* ``xla``     — pure-jnp contractions, jit-friendly and shard_map-safe: the
+  fast path on CPU and the semantic reference on any platform.
+* ``numpy``   — host-side reference (returns ``np.ndarray``), used by tests
+  and the host-Kruskal path; exact integer arithmetic for sign codes.
+
+``backend="auto"`` (the default engine) resolves to ``pallas`` on TPU/GPU
+and ``xla`` on CPU, overridable with the ``REPRO_GRAM_BACKEND`` env var.
+
+Three input kinds cover every wire format; HBM/wire bytes per symbol:
+
+  ============  =====================  ==========================  =========
+  input kind    entry point            backend compute             bytes/sym
+  ============  =====================  ==========================  =========
+  f32 values    ``gram(x)``            MXU bf16 / f32 matmul       4
+  int8 values   ``gram(u)``            in-tile int8->bf16 matmul   1
+  int8 codes    ``code_gram(c, cb)``   in-kernel centroid decode   1
+  packed bits   ``packed_sign_gram``   XNOR + popcount             1/8
+  ============  =====================  ==========================  =========
+
+(the xla/numpy backends match each entry point's semantics but may widen
+internally — e.g. ``packed_sign_gram`` under xla unpacks to ±1 in registers
+before a matmul; only the pallas path keeps the 1-bit working set in HBM.)
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Literal
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sign_corr import code_corr, sign_corr, sign_corr_packed
+
+Backend = Literal["auto", "pallas", "xla", "numpy"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GramEngine:
+    """Backend-dispatched Gram contraction over (quantized) sample matrices.
+
+    Attributes:
+      backend: ``auto`` | ``pallas`` | ``xla`` | ``numpy``. ``auto`` resolves
+        per-call from ``REPRO_GRAM_BACKEND`` or the default jax backend
+        (pallas on TPU/GPU, xla on CPU).
+      interpret: Pallas interpret-mode override. ``None`` = interpret iff
+        running on CPU (so ``backend="pallas"`` is always safe in tests).
+      block_n / block_d / block_b: kernel tile sizes for the pallas backend.
+        ``block_d`` is clamped to 128 for the code/packed kernels (their
+        per-tile VMEM working sets — one-hot decode and XOR intermediate —
+        scale with block_d^2).
+    """
+
+    backend: Backend = "auto"
+    interpret: bool | None = None
+    block_n: int = 512
+    block_d: int = 256
+    block_b: int = 128
+
+    def resolve(self) -> str:
+        b = self.backend
+        if b == "auto":
+            b = os.environ.get("REPRO_GRAM_BACKEND") or (
+                "pallas" if jax.default_backend() in ("tpu", "gpu") else "xla")
+        if b not in ("pallas", "xla", "numpy"):
+            raise ValueError(f"unknown gram backend {b!r}")
+        return b
+
+    def _interpret(self) -> bool:
+        if self.interpret is None:
+            return jax.default_backend() == "cpu"
+        return self.interpret
+
+    # -- values: f32 / bf16 / int8 ±1 or centroid values --------------------
+
+    def gram(self, u: jax.Array, v: jax.Array | None = None) -> jax.Array:
+        """G = u^T v (v defaults to u) over (n, d)-shaped value matrices.
+
+        Integer codes (and bf16) dispatch to the pallas kernel, whose bf16
+        MXU tiles represent them exactly. f32/f64 values — the unquantized
+        baseline — always contract in f32 (xla path), so the baseline is
+        never silently quantized to bf16 by backend selection.
+        """
+        backend = self.resolve()
+        if backend == "numpy":
+            uf = np.asarray(u, dtype=np.float32)
+            vf = uf if v is None else np.asarray(v, dtype=np.float32)
+            return uf.T @ vf
+        exact_in_bf16 = all(
+            jnp.issubdtype(a.dtype, jnp.integer) or a.dtype == jnp.bfloat16
+            for a in ((u,) if v is None else (u, v)))
+        if backend == "pallas" and exact_in_bf16:
+            return sign_corr(
+                u, v, block_n=self.block_n, block_d=self.block_d,
+                interpret=self._interpret())
+        uf = jnp.asarray(u).astype(jnp.float32)
+        vf = uf if v is None else jnp.asarray(v).astype(jnp.float32)
+        return uf.T @ vf
+
+    # -- int8 bin codes + centroid codebook ---------------------------------
+
+    def code_gram(
+        self,
+        codes: jax.Array,
+        centroids: jax.Array,
+        codes_rhs: jax.Array | None = None,
+    ) -> jax.Array:
+        """Gram of centroid-decoded codes; pallas decodes in-kernel (no f32
+        copy of the decode ever reaches HBM), xla/numpy decode then contract."""
+        backend = self.resolve()
+        if backend == "pallas":
+            return code_corr(
+                codes, centroids, codes_rhs,
+                block_n=self.block_n, block_d=min(self.block_d, 128),
+                interpret=self._interpret())
+        if backend == "numpy":
+            cb = np.asarray(centroids, dtype=np.float32)
+            uf = cb[np.asarray(codes, dtype=np.int64)]
+            vf = uf if codes_rhs is None else cb[np.asarray(codes_rhs, np.int64)]
+            return uf.T @ vf
+        cb = jnp.asarray(centroids, dtype=jnp.float32)
+        uf = jnp.take(cb, jnp.asarray(codes).astype(jnp.int32))
+        vf = (
+            uf if codes_rhs is None
+            else jnp.take(cb, jnp.asarray(codes_rhs).astype(jnp.int32)))
+        return uf.T @ vf
+
+    # -- 1-bit packed sign codes --------------------------------------------
+
+    def packed_sign_gram(
+        self,
+        packed: jax.Array,
+        n: int,
+        packed_rhs: jax.Array | None = None,
+    ) -> jax.Array:
+        """Sign Gram straight from the packed wire payload.
+
+        ``packed``: (d, ceil(n/8)) uint8, feature-major, little bit order
+        (``quantizers.pack_codes`` rate-1 layout); tail bits beyond ``n``
+        must be zero. Exact (integer) on every backend:
+        G = n - 2*popcount(xor) — pad bits xor to zero and drop out.
+        """
+        if packed_rhs is not None:
+            assert packed.shape[1] == packed_rhs.shape[1], (
+                f"packed operands disagree on byte width: "
+                f"{packed.shape} vs {packed_rhs.shape}")
+        backend = self.resolve()
+        if backend == "pallas":
+            return sign_corr_packed(
+                packed, n, packed_rhs,
+                block_d=min(self.block_d, 128), block_b=self.block_b,
+                interpret=self._interpret())
+        if backend == "numpy":
+            a = np.asarray(packed)
+            b = a if packed_rhs is None else np.asarray(packed_rhs)
+            pop = np.bitwise_count(a[:, None, :] ^ b[None, :, :]).sum(
+                axis=-1, dtype=np.int64)
+            return (n - 2 * pop).astype(np.float32)
+        # xla: unpack to ±1 in registers (XLA fuses the unpack into the
+        # matmul's operand read); pad bits masked to 0 so they drop out.
+        uf = self._unpack_pm1(packed, n)
+        vf = uf if packed_rhs is None else self._unpack_pm1(packed_rhs, n)
+        return uf @ vf.T
+
+    @staticmethod
+    def _unpack_pm1(packed: jax.Array, n: int) -> jax.Array:
+        from .quantizers import bitunpack_signs
+
+        u = bitunpack_signs(packed)  # (d, nb*8) ±1 f32
+        mask = jnp.arange(u.shape[-1]) < n  # pad bits -> 0, drop out of G
+        return jnp.where(mask[None, :], u, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Default engine: module-level singleton, swappable for experiments/tests
+# ---------------------------------------------------------------------------
+
+_default_engine = GramEngine()
+
+
+def default_engine() -> GramEngine:
+    return _default_engine
+
+
+def set_default_engine(engine: GramEngine) -> GramEngine:
+    """Swap the process-wide default engine; returns the previous one."""
+    global _default_engine
+    prev, _default_engine = _default_engine, engine
+    return prev
+
+
+def resolve_engine(engine: GramEngine | None) -> GramEngine:
+    return _default_engine if engine is None else engine

@@ -30,6 +30,12 @@ def sign_quantize(x: jax.Array) -> jax.Array:
     return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
 
 
+def sign_codes(x: jax.Array) -> jax.Array:
+    """Sign method as int8 wire codes: {-1, +1} with 0 -> +1 — the dtype the
+    Gram kernels ingest directly (same convention as :func:`sign_quantize`)."""
+    return jnp.where(x >= 0, 1, -1).astype(jnp.int8)
+
+
 @functools.lru_cache(maxsize=None)
 def _codebook_np(rate: int) -> tuple[np.ndarray, np.ndarray]:
     """(boundaries a_1..a_{2^R+1} with +-inf trimmed, centroids c_1..c_{2^R})."""

@@ -6,6 +6,16 @@ only the (d, d) Gram accumulator: exact equality with the batch estimator,
 O(d^2) state, any n. This is the production ingestion path for the
 distributed pipeline (machines transmit per-batch code blocks; the center
 folds them in as they arrive).
+
+Every per-batch Gram goes through :class:`repro.core.gram.GramEngine`:
+
+* sign / per-symbol batches enter the kernel as **int8 code blocks** — the
+  upcast (sign) or centroid decode (per-symbol) happens inside the kernel
+  tile, so no f32 decode of a batch is ever materialized;
+* :meth:`update_codes` folds in already-quantized wire blocks directly
+  (what the center actually receives);
+* :meth:`update_packed` folds in 1-bit packed sign payloads via the
+  XNOR+popcount Gram — the wire bytes are the compute operand.
 """
 from __future__ import annotations
 
@@ -16,7 +26,8 @@ import jax
 import jax.numpy as jnp
 
 from . import estimators
-from .quantizers import PerSymbolQuantizer, sign_quantize
+from .gram import GramEngine, resolve_engine
+from .quantizers import PerSymbolQuantizer, sign_codes
 
 
 @dataclasses.dataclass
@@ -26,6 +37,7 @@ class StreamingGram:
     d: int
     method: str = "sign"          # sign | persymbol | original
     rate: int = 4
+    engine: GramEngine | None = None  # None = process default (core.gram)
 
     def __post_init__(self):
         self.gram = jnp.zeros((self.d, self.d), jnp.float32)
@@ -34,16 +46,54 @@ class StreamingGram:
             PerSymbolQuantizer(self.rate) if self.method == "persymbol" else None
         )
 
+    @property
+    def _eng(self) -> GramEngine:
+        return resolve_engine(self.engine)
+
     def update(self, x_batch: jax.Array) -> "StreamingGram":
+        """Quantize a raw sample batch locally and fold it in. The int8 code
+        block feeds the Gram kernel directly (decode fused in-kernel)."""
         assert x_batch.shape[1] == self.d
         if self.method == "sign":
-            u = sign_quantize(x_batch)
+            g = self._eng.gram(sign_codes(x_batch))
         elif self.method == "persymbol":
-            u = self._quant.quantize(x_batch)
+            codes = self._quant.encode(x_batch).astype(jnp.int8)
+            g = self._eng.code_gram(codes, self._quant.centroids)
         else:
-            u = x_batch
-        self.gram = self.gram + u.T @ u
+            g = self._eng.gram(x_batch)
+        self.gram = self.gram + g
         self.n += x_batch.shape[0]
+        return self
+
+    def update_codes(self, codes: jax.Array) -> "StreamingGram":
+        """Fold in an already-quantized (n_b, d) wire block.
+
+        sign: bits in {0,1} or signs in {-1,+1} (int); per-symbol: bin
+        indices in [0, 2^R). Codes go straight into the kernel as int8."""
+        assert codes.shape[1] == self.d
+        if self.method == "sign":
+            u = jnp.asarray(codes).astype(jnp.int8)
+            # accept {0,1} wire bits as well as {-1,+1} signs
+            u = jnp.where(u > 0, jnp.int8(1), jnp.int8(-1))
+            g = self._eng.gram(u)
+        elif self.method == "persymbol":
+            g = self._eng.code_gram(
+                jnp.asarray(codes).astype(jnp.int8), self._quant.centroids)
+        else:
+            raise ValueError("update_codes requires a quantized method")
+        self.gram = self.gram + g
+        self.n += codes.shape[0]
+        return self
+
+    def update_packed(self, payload: jax.Array, n_batch: int) -> "StreamingGram":
+        """Fold in a 1-bit packed sign payload: (d, ceil(n_b/8)) uint8 in
+        ``quantizers.pack_codes`` layout (feature-major, little bit order,
+        zero tail bits). The packed bytes are contracted directly
+        (G_b = n_b - 2*popcount(xor)); nothing is unpacked to HBM."""
+        assert self.method == "sign", "packed wire is the sign method"
+        assert payload.shape[0] == self.d
+        self.gram = self.gram + self._eng.packed_sign_gram(payload, n_batch)
+        self.n += n_batch
         return self
 
     def weights(self) -> jax.Array:

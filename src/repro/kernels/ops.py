@@ -11,18 +11,35 @@ import jax
 from .decode_attention import decode_attention as _decode_attention
 from .flash_prefill import flash_prefill as _flash_prefill
 from .quantize import quantize_fused as _quantize_fused
+from .sign_corr import code_corr as _code_corr
 from .sign_corr import sign_corr as _sign_corr
+from .sign_corr import sign_corr_packed as _sign_corr_packed
 
 INTERPRET = jax.default_backend() == "cpu"
 
 
-def sign_corr(u, *, block_n: int = 512, block_d: int = 256, interpret: bool | None = None):
+def sign_corr(u, v=None, *, block_n: int = 512, block_d: int = 256,
+              interpret: bool | None = None):
     return _sign_corr(
-        u,
+        u, v,
         block_n=block_n,
         block_d=block_d,
         interpret=INTERPRET if interpret is None else interpret,
     )
+
+
+def code_corr(codes, centroids, codes_rhs=None, *,
+              interpret: bool | None = None, **kw):
+    return _code_corr(
+        codes, centroids, codes_rhs,
+        interpret=INTERPRET if interpret is None else interpret, **kw)
+
+
+def sign_corr_packed(packed, n, packed_rhs=None, *,
+                     interpret: bool | None = None, **kw):
+    return _sign_corr_packed(
+        packed, n, packed_rhs,
+        interpret=INTERPRET if interpret is None else interpret, **kw)
 
 
 def quantize_fused(x, rate: int, *, interpret: bool | None = None, **kw):

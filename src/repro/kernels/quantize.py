@@ -11,6 +11,19 @@ streams x once: 4 bytes in, 4+1 bytes out per element.
 
 Outputs both the int8 codes (the wire payload) and the centroid values (what
 the Gram kernel consumes), matching ``repro.core.quantizers`` bit-for-bit.
+With ``pack=True`` the kernel additionally emits the *dense* wire payload —
+codes packed R bits/symbol into uint8 along the last axis, bit-for-bit equal
+to ``quantizers.pack_codes`` — in the same single pass over x (no second
+binning, no int8-codes round trip through HBM to a separate pack op). Pass
+``x.T`` (feature-major) to obtain the (d, n*R/8) layout that
+``kernels.sign_corr.sign_corr_packed`` and the distributed wire consume.
+
+Boundary convention: bins are left-closed (``x > a_i``, matching
+``quantizers.PerSymbolQuantizer.encode``), so at rate 1 an exact 0.0 maps
+to bit 0 (sign -1) whereas ``quantizers.sign_quantize``/``sign_codes`` map
+0 to +1. The two agree everywhere except exact zeros (measure zero for the
+paper's Gaussian data); use ``sign_codes`` + ``pack_codes`` if the >= 0
+convention matters for your data.
 """
 from __future__ import annotations
 
@@ -23,25 +36,48 @@ from jax.experimental import pallas as pl
 from repro.core.quantizers import _codebook_np
 
 
-def _quantize_kernel(x_ref, bounds_ref, cents_ref, codes_ref, vals_ref):
-    x = x_ref[...]  # (bm, bn)
-    bounds = bounds_ref[...]  # (1, L-1)
-    cents = cents_ref[...]  # (1, L)
+def _bin_codes(x, bounds):
     # bin index = number of interior boundaries strictly below x
     # (matches jnp.searchsorted side='left' for continuous data)
-    codes = jnp.sum(
+    return jnp.sum(
         (x[:, :, None] > bounds[0][None, None, :]).astype(jnp.int32), axis=-1
     )
-    codes_ref[...] = codes.astype(jnp.int8)
+
+
+def _decode(codes, cents, out_dtype):
     onehot = codes[:, :, None] == jax.lax.broadcasted_iota(
         jnp.int32, (1, 1, cents.shape[1]), 2
     )
-    vals_ref[...] = jnp.sum(
+    return jnp.sum(
         jnp.where(onehot, cents[0][None, None, :], 0.0), axis=-1
-    ).astype(vals_ref.dtype)
+    ).astype(out_dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("rate", "block_m", "block_n", "interpret"))
+def _quantize_kernel(x_ref, bounds_ref, cents_ref, codes_ref, vals_ref):
+    codes = _bin_codes(x_ref[...], bounds_ref[...])
+    codes_ref[...] = codes.astype(jnp.int8)
+    vals_ref[...] = _decode(codes, cents_ref[...], vals_ref.dtype)
+
+
+def _quantize_pack_kernel(
+    x_ref, bounds_ref, cents_ref, codes_ref, vals_ref, packed_ref, *, rate
+):
+    codes = _bin_codes(x_ref[...], bounds_ref[...])
+    codes_ref[...] = codes.astype(jnp.int8)
+    vals_ref[...] = _decode(codes, cents_ref[...], vals_ref.dtype)
+    # dense pack along the last axis: per = 8/R symbols per byte, little
+    # bit order (symbol i of a byte at bit i*R) == quantizers.pack_codes
+    per = 8 // rate
+    bm, bn = codes.shape
+    chunk = codes.astype(jnp.uint8).reshape(bm, bn // per, per)
+    shifts = (
+        jax.lax.broadcasted_iota(jnp.int32, (1, 1, per), 2) * rate
+    ).astype(jnp.uint8)
+    packed_ref[...] = jnp.sum(chunk << shifts, axis=-1, dtype=jnp.uint8)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("rate", "block_m", "block_n", "interpret", "pack"))
 def quantize_fused(
     x: jax.Array,
     rate: int,
@@ -49,13 +85,22 @@ def quantize_fused(
     block_m: int = 256,
     block_n: int = 512,
     interpret: bool = False,
+    pack: bool = False,
 ):
-    """(codes int8, values f32) for the R-bit per-symbol quantizer.
+    """(codes int8, values f32[, packed uint8]) for the R-bit quantizer.
 
     x: (m, n) float32. R <= 7 (codes must fit int8; the paper uses R <= 7).
+    pack: also emit the dense R-bit wire payload, (m, n*R/8) uint8, packed
+      along the last axis in one fused pass. Requires R | 8 and the last axis
+      to be a multiple of 8/R symbols (pad first — the wire layer already
+      guarantees this).
     """
     assert 1 <= rate <= 7
     m, n = x.shape
+    if pack:
+        assert 8 % rate == 0, f"pack requires rate | 8, got {rate}"
+        per = 8 // rate
+        assert n % per == 0, f"pad to a multiple of {per} symbols before packing"
     bm, bn = min(block_m, _ceil_mult(m, 8)), min(block_n, _ceil_mult(n, 128))
     m_p, n_p = _ceil_mult(m, bm), _ceil_mult(n, bn)
     if (m_p, n_p) != (m, n):
@@ -64,24 +109,39 @@ def quantize_fused(
     bounds = jnp.asarray(a[1:-1], dtype=jnp.float32)[None, :]  # (1, L-1)
     cents = jnp.asarray(c, dtype=jnp.float32)[None, :]  # (1, L)
     grid = (m_p // bm, n_p // bn)
-    codes, vals = pl.pallas_call(
-        _quantize_kernel,
+    in_specs = [
+        pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        pl.BlockSpec(bounds.shape, lambda i, j: (0, 0)),
+        pl.BlockSpec(cents.shape, lambda i, j: (0, 0)),
+    ]
+    out_specs = [
+        pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((m_p, n_p), jnp.int8),
+        jax.ShapeDtypeStruct((m_p, n_p), jnp.float32),
+    ]
+    if pack:
+        nb = bn * rate // 8
+        out_specs.append(pl.BlockSpec((bm, nb), lambda i, j: (i, j)))
+        out_shape.append(
+            jax.ShapeDtypeStruct((m_p, n_p * rate // 8), jnp.uint8))
+        kernel = functools.partial(_quantize_pack_kernel, rate=rate)
+    else:
+        kernel = _quantize_kernel
+    outs = pl.pallas_call(
+        kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-            pl.BlockSpec(bounds.shape, lambda i, j: (0, 0)),
-            pl.BlockSpec(cents.shape, lambda i, j: (0, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((m_p, n_p), jnp.int8),
-            jax.ShapeDtypeStruct((m_p, n_p), jnp.float32),
-        ],
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(x, bounds, cents)
+    if pack:
+        codes, vals, packed = outs
+        return codes[:m, :n], vals[:m, :n], packed[:m, : n * rate // 8]
+    codes, vals = outs
     return codes[:m, :n], vals[:m, :n]
 
 

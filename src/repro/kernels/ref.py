@@ -7,10 +7,35 @@ import jax.numpy as jnp
 from repro.core.quantizers import PerSymbolQuantizer
 
 
-def sign_corr_ref(u: jax.Array) -> jax.Array:
-    """G = u^T u in f32."""
+def sign_corr_ref(u: jax.Array, v: jax.Array | None = None) -> jax.Array:
+    """G = u^T v in f32 (v defaults to u)."""
     uf = u.astype(jnp.float32)
-    return uf.T @ uf
+    vf = uf if v is None else v.astype(jnp.float32)
+    return uf.T @ vf
+
+
+def sign_corr_packed_ref(packed: jax.Array, n: int,
+                         packed_rhs: jax.Array | None = None) -> jax.Array:
+    """Unpack (d, nb) uint8 sign bits to ±1 (pad bits -> 0), then contract."""
+    from repro.core.quantizers import bitunpack_signs
+
+    def unpack(p):
+        u = bitunpack_signs(p)
+        return jnp.where(jnp.arange(u.shape[-1])[None, :] < n, u, 0.0)
+
+    uf = unpack(packed)
+    vf = uf if packed_rhs is None else unpack(packed_rhs)
+    return (uf @ vf.T).astype(jnp.float32)
+
+
+def code_corr_ref(codes: jax.Array, centroids: jax.Array,
+                  codes_rhs: jax.Array | None = None) -> jax.Array:
+    """Centroid decode in f32, then contract (the full-precision oracle)."""
+    uf = jnp.take(centroids.astype(jnp.float32), codes.astype(jnp.int32))
+    vf = (uf if codes_rhs is None
+          else jnp.take(centroids.astype(jnp.float32),
+                        codes_rhs.astype(jnp.int32)))
+    return uf.T @ vf
 
 
 def quantize_fused_ref(x: jax.Array, rate: int):

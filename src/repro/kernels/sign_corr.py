@@ -1,21 +1,40 @@
-"""Pallas TPU kernel: pairwise-statistic Gram contraction over quantized codes.
+"""Pallas TPU kernels: pairwise-statistic Gram contractions over quantized codes.
 
 The central machine's hot spot (paper §4.2 eq. 8 / §5 eq. 32) is
 
-    G = U^T U,    U in {-1,+1}^{n x d}  (sign method)
-                  U in centroids^{n x d} (per-symbol method)
+    G = U^T V,    U, V in {-1,+1}^{n x d}  (sign method)
+                  U, V in centroids^{n x d} (per-symbol method)
 
-an n-contraction over all d^2 pairs. On TPU this is an MXU GEMM; the kernel
-tiles the (d, d) output over a 2-D grid and streams n in VMEM-resident
-blocks, accumulating in f32. Codes arrive as int8 (the wire format of the
-distributed runtime) and are upcast to bf16 tiles feeding the MXU — the
-upcast is fused here instead of materializing an f32 copy of U in HBM,
-which is the point of the kernel: HBM traffic is 1 byte/symbol instead of 4.
+an n-contraction over all d_l * d_r pairs. Three kernels cover every wire
+format the repo uses (see ``repro.core.gram`` for the dispatch layer and the
+bytes/symbol table):
 
-Block shapes default to (512, 256): per-step VMEM =
+* :func:`sign_corr` — int8/low-precision *values* (or anything castable to
+  bf16). Tiles the (d_l, d_r) output over a 2-D grid and streams n in
+  VMEM-resident blocks, accumulating in f32. The int8 -> bf16 upcast is fused
+  in-tile instead of materializing an f32 copy of U in HBM, so HBM traffic is
+  1 byte/symbol instead of 4.
+* :func:`code_corr` — int8 *bin codes* plus a <=2^R-entry centroid codebook.
+  The codebook lives in VMEM and the centroid decode is a fused one-hot
+  contraction per tile (same idiom as ``kernels.quantize``), so the per-symbol
+  Gram consumes the wire payload directly: 1 byte/symbol of HBM traffic and
+  no decoded f32 (or even centroid-valued int8) copy ever exists in HBM.
+* :func:`sign_corr_packed` — uint8 *bit-packed* sign codes (8 symbols/byte,
+  the honest 1-bit wire format of ``quantizers.pack_codes``). Uses the
+  XNOR+popcount identity: with u in {-1,+1} encoded as bits b,
+
+      sum_i u_j^(i) u_k^(i) = n - 2 * popcount(bits_j XOR bits_k),
+
+  where zero-padded tail bytes cancel exactly (pad bits XOR to 0). HBM
+  traffic is 1 *bit*/symbol — 8x under int8, 32x under f32 — and the wire
+  payload and the compute payload are the same buffer. Popcount is SWAR
+  (shift/mask adds), pure VPU ops.
+
+Block shapes default to (512, 256) for the MXU kernels: per-step VMEM =
 2 * 512*256 B (int8 in) + 2 * 512*256*2 B (bf16 tiles) + 256*256*4 B (acc)
 ≈ 1.3 MB, comfortably inside v5e's ~16 MB VMEM; all dims are multiples of
-the 128-lane MXU tiling.
+the 128-lane MXU tiling. The packed kernel defaults to (128, 128) byte
+tiles: its (bd, bd, bb) XOR intermediate is 2 MB at that size.
 """
 from __future__ import annotations
 
@@ -27,7 +46,7 @@ from jax.experimental import pallas as pl
 
 
 def _sign_corr_kernel(u_l_ref, u_r_ref, out_ref):
-    """Grid (d/bd, d/bd, n/bn); accumulates over the trailing grid dim."""
+    """Grid (d_l/bd, d_r/bd, n/bn); accumulates over the trailing grid dim."""
     @pl.when(pl.program_id(2) == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
@@ -45,25 +64,35 @@ def _sign_corr_kernel(u_l_ref, u_r_ref, out_ref):
 @functools.partial(jax.jit, static_argnames=("block_n", "block_d", "interpret"))
 def sign_corr(
     u: jax.Array,
+    v: jax.Array | None = None,
     *,
     block_n: int = 512,
     block_d: int = 256,
     interpret: bool = False,
 ) -> jax.Array:
-    """G = u^T u with int8/low-precision inputs and f32 accumulation.
+    """G = u^T v (v defaults to u) with int8/low-precision inputs, f32 accum.
 
     Args:
-      u: (n, d) codes; int8 (signs / bin indices mapped to centroid ids) or
+      u: (n, d_l) codes; int8 (signs / bin indices mapped to centroid ids) or
         any dtype castable to bf16. n, d padded internally to block multiples.
+      v: optional (n, d_r) right operand for rectangular Grams (e.g. the
+        rowblock placement in ``core.distributed``); must share u's n.
     Returns:
-      (d, d) float32 Gram matrix.
+      (d_l, d_r) float32 Gram matrix.
     """
-    n, d = u.shape
-    bn, bd = min(block_n, _ceil_mult(n, 8)), min(block_d, _ceil_mult(d, 128))
-    n_p, d_p = _ceil_mult(n, bn), _ceil_mult(d, bd)
-    if (n_p, d_p) != (n, d):
-        u = jnp.pad(u, ((0, n_p - n), (0, d_p - d)))
-    grid = (d_p // bd, d_p // bd, n_p // bn)
+    if v is None:
+        v = u
+    n, dl = u.shape
+    nv, dr = v.shape
+    assert n == nv, (u.shape, v.shape)
+    bn = min(block_n, _ceil_mult(n, 8))
+    bd = min(block_d, _ceil_mult(max(dl, dr), 128))
+    n_p, dl_p, dr_p = _ceil_mult(n, bn), _ceil_mult(dl, bd), _ceil_mult(dr, bd)
+    if (n_p, dl_p) != (n, dl):
+        u = jnp.pad(u, ((0, n_p - n), (0, dl_p - dl)))
+    if (n_p, dr_p) != (nv, dr):
+        v = jnp.pad(v, ((0, n_p - nv), (0, dr_p - dr)))
+    grid = (dl_p // bd, dr_p // bd, n_p // bn)
     out = pl.pallas_call(
         _sign_corr_kernel,
         grid=grid,
@@ -72,10 +101,166 @@ def sign_corr(
             pl.BlockSpec((bn, bd), lambda i, j, k: (k, j)),
         ],
         out_specs=pl.BlockSpec((bd, bd), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((d_p, d_p), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((dl_p, dr_p), jnp.float32),
         interpret=interpret,
-    )(u, u)
-    return out[:d, :d]
+    )(u, v)
+    return out[:dl, :dr]
+
+
+# ---------------------------------------------------------------------------
+# code_corr: Gram over int8 bin codes with in-kernel centroid decode
+# ---------------------------------------------------------------------------
+
+def _code_corr_kernel(c_l_ref, c_r_ref, cents_ref, out_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    cents = cents_ref[...]  # (1, L)
+    levels = jax.lax.broadcasted_iota(jnp.int32, (1, 1, cents.shape[1]), 2)
+
+    def decode(codes):  # one-hot contraction: VPU-friendly, no gather
+        onehot = codes.astype(jnp.int32)[:, :, None] == levels
+        return jnp.sum(
+            jnp.where(onehot, cents[0][None, None, :], 0.0), axis=-1
+        ).astype(jnp.bfloat16)
+
+    out_ref[...] += jax.lax.dot_general(
+        decode(c_l_ref[...]), decode(c_r_ref[...]),
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_d", "interpret"))
+def code_corr(
+    codes: jax.Array,
+    centroids: jax.Array,
+    codes_rhs: jax.Array | None = None,
+    *,
+    block_n: int = 512,
+    block_d: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """G = decode(codes)^T decode(codes_rhs) with the decode fused in-kernel.
+
+    Args:
+      codes: (n, d_l) int8 bin indices in [0, L).
+      centroids: (L,) codebook (``PerSymbolQuantizer.centroids``), L <= 128.
+      codes_rhs: optional (n, d_r) right operand (defaults to ``codes``).
+    Returns:
+      (d_l, d_r) float32 Gram of the centroid values; the decoded values only
+      ever exist as bf16 VMEM tiles (never in HBM).
+    """
+    if codes_rhs is None:
+        codes_rhs = codes
+    (L,) = centroids.shape
+    assert L <= 128, "codebook must fit a VMEM lane tile (R <= 7)"
+    n, dl = codes.shape
+    nv, dr = codes_rhs.shape
+    assert n == nv, (codes.shape, codes_rhs.shape)
+    bn = min(block_n, _ceil_mult(n, 8))
+    bd = min(block_d, _ceil_mult(max(dl, dr), 128))
+    n_p, dl_p, dr_p = _ceil_mult(n, bn), _ceil_mult(dl, bd), _ceil_mult(dr, bd)
+    # pad with -1: it matches no one-hot level, so pad samples decode to 0
+    # (padding with 0 would decode to centroid c_0 and corrupt the Gram)
+    if (n_p, dl_p) != (n, dl):
+        codes = jnp.pad(
+            codes, ((0, n_p - n), (0, dl_p - dl)), constant_values=-1)
+    if (n_p, dr_p) != (nv, dr):
+        codes_rhs = jnp.pad(
+            codes_rhs, ((0, n_p - nv), (0, dr_p - dr)), constant_values=-1)
+    cents = centroids.astype(jnp.float32)[None, :]  # (1, L)
+    grid = (dl_p // bd, dr_p // bd, n_p // bn)
+    out = pl.pallas_call(
+        _code_corr_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bd), lambda i, j, k: (k, i)),
+            pl.BlockSpec((bn, bd), lambda i, j, k: (k, j)),
+            pl.BlockSpec(cents.shape, lambda i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bd, bd), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((dl_p, dr_p), jnp.float32),
+        interpret=interpret,
+    )(codes, codes_rhs, cents)
+    return out[:dl, :dr]
+
+
+# ---------------------------------------------------------------------------
+# sign_corr_packed: XNOR + popcount Gram over bit-packed sign codes
+# ---------------------------------------------------------------------------
+
+def _popcount8(x: jax.Array) -> jax.Array:
+    """SWAR popcount of a uint8 array (pure shift/mask VPU ops)."""
+    v = x - ((x >> 1) & jnp.uint8(0x55))
+    v = (v & jnp.uint8(0x33)) + ((v >> 2) & jnp.uint8(0x33))
+    return (v + (v >> 4)) & jnp.uint8(0x0F)
+
+
+def _sign_corr_packed_kernel(a_ref, b_ref, out_ref):
+    """Grid (d_l/bd, d_r/bd, nb/bb); accumulates XOR popcounts over bytes."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    a = a_ref[...]  # (bd, bb) uint8, feature-major packed bits
+    b = b_ref[...]
+    diff = _popcount8(a[:, None, :] ^ b[None, :, :])  # (bd, bd, bb) in [0, 8]
+    out_ref[...] += jnp.sum(diff.astype(jnp.int32), axis=-1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "block_d", "block_b", "interpret"))
+def sign_corr_packed(
+    packed: jax.Array,
+    n: int,
+    packed_rhs: jax.Array | None = None,
+    *,
+    block_d: int = 128,
+    block_b: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Sign-method Gram G = U^T U directly from bit-packed codes.
+
+    Args:
+      packed: (d_l, nb) uint8, feature-major — row j holds feature j's n sign
+        bits packed 8/byte in little bit order (``quantizers.pack_codes`` /
+        ``bitpack_signs`` layout, i.e. the wire payload itself). Tail bits of
+        the last byte beyond ``n`` must be zero in every row (they then XOR
+        to zero and drop out of the identity below).
+      n: true number of samples (bits) per row; nb == ceil(n / 8).
+      packed_rhs: optional (d_r, nb) right operand for rectangular Grams.
+    Returns:
+      (d_l, d_r) float32 Gram, exactly n - 2*popcount(xor): integer-exact,
+      identical to ``sign_corr`` on the unpacked {-1,+1} codes.
+    """
+    if packed_rhs is None:
+        packed_rhs = packed
+    assert packed.dtype == jnp.uint8 and packed_rhs.dtype == jnp.uint8
+    dl, nb = packed.shape
+    dr, nbr = packed_rhs.shape
+    assert nb == nbr, (packed.shape, packed_rhs.shape)
+    bd = min(block_d, _ceil_mult(max(dl, dr), 8))
+    bb = min(block_b, _ceil_mult(nb, 128))
+    dl_p, dr_p, nb_p = _ceil_mult(dl, bd), _ceil_mult(dr, bd), _ceil_mult(nb, bb)
+    if (dl_p, nb_p) != (dl, nb):
+        packed = jnp.pad(packed, ((0, dl_p - dl), (0, nb_p - nb)))
+    if (dr_p, nb_p) != (dr, nbr):
+        packed_rhs = jnp.pad(packed_rhs, ((0, dr_p - dr), (0, nb_p - nbr)))
+    grid = (dl_p // bd, dr_p // bd, nb_p // bb)
+    pop = pl.pallas_call(
+        _sign_corr_packed_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bd, bb), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bd, bb), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((bd, bd), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((dl_p, dr_p), jnp.int32),
+        interpret=interpret,
+    )(packed, packed_rhs)
+    return (n - 2 * pop[:dl, :dr]).astype(jnp.float32)
 
 
 def _ceil_mult(x: int, m: int) -> int:

@@ -54,6 +54,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # jax<0.5 returned a one-element list
+        cost = cost[0]
     hlo = compiled.as_text()
     analysis = H.analyze(hlo)   # loop-trip-aware FLOPs/bytes/collectives
     coll = analysis["collectives"]

@@ -1,0 +1,119 @@
+"""Minimal stand-in for the `hypothesis` API used by this test suite.
+
+Installed into ``sys.modules`` by ``conftest.py`` ONLY when the real
+hypothesis package is absent (it is an optional ``dev`` extra, see
+pyproject.toml), so `import hypothesis` in test modules keeps working and
+tier-1 collection never breaks on a missing dev dependency.
+
+Supported surface (exactly what the tests use):
+
+  * ``@given(*strategies)`` — runs the test once per drawn example,
+    deterministically seeded from the test name.
+  * ``@settings(max_examples=N, deadline=...)`` — ``max_examples`` is
+    honored, everything else ignored.
+  * ``strategies.integers(lo, hi)``, ``strategies.floats(lo, hi)``,
+    ``strategies.sampled_from(seq)``.
+
+Draws are uniform plus the interval endpoints first (a crude nod to
+hypothesis's boundary-value bias). This is NOT property-based testing —
+install the real package (``pip install -e .[dev]``) for shrinking and
+adversarial example search.
+"""
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+
+__version__ = "0.0-stub"
+
+
+class _Strategy:
+    def __init__(self, corners, draw):
+        self.corners = list(corners)
+        self.draw = draw
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(
+            [min_value, max_value],
+            lambda rng: int(rng.integers(min_value, max_value + 1)),
+        )
+
+    @staticmethod
+    def floats(min_value, max_value, **_kw):
+        return _Strategy(
+            [min_value, max_value],
+            lambda rng: float(rng.uniform(min_value, max_value)),
+        )
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(
+            elements[:1], lambda rng: elements[int(rng.integers(len(elements)))]
+        )
+
+    @staticmethod
+    def booleans():
+        return _Strategy([False, True], lambda rng: bool(rng.integers(2)))
+
+
+strategies = _Strategies()
+
+
+def settings(max_examples: int = 20, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        def runner():
+            n = getattr(runner, "_stub_max_examples", None) or getattr(
+                fn, "_stub_max_examples", 20
+            )
+            rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
+            for i in range(n):
+                if i < min(len(s.corners) for s in strats):
+                    args = [s.corners[i] for s in strats]
+                else:
+                    args = [s.draw(rng) for s in strats]
+                try:
+                    fn(*args)
+                except Exception as e:  # pragma: no cover - failure reporting
+                    raise AssertionError(
+                        f"{fn.__name__} falsified on example {i}: args={args!r}"
+                    ) from e
+
+        # NOTE: no functools.wraps — pytest would follow __wrapped__ and
+        # mistake the strategy parameters for fixtures.
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        return runner
+
+    return deco
+
+
+def install():
+    """Register this module as `hypothesis` (+ submodule alias) in sys.modules."""
+    import sys
+    import types
+
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = strategies
+    mod.__version__ = __version__
+    sys.modules["hypothesis"] = mod
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "sampled_from", "booleans"):
+        setattr(st_mod, name, getattr(_Strategies, name))
+    sys.modules["hypothesis.strategies"] = st_mod
+    mod.strategies = st_mod

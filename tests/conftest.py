@@ -9,6 +9,14 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 import pytest
 
+try:  # hypothesis is a dev extra (pyproject [dev]); fall back to the stub so
+    # tier-1 collection works on a bare runtime install.
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    import _hypothesis_stub
+
+    _hypothesis_stub.install()
+
 
 @pytest.fixture(scope="session")
 def rng():

@@ -1,0 +1,240 @@
+"""GramEngine + packed/code Gram kernels: exact parity across backends on
+odd (non-block-multiple) shapes, and streaming-vs-batch through the engine.
+
+All pallas paths run interpret=True on this CPU container; sign Grams are
+integer-exact so every comparison there is array_equal, not allclose.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.gram import GramEngine, default_engine, set_default_engine
+from repro.core.quantizers import PerSymbolQuantizer, pack_codes
+from repro.core.streaming import StreamingGram
+from repro.kernels.sign_corr import code_corr, sign_corr, sign_corr_packed
+
+PALLAS = GramEngine(backend="pallas", interpret=True)
+XLA = GramEngine(backend="xla")
+NUMPY = GramEngine(backend="numpy")
+
+
+def _signs(n, d, seed):
+    rng = np.random.default_rng(seed)
+    return rng.choice([-1, 1], size=(n, d)).astype(np.int8)
+
+
+def _pack(u):
+    """(n, d) ±1 -> (d, ceil(n/8)) uint8 wire payload, zero tail bits."""
+    n = u.shape[0]
+    bits = ((u.T + 1) // 2).astype(np.int32)
+    bits = np.pad(bits, ((0, 0), (0, (-n) % 8)))
+    return jnp.asarray(np.asarray(pack_codes(jnp.asarray(bits), 1)))
+
+
+# ---------------------------------------------------------------------------
+# sign_corr_packed vs sign_corr vs numpy on odd shapes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,d", [
+    (8, 8),        # minimal
+    (37, 5),       # tiny, n not a byte multiple
+    (100, 30),     # n not a block multiple
+    (257, 129),    # both odd, d just past a 128 lane tile
+    (300, 257),    # d past two tiles
+    (1000, 7),     # byte-ragged n (1000 = 125 bytes exactly), skinny d
+    (513, 64),     # n one past a block multiple
+])
+def test_sign_corr_packed_parity_odd_shapes(n, d):
+    u = _signs(n, d, seed=n * 1000 + d)
+    want = u.astype(np.float64).T @ u.astype(np.float64)
+    packed = _pack(u)
+    got_packed = np.asarray(sign_corr_packed(packed, n, interpret=True))
+    got_dense = np.asarray(sign_corr(jnp.asarray(u), interpret=True))
+    assert np.array_equal(got_packed, want), "packed kernel != f32 reference"
+    assert np.array_equal(got_dense, want), "dense kernel != f32 reference"
+    assert np.array_equal(got_packed, got_dense)
+
+
+@pytest.mark.parametrize("bd,bb", [(8, 128), (128, 128), (64, 256)])
+def test_sign_corr_packed_block_sweep(bd, bb):
+    n, d = 203, 45
+    u = _signs(n, d, seed=7)
+    want = u.astype(np.float64).T @ u.astype(np.float64)
+    got = sign_corr_packed(_pack(u), n, block_d=bd, block_b=bb, interpret=True)
+    assert np.array_equal(np.asarray(got), want)
+
+
+def test_sign_corr_packed_rectangular():
+    n, dl, dr = 119, 11, 29
+    u = _signs(n, dl + dr, seed=11)
+    pl_, pr = _pack(u[:, :dl]), _pack(u[:, dl:])
+    want = u[:, :dl].astype(np.float64).T @ u[:, dl:].astype(np.float64)
+    got = sign_corr_packed(pl_, n, pr, interpret=True)
+    assert np.array_equal(np.asarray(got), want)
+
+
+def test_rectangular_sign_corr():
+    n = 150
+    u = _signs(n, 37, seed=3)
+    v = _signs(n, 130, seed=4)
+    want = u.astype(np.float64).T @ v.astype(np.float64)
+    got = sign_corr(jnp.asarray(u), jnp.asarray(v), interpret=True)
+    assert np.array_equal(np.asarray(got), want)
+
+
+# ---------------------------------------------------------------------------
+# code_corr: in-kernel centroid decode vs decode-then-matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rate", [1, 3, 7])
+@pytest.mark.parametrize("n,d", [(100, 30), (257, 5), (129, 130)])
+def test_code_corr_parity(rate, n, d):
+    q = PerSymbolQuantizer(rate)
+    x = jax.random.normal(jax.random.key(rate * 100 + n), (n, d))
+    codes = q.encode(x).astype(jnp.int8)
+    vals = np.asarray(q.decode(q.encode(x)))
+    want = vals.T @ vals
+    got = np.asarray(code_corr(codes, q.centroids, interpret=True))
+    # bf16 MXU tiles: Gram entries are O(n) sums, so the right error scale
+    # is absolute-per-sample — bf16 mantissa (2^-8) x O(sqrt n) accumulation
+    assert np.abs(got - want).max() / n < 0.01
+
+
+# ---------------------------------------------------------------------------
+# GramEngine: backend dispatch parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,d", [(100, 13), (257, 33)])
+def test_engine_backends_agree_sign(n, d):
+    u = _signs(n, d, seed=d)
+    want = u.astype(np.float64).T @ u.astype(np.float64)
+    packed = _pack(u)
+    for eng in (PALLAS, XLA, NUMPY):
+        assert np.array_equal(np.asarray(eng.gram(jnp.asarray(u))), want)
+        assert np.array_equal(
+            np.asarray(eng.packed_sign_gram(packed, n)), want)
+
+
+def test_engine_backends_agree_codes():
+    q = PerSymbolQuantizer(4)
+    x = jax.random.normal(jax.random.key(0), (150, 21))
+    codes = q.encode(x).astype(jnp.int8)
+    want = np.asarray(XLA.code_gram(codes, q.centroids))
+    got_np = np.asarray(NUMPY.code_gram(np.asarray(codes), q.centroids))
+    np.testing.assert_allclose(got_np, want, rtol=1e-6)
+    got_pl = np.asarray(PALLAS.code_gram(codes, q.centroids))
+    rel = np.abs(got_pl - want) / (np.abs(want) + 1.0)
+    assert rel.max() < 0.03
+
+
+def test_engine_auto_resolution_and_env_override(monkeypatch):
+    assert GramEngine().resolve() in ("pallas", "xla")  # platform-dependent
+    monkeypatch.setenv("REPRO_GRAM_BACKEND", "numpy")
+    assert GramEngine().resolve() == "numpy"
+    monkeypatch.delenv("REPRO_GRAM_BACKEND")
+    with pytest.raises(ValueError):
+        GramEngine(backend="tensorflow").resolve()
+
+
+def test_set_default_engine_roundtrip():
+    prev = set_default_engine(NUMPY)
+    try:
+        assert default_engine() is NUMPY
+    finally:
+        set_default_engine(prev)
+    assert default_engine() is prev
+
+
+# ---------------------------------------------------------------------------
+# StreamingGram through the engine: batch == stream, all ingestion formats
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method,rate", [("sign", 1), ("persymbol", 3),
+                                         ("original", 1)])
+def test_streaming_batch_equality_pallas_interpret(method, rate):
+    """Chunked updates through the interpret-mode pallas engine equal the
+    one-shot batch Gram (ragged final chunk included)."""
+    d, n = 9, 1000
+    x = np.asarray(jax.random.normal(jax.random.key(8), (n, d)), np.float32)
+    batch = StreamingGram(d=d, method=method, rate=rate, engine=PALLAS)
+    batch.update(jnp.asarray(x))
+    stream = StreamingGram(d=d, method=method, rate=rate, engine=PALLAS)
+    for i in range(0, n, 300):  # 300 does not divide 1000: ragged tail
+        stream.update(jnp.asarray(x[i:i + 300]))
+    assert stream.n == batch.n == n
+    tol = 0 if method == "sign" else 1e-3
+    np.testing.assert_allclose(
+        np.asarray(stream.gram), np.asarray(batch.gram), atol=tol, rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(stream.weights()), np.asarray(batch.weights()),
+        atol=1e-5, rtol=1e-4)
+
+
+def test_streaming_code_and_packed_ingestion_match_raw():
+    """update / update_codes / update_packed fold the SAME information: the
+    sign Gram is integer-exact across all three wire formats."""
+    d, n = 8, 512
+    x = np.asarray(jax.random.normal(jax.random.key(9), (n, d)), np.float32)
+    u = np.where(x >= 0, 1, -1).astype(np.int8)
+
+    raw = StreamingGram(d=d, method="sign", engine=PALLAS)
+    codes = StreamingGram(d=d, method="sign", engine=PALLAS)
+    packed = StreamingGram(d=d, method="sign", engine=PALLAS)
+    for i in range(0, n, 128):
+        xb, ub = x[i:i + 128], u[i:i + 128]
+        raw.update(jnp.asarray(xb))
+        codes.update_codes(jnp.asarray((ub > 0).astype(np.int8)))  # {0,1} bits
+        packed.update_packed(_pack(ub), ub.shape[0])
+    assert raw.n == codes.n == packed.n == n
+    g = np.asarray(raw.gram)
+    assert np.array_equal(g, np.asarray(codes.gram))
+    assert np.array_equal(g, np.asarray(packed.gram))
+    want = u.astype(np.float64).T @ u.astype(np.float64)
+    assert np.array_equal(g, want)
+
+
+def test_streaming_persymbol_code_ingestion():
+    d, n, rate = 6, 400, 3
+    q = PerSymbolQuantizer(rate)
+    x = jax.random.normal(jax.random.key(10), (n, d))
+    via_raw = StreamingGram(d=d, method="persymbol", rate=rate, engine=XLA)
+    via_codes = StreamingGram(d=d, method="persymbol", rate=rate, engine=XLA)
+    for i in range(0, n, 100):
+        via_raw.update(x[i:i + 100])
+        via_codes.update_codes(q.encode(x[i:i + 100]).astype(jnp.int8))
+    np.testing.assert_allclose(
+        np.asarray(via_raw.gram), np.asarray(via_codes.gram), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# quantize_fused pack=True: fused wire payload
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rate", [1, 2, 4])
+def test_quantize_fused_pack_matches_pack_codes(rate):
+    from repro.kernels.quantize import quantize_fused
+
+    per = 8 // rate
+    m, n = 37, 30 * per
+    x = jax.random.normal(jax.random.key(rate), (m, n))
+    c, v, p = quantize_fused(x, rate, interpret=True, pack=True)
+    c2, v2 = quantize_fused(x, rate, interpret=True)
+    assert bool(jnp.all(c == c2)) and bool(jnp.all(v == v2))
+    want = pack_codes(c.astype(jnp.int32), rate)
+    assert p.dtype == jnp.uint8 and p.shape == (m, n * rate // 8)
+    assert bool(jnp.all(p == want))
+
+
+def test_quantize_fused_pack_feeds_packed_gram():
+    """End-to-end 1-bit path: fused quantize+pack (feature-major) straight
+    into the XNOR+popcount Gram equals the sign Gram of the raw data."""
+    from repro.kernels.quantize import quantize_fused
+
+    d, n = 23, 96
+    x = np.asarray(jax.random.normal(jax.random.key(12), (n, d)), np.float32)
+    _, _, payload = quantize_fused(jnp.asarray(x.T), 1, interpret=True,
+                                   pack=True)
+    got = np.asarray(sign_corr_packed(payload, n, interpret=True))
+    s = np.where(x > 0, 1.0, -1.0)  # rate-1 bin boundary is x > 0
+    assert np.array_equal(got, s.T @ s)
