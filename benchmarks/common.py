@@ -28,7 +28,15 @@ def recovery_error_rate(
     tree: str = "random", rho_min: float = 0.4, rho_max: float = 0.9,
     seed0: int = 0,
 ) -> float:
-    """Empirical Pr(T_hat != T) over ``reps`` independent (tree, data) draws."""
+    """Empirical Pr(T_hat != T) over ``reps`` independent (tree, data) draws.
+
+    LEGACY REFERENCE LOOP: one Python iteration and one device->host
+    round-trip per trial. The figure drivers run on the vmapped engine
+    (``repro.core.experiments.run_trials``) instead; this loop is kept as
+    the semantic reference and as the baseline the ``trials`` benchmark
+    measures its speedup against. Per-rep seeding (tree and weights from
+    ``default_rng(seed0 + rep)``) matches ``experiments.stacked_trees``.
+    """
     bad = 0
     for rep in range(reps):
         ds = GGMDataset(d=d, tree=tree, rho_min=rho_min, rho_max=rho_max,

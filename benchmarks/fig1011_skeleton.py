@@ -6,41 +6,54 @@ samples). Metric: disagreement edges vs bit rate — the paper reports 2
 disagreements at 1 bit, 1 at 3 bits, 0 at 6 bits on the x-dimension;
 the synthetic stand-in reproduces the monotone trend with exact recovery
 by 6 bits.
+
+Both figures run on the device evaluation plane
+(``experiments.evaluate_strategies``): per method one
+quantize->Gram->Boruvka->metric chain on device, one host sync.
 """
 from __future__ import annotations
 
 import numpy as np
+import jax.numpy as jnp
 
-from repro.core import chow_liu, trees
+from repro.core import trees
+from repro.core.experiments import evaluate_strategies, learned_adjacency
+from repro.core.strategy import Strategy
 from repro.data import GGMDataset
 from .common import save_artifact
 
 N_MAD = 243_586
 
+STRATEGIES = (
+    Strategy("sign"),
+    Strategy("persymbol", rate=1),
+    Strategy("persymbol", rate=3),
+    Strategy("persymbol", rate=5),
+    Strategy("persymbol", rate=6),
+    Strategy("original"),
+)
 
-def _recover(x, edges):
-    rows = []
-    for method, rate in [("sign", 1), ("persymbol", 1), ("persymbol", 3),
-                         ("persymbol", 5), ("persymbol", 6), ("original", 0)]:
-        est = chow_liu.learn_structure(x, method=method, rate=max(rate, 1))
-        dis = trees.tree_edit_distance(edges, est) // 2  # pairs of (miss, extra)
-        key = "sign" if method == "sign" else (
-            "original" if method == "original" else f"R{rate}")
-        rows.append({"method": key, "disagreement_edges": dis})
-    return rows
+
+def _recover(x, adj_true):
+    scores = evaluate_strategies(x, adj_true, STRATEGIES)
+    return [
+        {"method": label,
+         "disagreement_edges": int(m["edit_distance"]) // 2}
+        for label, m in scores.items()
+    ]
 
 
 def run(quick: bool = False) -> dict:
     import jax
-    import jax.numpy as jnp
 
     n = 40_000 if quick else N_MAD
     ds = GGMDataset(d=20, tree="skeleton", rho_min=0.55, rho_max=0.95, seed=1)
     edges, _ = ds.structure()
+    adj_true = jnp.asarray(trees.tree_adjacency(20, edges))
 
     # Fig. 10 analogue (x dimension): data follows the tree GGM exactly.
     x = ds.sample(n, batch_seed=0)
-    rows_x = _recover(x, edges)
+    rows_x = _recover(x, adj_true)
     for r in rows_x:
         print(f"fig10(x)  {r['method']:<9} disagreements="
               f"{r['disagreement_edges']}", flush=True)
@@ -56,8 +69,8 @@ def run(quick: bool = False) -> dict:
     xz = ds_z.sample(n_z, batch_seed=0)
     g = jax.random.normal(jax.random.key(99), (n_z, 1))
     z = jnp.asarray(np.asarray(xz) * np.sqrt(1 - 0.75**2) + 0.75 * np.asarray(g))
-    ref_tree = chow_liu.learn_structure(z, method="original")
-    rows_z = _recover(z, ref_tree)
+    adj_ref = learned_adjacency(z, Strategy("original"))
+    rows_z = _recover(z, adj_ref)
     for r in rows_z:
         print(f"fig11(z)  {r['method']:<9} disagreements(vs unquantized)="
               f"{r['disagreement_edges']}", flush=True)

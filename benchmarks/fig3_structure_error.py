@@ -1,32 +1,40 @@
 """Fig. 3: structure estimation error vs n for R in {sign,1,2,3,4,inf}.
 
-Random 20-node GGMs; per (method, n) the error rate over ``reps`` runs.
+Random 20-node GGMs; per (method, n) the error rate over ``reps`` trials.
 Paper claims: sign > 1-bit per-symbol; 4-bit per-symbol ~ original.
+
+Runs on the vmapped trial engine (``repro.core.experiments.run_trials``):
+the whole (6 methods x ns x reps) sweep is a handful of compiled device
+calls with one host sync per sweep point.
 """
 from __future__ import annotations
 
-import numpy as np
+from repro.core.experiments import TrialPlan, run_trials
+from repro.core.strategy import FIG3_STRATEGIES
 
-from .common import recovery_error_rate, save_artifact
+from .common import save_artifact
 
 D = 20
 NS = (125, 250, 500, 1000, 2000, 4000)
-METHODS = [
-    ("sign", 1), ("persymbol", 1), ("persymbol", 2),
-    ("persymbol", 3), ("persymbol", 4), ("original", 0),
-]
 
 
 def run(reps: int = 120, quick: bool = False) -> dict:
     ns = NS[:4] if quick else NS
     reps = 30 if quick else reps
-    table: dict[str, list] = {}
-    for method, rate in METHODS:
-        key = {"sign": "sign", "original": "original"}.get(method, f"R{rate}")
-        errs = [recovery_error_rate(D, n, method, rate, reps) for n in ns]
-        table[key] = errs
-        print(f"fig3 {key:<9} " + " ".join(f"{e:.3f}" for e in errs), flush=True)
-    payload = {"d": D, "ns": list(ns), "reps": reps, "error": table}
+    plan = TrialPlan(d=D, ns=ns, strategies=FIG3_STRATEGIES, reps=reps)
+    res = run_trials(plan)
+    table = res.error_rate
+    for key, errs in table.items():
+        print(f"fig3 {key:<9} " + " ".join(f"{e:.3f}" for e in errs),
+              flush=True)
+    print(f"fig3 engine: {plan.trials} trials in {res.seconds:.2f}s "
+          f"({res.trials_per_s:.0f} trials/s, {res.host_syncs} host syncs)",
+          flush=True)
+    payload = {"d": D, "ns": list(ns), "reps": reps, "error": table,
+               "edit_distance": res.edit_distance,
+               "engine": {"seconds": res.seconds,
+                          "trials_per_s": res.trials_per_s,
+                          "host_syncs": res.host_syncs}}
     # paper-claim checks (soft, recorded in the artifact):
     checks = {
         "sign_beats_ps1": all(

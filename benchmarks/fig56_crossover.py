@@ -1,8 +1,9 @@
 """Figs. 5-6: crossover probability + bounds for the 3-node tree of Fig. 4
 (rho_e = 0.9, rho_e' = 0.1, shared node).
 
-Curves: Monte-Carlo crossover rate, exact tail sum, Chernoff (Lemma 3),
-Hoeffding (Lemma 4); exponents of each (Fig. 6).
+Curves: Monte-Carlo crossover rate (vmapped on device via
+``experiments.mc_sign_crossover`` — one sweep call per n), exact tail sum,
+Chernoff (Lemma 3), Hoeffding (Lemma 4); exponents of each (Fig. 6).
 """
 from __future__ import annotations
 
@@ -11,6 +12,7 @@ import jax.numpy as jnp
 
 from repro.core import bounds as B
 from repro.core import estimators as E
+from repro.core.experiments import mc_sign_crossover
 from .common import save_artifact
 
 RHO_E, RHO_EP = 0.9, 0.1
@@ -22,15 +24,9 @@ def run(reps: int = 20_000, quick: bool = False) -> dict:
     p0, p1, p2 = B.shared_node_probs(RHO_E, RHO_EP)
     t_e = float(E.theta_from_rho(jnp.asarray(RHO_E)))
     t_ep = float(E.theta_from_rho(jnp.asarray(RHO_EP)))
-    rng = np.random.default_rng(0)
     rows = []
     for n in NS:
-        xk = rng.normal(size=(reps, n))
-        xj = RHO_E * xk + np.sqrt(1 - RHO_E**2) * rng.normal(size=(reps, n))
-        xs = RHO_EP * xk + np.sqrt(1 - RHO_EP**2) * rng.normal(size=(reps, n))
-        th_e = np.mean(np.sign(xj) * np.sign(xk) > 0, axis=1)
-        th_ep = np.mean(np.sign(xk) * np.sign(xs) > 0, axis=1)
-        mc = float(np.mean(th_e <= th_ep))
+        mc = mc_sign_crossover(n, RHO_E, RHO_EP, reps)
         exact = B.crossover_exact(n, p0, p1, p2)
         cher = float(B.crossover_chernoff(n, p0, p1, p2))
         hoef = float(B.crossover_hoeffding(n, t_e, t_ep))

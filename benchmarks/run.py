@@ -16,7 +16,7 @@ import time
 from . import (ext_glasso, fig3_structure_error, fig56_crossover, fig7_star,
                fig8_rel_error, fig9_quality_quantity, fig1011_skeleton,
                ggm_comm, ggm_roofline, gram_engine, kernel_throughput,
-               roofline)
+               roofline, trials)
 
 BENCHES = {
     "fig3": fig3_structure_error.run,
@@ -31,11 +31,23 @@ BENCHES = {
     "gram": gram_engine.run,
     "kernels": kernel_throughput.run,
     "roofline": roofline.run,
+    "trials": trials.run,
 }
 
-BENCH_GRAM_JSON = os.path.join(
-    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-    "BENCH_gram.json")
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_GRAM_JSON = os.path.join(_REPO_ROOT, "BENCH_gram.json")
+BENCH_TRIALS_JSON = os.path.join(_REPO_ROOT, "BENCH_trials.json")
+
+
+def write_bench_trials(payload: dict, path: str = BENCH_TRIALS_JSON) -> str:
+    """Persist the trial-plane perf artifact: vmapped-engine trials/s (cold
+    and warm) vs the legacy per-trial loop, and the speedup."""
+    slim = {k: payload[k] for k in (
+        "backend", "d", "ns", "reps", "strategies", "trials", "engine",
+        "loop", "speedup_warm", "speedup_cold", "checks")}
+    with open(path, "w") as f:
+        json.dump(slim, f, indent=1, default=float)
+    return path
 
 
 def write_bench_gram(payload: dict, path: str = BENCH_GRAM_JSON) -> str:
@@ -60,12 +72,12 @@ def main() -> int:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default="")
     ap.add_argument("--json", action="store_true",
-                    help="write BENCH_gram.json (runs the gram bench if it "
-                         "was not already selected)")
+                    help="write BENCH_gram.json / BENCH_trials.json (runs "
+                         "the gram and trials benches if not selected)")
     args = ap.parse_args()
     names = [n for n in args.only.split(",") if n] or list(BENCHES)
-    if args.json and "gram" not in names:
-        names.append("gram")
+    if args.json:
+        names.extend(n for n in ("gram", "trials") if n not in names)
 
     failures = []
     for name in names:
@@ -75,6 +87,8 @@ def main() -> int:
             result = BENCHES[name](quick=args.quick)
             if name == "gram" and args.json:
                 print("wrote", write_bench_gram(result), flush=True)
+            if name == "trials" and args.json:
+                print("wrote", write_bench_trials(result), flush=True)
             checks = (result or {}).get("checks", {})
             bad = [k for k, v in checks.items() if not v]
             status = "PASS" if not bad else f"CHECKS-FAILED:{bad}"

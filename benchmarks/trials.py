@@ -1,0 +1,95 @@
+"""Trial-plane throughput: vmapped ``run_trials`` vs the per-trial loop.
+
+Runs a fig3-style sweep (d = 20, the six Fig. 3 strategies, >= 30 reps)
+twice through the on-device engine — cold (includes compiles) and warm
+(the steady-state cost of every later sweep in the process) — and times
+the legacy host loop (``common.recovery_error_rate``: one Python
+iteration + numpy round-trip per trial) on a calibration slice of the
+same workload. The acceptance bar is warm-engine trials/s >= 10x the
+loop; artifact: ``BENCH_trials.json`` via ``benchmarks.run --json``.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.experiments import TrialPlan, run_trials
+from repro.core.strategy import FIG3_STRATEGIES
+
+from .common import Timer, recovery_error_rate, save_artifact
+
+D = 20
+NS = (125, 250, 500, 1000, 2000, 4000)
+#: (method, n, reps) slice used to time the legacy loop — kept small so the
+#: baseline measurement doesn't dominate the benchmark's own runtime.
+LOOP_SLICE_REPS = 4
+
+
+def run(reps: int = 60, quick: bool = False) -> dict:
+    ns = NS[:4] if quick else NS
+    reps = 30 if quick else reps
+    plan = TrialPlan(d=D, ns=ns, strategies=FIG3_STRATEGIES, reps=reps)
+
+    cold = run_trials(plan)   # pays the per-(strategy, n) compiles
+    # Steady state (jit caches hot). On accelerator backends the transfer
+    # guard turns the one-sync-per-point claim into a hard assertion (an
+    # implicit per-trial device->host read-back raises; only the engine's
+    # explicit jax.device_get is allowed). On CPU, d2h reads are zero-copy
+    # and unguarded — there the regression canary is the
+    # `speedup_at_least_10x` check below: a sweep that quietly fell back
+    # to per-trial dispatch cannot clear 10x the loop's trials/s.
+    with jax.transfer_guard_device_to_host("disallow"):
+        warm = run_trials(plan)
+    print(f"trials engine: {plan.trials} trials "
+          f"cold {cold.trials_per_s:8.1f}/s ({cold.seconds:.2f}s)  "
+          f"warm {warm.trials_per_s:8.1f}/s ({warm.seconds:.2f}s)  "
+          f"syncs/point=1", flush=True)
+
+    # Legacy per-trial loop on a slice of the same sweep (sign + original
+    # at the smallest and largest n), then expressed as trials/s.
+    loop_trials = 0
+    with Timer() as t:
+        for method in ("sign", "original"):
+            for n in (ns[0], ns[-1]):
+                recovery_error_rate(D, n, method, 1, LOOP_SLICE_REPS)
+                loop_trials += LOOP_SLICE_REPS
+    loop_tps = loop_trials / max(t.seconds, 1e-9)
+    speedup_warm = warm.trials_per_s / loop_tps
+    speedup_cold = cold.trials_per_s / loop_tps
+    print(f"trials loop:   {loop_trials} trials {loop_tps:8.1f}/s "
+          f"({t.seconds:.2f}s) -> speedup warm {speedup_warm:.0f}x "
+          f"cold {speedup_cold:.1f}x", flush=True)
+
+    payload = {
+        "backend": jax.default_backend(),
+        "d": D, "ns": list(ns), "reps": reps,
+        "strategies": [s.label for s in plan.strategies],
+        "trials": plan.trials,
+        "engine": {
+            "cold_seconds": cold.seconds,
+            "cold_trials_per_s": cold.trials_per_s,
+            "warm_seconds": warm.seconds,
+            "warm_trials_per_s": warm.trials_per_s,
+            "host_syncs": warm.host_syncs,
+            "points": plan.points,
+        },
+        "loop": {
+            "trials": loop_trials,
+            "seconds": t.seconds,
+            "trials_per_s": loop_tps,
+        },
+        "speedup_warm": speedup_warm,
+        "speedup_cold": speedup_cold,
+        "error": warm.error_rate,
+        "checks": {
+            "one_sync_per_point": warm.host_syncs == plan.points,
+            "speedup_at_least_10x": speedup_warm >= 10.0,
+            "fig3_scale": D == 20 and len(plan.strategies) == 6
+            and reps >= 30,
+        },
+    }
+    save_artifact("trials_throughput", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -3,35 +3,47 @@
 Two MWST implementations with identical tie-breaking semantics:
 
 * ``kruskal_mst`` — the paper's choice (§3): host-side numpy, sort edges by
-  descending weight and union-find. Reference implementation.
+  descending weight and union-find. Reference implementation (a spanning
+  forest with the threshold at -inf).
 * ``boruvka_mst`` — TPU-native adaptation: Boruvka's algorithm is O(log d)
   rounds of per-component max-reductions, which vectorizes as jnp reductions
-  and scatters — jit-able and usable inside ``shard_map`` on device. The
-  Kruskal algorithm is inherently sequential (data-dependent union-find), so
-  this is the hardware adaptation of the paper's central-machine step.
+  and scatters — jit-able, vmap-able over stacked weight matrices, and
+  usable inside ``shard_map`` on device. The Kruskal algorithm is inherently
+  sequential (data-dependent union-find), so this is the hardware adaptation
+  of the paper's central-machine step.
 
 Both depend only on the ORDER of the weights (as the paper notes for
 Kruskal); we make ties well-defined by ranking flattened weights with a
 stable sort, so both algorithms agree exactly on any input.
+
+Device vs host flow: with ``backend="boruvka"`` the weight matrix feeds
+``boruvka_mst`` directly as a JAX array and the result is the bool
+adjacency — nothing bounces through numpy. Converting an adjacency to the
+human-facing edge list (:func:`adjacency_to_edges`) is an explicit host
+step, taken only at the edge-list API surface.
 """
 from __future__ import annotations
-
-from functools import partial
 
 import numpy as np
 import jax
 import jax.numpy as jnp
+
+from .strategy import Strategy, as_strategy
 
 
 # --------------------------------------------------------------------------
 # Host-side Kruskal (reference; the algorithm named in the paper)
 # --------------------------------------------------------------------------
 
-def kruskal_mst(weights: np.ndarray) -> list[tuple[int, int]]:
-    """Max-weight spanning tree via Kruskal. ``weights``: symmetric (d, d).
+def kruskal_forest(weights: np.ndarray, min_weight: float) -> list[tuple[int, int]]:
+    """Maximum-weight spanning FOREST: Kruskal that stops adding edges whose
+    weight is below ``min_weight``. With MI weights this is the thresholded
+    Chow-Liu forest of Tan-Anandkumar-Willsky (ref. [25] of the paper) —
+    the natural estimator when the true graph may be disconnected.
 
     Ties are broken by smaller row-major flat index (stable sort), matching
-    :func:`boruvka_mst`.
+    :func:`boruvka_mst`. ``min_weight=-inf`` yields the spanning tree
+    (:func:`kruskal_mst`).
     """
     w = np.asarray(weights, dtype=np.float64)
     d = w.shape[0]
@@ -48,6 +60,8 @@ def kruskal_mst(weights: np.ndarray) -> list[tuple[int, int]]:
 
     edges: list[tuple[int, int]] = []
     for idx in order:
+        if vals[idx] < min_weight:
+            break
         j, k = int(iu[idx]), int(ju[idx])
         rj, rk = find(j), find(k)
         if rj != rk:
@@ -56,6 +70,14 @@ def kruskal_mst(weights: np.ndarray) -> list[tuple[int, int]]:
             if len(edges) == d - 1:
                 break
     return edges
+
+
+def kruskal_mst(weights: np.ndarray) -> list[tuple[int, int]]:
+    """Max-weight spanning tree via Kruskal. ``weights``: symmetric (d, d).
+
+    The no-threshold special case of :func:`kruskal_forest`.
+    """
+    return kruskal_forest(weights, min_weight=-np.inf)
 
 
 # --------------------------------------------------------------------------
@@ -81,7 +103,7 @@ def _rank_weights(weights: jax.Array) -> jax.Array:
     return jnp.where(jnp.eye(d, dtype=bool), -1, r)
 
 
-@partial(jax.jit, static_argnames=())
+@jax.jit
 def boruvka_mst(weights: jax.Array) -> jax.Array:
     """Max-weight spanning tree via parallel Boruvka.
 
@@ -89,6 +111,10 @@ def boruvka_mst(weights: jax.Array) -> jax.Array:
       weights: symmetric (d, d) edge-weight matrix (diagonal ignored).
     Returns:
       (d, d) bool adjacency of the MWST (symmetric).
+
+    The round body is idempotent once a single component remains, so the
+    while_loop batches correctly under ``vmap`` (trials that converge early
+    simply coast while the stragglers finish).
     """
     d = weights.shape[0]
     W = _rank_weights(weights)  # distinct int ranks, diag = -1
@@ -133,7 +159,8 @@ def boruvka_mst(weights: jax.Array) -> jax.Array:
     return sel
 
 
-def adjacency_to_edges(adj: np.ndarray) -> list[tuple[int, int]]:
+def adjacency_to_edges(adj) -> list[tuple[int, int]]:
+    """Explicit host step: symmetric bool adjacency -> canonical edge list."""
     iu, ju = np.nonzero(np.triu(np.asarray(adj), k=1))
     return [(int(a), int(b)) for a, b in zip(iu, ju)]
 
@@ -147,8 +174,28 @@ def chow_liu(weights, backend: str = "kruskal") -> list[tuple[int, int]]:
     if backend == "kruskal":
         return kruskal_mst(np.asarray(weights))
     elif backend == "boruvka":
-        return adjacency_to_edges(np.asarray(boruvka_mst(jnp.asarray(weights))))
+        # device solve on the weights as-is; host conversion only at the
+        # edge-list API surface
+        return adjacency_to_edges(boruvka_mst(jnp.asarray(weights)))
     raise ValueError(f"unknown backend {backend!r}")
+
+
+def learn_structure_jit(
+    x: jax.Array,
+    strategy: Strategy = Strategy(),
+    engine=None,
+) -> jax.Array:
+    """End-to-end Chow-Liu that STAYS ON DEVICE: (n, d) samples -> (d, d)
+    bool MWST adjacency.
+
+    Pure and jit-able (``strategy``/``engine`` are trace-time constants);
+    this is the per-trial unit the experiments engine vmaps. The MWST is
+    always the device Boruvka solver — exactly equal to Kruskal by the
+    shared rank construction.
+    """
+    from . import estimators
+
+    return boruvka_mst(estimators.strategy_weights(x, strategy, engine=engine))
 
 
 def learn_structure(
@@ -157,8 +204,12 @@ def learn_structure(
     rate: int = 1,
     backend: str = "kruskal",
     engine=None,
+    strategy: Strategy | None = None,
 ) -> list[tuple[int, int]]:
-    """End-to-end centralized Chow-Liu on (n, d) data.
+    """End-to-end centralized Chow-Liu on (n, d) data; returns edge list.
+
+    Accepts either a :class:`~repro.core.strategy.Strategy` (preferred) or
+    the legacy loose kwargs:
 
     method:
       'sign'      — sign method (§4): 1-bit codes, MI of signs (eq. 4).
@@ -167,53 +218,19 @@ def learn_structure(
     engine: ``repro.core.gram.GramEngine`` the pairwise Gram dispatches
       through (None = process default). Codes feed the Gram backend as int8
       (sign) / int8 bin codes with in-kernel centroid decode (persymbol).
+
+    With ``backend='boruvka'`` (``strategy.mst``) the weights feed the
+    device solver directly; only the final edge list crosses to the host.
     """
-    from . import estimators, quantizers
+    from . import estimators
 
+    if strategy is None:
+        strategy = as_strategy(
+            None, method=method,
+            rate=max(rate, 1) if method == "persymbol" else 1,
+            mst=backend)
     x = jnp.asarray(x)
-    if method == "sign":
-        w = estimators.sign_method_weights(
-            quantizers.sign_codes(x), engine=engine)
-    elif method == "persymbol":
-        q = quantizers.PerSymbolQuantizer(rate)
-        codes = q.encode(x).astype(jnp.int8)
-        w = estimators.persymbol_code_weights(codes, q.centroids, engine=engine)
-    elif method == "original":
-        w = estimators.gaussian_weights(x, engine=engine)
-    else:
-        raise ValueError(f"unknown method {method!r}")
-    return chow_liu(np.asarray(w), backend=backend)
-
-
-# --------------------------------------------------------------------------
-# Forest learning (Tan et al. 2011 style): stop Kruskal below a threshold
-# --------------------------------------------------------------------------
-
-def kruskal_forest(weights: np.ndarray, min_weight: float) -> list[tuple[int, int]]:
-    """Maximum-weight spanning FOREST: Kruskal that stops adding edges whose
-    weight is below ``min_weight``. With MI weights this is the thresholded
-    Chow-Liu forest of Tan-Anandkumar-Willsky (ref. [25] of the paper) —
-    the natural estimator when the true graph may be disconnected."""
-    w = np.asarray(weights, dtype=np.float64)
-    d = w.shape[0]
-    iu, ju = np.triu_indices(d, k=1)
-    vals = w[iu, ju]
-    order = np.argsort(-vals, kind="stable")
-    parent = np.arange(d)
-
-    def find(a: int) -> int:
-        while parent[a] != a:
-            parent[a] = parent[parent[a]]
-            a = parent[a]
-        return a
-
-    edges: list[tuple[int, int]] = []
-    for idx in order:
-        if vals[idx] < min_weight:
-            break
-        j, k = int(iu[idx]), int(ju[idx])
-        rj, rk = find(j), find(k)
-        if rj != rk:
-            parent[rj] = rk
-            edges.append((j, k))
-    return edges
+    w = estimators.strategy_weights(x, strategy, engine=engine)
+    if strategy.mst == "boruvka":
+        return adjacency_to_edges(boruvka_mst(w))
+    return kruskal_mst(np.asarray(w))

@@ -44,6 +44,7 @@ from . import estimators
 from .chow_liu import boruvka_mst
 from .gram import GramEngine, resolve_engine
 from .quantizers import PerSymbolQuantizer, pack_codes, unpack_codes
+from .strategy import Strategy
 
 
 def communication_bits(n: int, d: int, rate: int) -> int:
@@ -65,9 +66,26 @@ def _weights_from_gram(gram: jax.Array, method: str, n) -> jax.Array:
     return -0.5 * jnp.log1p(-r2)
 
 
+def _resolve_strategy_kwargs(
+    strategy: Strategy | None, method: str, rate: int, compute: str, wire: str
+) -> tuple[str, int, str, str]:
+    """Strategy (preferred) -> the runtime's (method, rate, compute, wire).
+
+    ``method='original'`` maps onto the float32 wire: the raw samples are
+    gathered and the unquantized eq.-1 weights computed — exactly the
+    centralized-equivalent baseline this runtime already implements.
+    """
+    if strategy is None:
+        return method, rate, compute, wire
+    if strategy.method == "original":
+        return "sign", 1, strategy.placement, "float32"
+    return strategy.method, strategy.rate, strategy.placement, strategy.wire
+
+
 def build_weights_fn(
     mesh: Mesh,
     *,
+    strategy: Strategy | None = None,
     method: Literal["sign", "persymbol"] = "sign",
     rate: int = 1,
     data_axis: str = "data",
@@ -77,6 +95,10 @@ def build_weights_fn(
     engine: GramEngine | None = None,
 ):
     """shard_map pipeline (n, d) samples -> (d, d) Chow-Liu weights.
+
+    ``strategy`` (a :class:`~repro.core.strategy.Strategy`) is the
+    declarative form of the loose ``method``/``rate``/``compute``/``wire``
+    kwargs and wins over them when given.
 
     Wire formats for the model-axis all-gather (THE communication the
     paper counts):
@@ -96,6 +118,8 @@ def build_weights_fn(
     traced backend — 'pallas' or 'xla' — inside shard_map; None = process
     default, which auto-selects per platform).
     """
+    method, rate, compute, wire = _resolve_strategy_kwargs(
+        strategy, method, rate, compute, wire)
     quant = PerSymbolQuantizer(rate) if method == "persymbol" else None
     if wire == "packed":
         assert method == "sign" or 8 % rate == 0
@@ -185,6 +209,7 @@ def distributed_weights(
     x: jax.Array,
     mesh: Mesh,
     *,
+    strategy: Strategy | None = None,
     method: Literal["sign", "persymbol"] = "sign",
     rate: int = 1,
     data_axis: str = "data",
@@ -198,12 +223,14 @@ def distributed_weights(
     Args:
       x: (n, d) samples; will be placed as P(data_axis, model_axis) — each
         device holds a (n/D, d/M) block, i.e. the paper's vertical partition.
+      strategy: declarative Strategy (wins over the loose kwargs).
     Returns:
       (d, d) weight matrix, fully replicated.
     """
     fn, sharding = build_weights_fn(
-        mesh, method=method, rate=rate, data_axis=data_axis,
-        model_axis=model_axis, compute=compute, wire=wire, engine=engine)
+        mesh, strategy=strategy, method=method, rate=rate,
+        data_axis=data_axis, model_axis=model_axis, compute=compute,
+        wire=wire, engine=engine)
     x = jax.device_put(x, sharding)
     return jax.jit(fn)(x)
 
@@ -212,18 +239,27 @@ def distributed_learn_structure(
     x: jax.Array,
     mesh: Mesh,
     *,
+    strategy: Strategy | None = None,
     method: Literal["sign", "persymbol"] = "sign",
     rate: int = 1,
-    backend: str = "boruvka",
+    backend: str | None = None,
     **kw,
 ) -> list[tuple[int, int]]:
-    """End-to-end distributed Chow-Liu: returns the estimated tree edges."""
-    w = distributed_weights(x, mesh, method=method, rate=rate, **kw)
+    """End-to-end distributed Chow-Liu: returns the estimated tree edges.
+
+    The MWST solver comes from ``backend`` if given, else
+    ``strategy.mst``, else the on-device Boruvka default.
+    """
+    w = distributed_weights(x, mesh, strategy=strategy, method=method,
+                            rate=rate, **kw)
+    if backend is None:
+        backend = strategy.mst if strategy is not None else "boruvka"
     if backend == "boruvka":
-        adj = np.asarray(jax.jit(boruvka_mst)(w))
         from .chow_liu import adjacency_to_edges
 
-        return adjacency_to_edges(adj)
+        # device solve on the replicated weights; host conversion only at
+        # the edge-list surface
+        return adjacency_to_edges(boruvka_mst(w))
     from .chow_liu import kruskal_mst
 
     return kruskal_mst(np.asarray(w))

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from .gram import GramEngine, resolve_engine
+from .strategy import Strategy
 
 
 def theta_hat(u: jax.Array, *, engine: GramEngine | None = None) -> jax.Array:
@@ -142,3 +143,34 @@ def gaussian_weights(
 ) -> jax.Array:
     """Centralized (unquantized) baseline: MI from the sample correlation."""
     return mi_gaussian(sample_correlation(x, engine=engine))
+
+
+def strategy_weights(
+    x: jax.Array,
+    strategy: Strategy,
+    *,
+    engine: GramEngine | None = None,
+) -> jax.Array:
+    """(n, d) raw samples -> (d, d) Chow-Liu weight matrix for a Strategy.
+
+    The single declarative entry point over the per-method estimators:
+    quantizes per ``strategy.method``/``rate``, honors ``strategy.wire``
+    (a 1-bit packed sign payload is contracted directly when n is a
+    multiple of 8), and dispatches the Gram through ``engine``. Pure and
+    jit-able with ``strategy`` as a trace-time constant — the weights
+    stage of the vmapped trial plane.
+    """
+    from .quantizers import PerSymbolQuantizer, pack_codes, sign_codes
+
+    if strategy.method == "original":
+        return gaussian_weights(x, engine=engine)
+    if strategy.method == "sign":
+        n = x.shape[0]
+        if strategy.wire == "packed" and n % 8 == 0:
+            payload = pack_codes(
+                jnp.swapaxes((x >= 0).astype(jnp.int8), 0, 1), 1)
+            return sign_method_weights_packed(payload, n, engine=engine)
+        return sign_method_weights(sign_codes(x), engine=engine)
+    q = PerSymbolQuantizer(strategy.rate)
+    codes = q.encode(x).astype(jnp.int8)
+    return persymbol_code_weights(codes, q.centroids, engine=engine)

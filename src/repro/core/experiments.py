@@ -1,0 +1,375 @@
+"""On-device trial plane: vmapped Monte-Carlo sweeps for the paper figures.
+
+The paper's results are all Monte-Carlo estimates — Pr(T_hat != T) over
+hundreds of (tree, data, method, R, n) trials (Figs. 3-11). The reference
+loop (``benchmarks.common.recovery_error_rate``) executes one trial at a
+time through Python with a host numpy round-trip per trial. This module
+replaces it with a batched engine:
+
+* every trial's tree is lowered to the topological parent-array form
+  (``trees.topological_parents``) and the whole pipeline
+
+      sample_tree_ggm -> quantize -> Gram -> weights -> boruvka_mst
+                      -> structure metrics
+
+  is one pure jit-able function ``vmap``-ed over the trial axis;
+* :func:`run_trials` drives a declarative :class:`TrialPlan` (d, sample
+  sizes, :class:`~repro.core.strategy.Strategy` list, reps) entirely on
+  device — exactly ONE ``jax.block_until_ready`` host sync per
+  (strategy, n) sweep point, no per-trial Python loop, no numpy in the
+  trial body;
+* :func:`mc_sign_crossover` / :func:`mc_persymbol_corr_error` are the
+  analogous vmapped engines for the scalar Monte-Carlo curves of
+  Figs. 5-6, 8 and 9.
+
+Trees (host Prüfer/BFS, O(reps * d)) and the final scalar read-back are
+the only host work; everything between is compiled once per
+(strategy, n) shape and reused across sweeps in the process.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import estimators, sampler, trees
+from .chow_liu import boruvka_mst
+from .gram import GramEngine, resolve_engine
+from .quantizers import PerSymbolQuantizer
+from .strategy import FIG3_STRATEGIES, Strategy
+
+TREE_KINDS = ("random", "star", "chain", "skeleton")
+
+
+# --------------------------------------------------------------------------
+# Declarative sweep plan + result
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TrialPlan:
+    """A full Monte-Carlo sweep: reps trials per (strategy, n) point.
+
+    Mirrors the knobs of the reference loop (``GGMDataset`` + per-rep
+    seeds): trial ``rep`` draws its tree and edge correlations from
+    ``np.random.default_rng(seed0 + rep)`` — topology per ``tree`` kind,
+    correlations Uniform[rho_min, rho_max] — and its samples from a PRNG
+    key folded per rep.
+    """
+
+    d: int
+    ns: tuple[int, ...]
+    strategies: tuple[Strategy, ...] = FIG3_STRATEGIES
+    reps: int = 30
+    tree: str = "random"
+    rho_min: float = 0.4
+    rho_max: float = 0.9
+    seed0: int = 0
+
+    def __post_init__(self):
+        if self.tree not in TREE_KINDS:
+            raise ValueError(f"unknown tree kind {self.tree!r}")
+        if self.tree == "skeleton" and self.d != 20:
+            raise ValueError("skeleton topology is the 20-joint body")
+        if self.reps < 1 or self.d < 2:
+            raise ValueError("need reps >= 1 and d >= 2")
+        object.__setattr__(self, "ns", tuple(int(n) for n in self.ns))
+        object.__setattr__(self, "strategies", tuple(self.strategies))
+
+    @property
+    def points(self) -> int:
+        return len(self.ns) * len(self.strategies)
+
+    @property
+    def trials(self) -> int:
+        return self.points * self.reps
+
+
+@dataclasses.dataclass
+class TrialResult:
+    """Per-(strategy, n) Monte-Carlo metrics + engine telemetry."""
+
+    plan: TrialPlan
+    #: label -> [Pr(T_hat != T) per n in plan.ns]
+    error_rate: dict[str, list[float]]
+    #: label -> [mean edge symmetric difference |E_hat ^ E| per n]
+    edit_distance: dict[str, list[float]]
+    #: label -> [mean edge F1 per n]
+    edge_f1: dict[str, list[float]]
+    seconds: float
+    host_syncs: int
+
+    @property
+    def trials_per_s(self) -> float:
+        return self.plan.trials / max(self.seconds, 1e-9)
+
+
+# --------------------------------------------------------------------------
+# Host setup: stacked trees + trial keys (O(reps * d), outside the sweep)
+# --------------------------------------------------------------------------
+
+def _draw_tree(kind: str, d: int, rng: np.random.Generator):
+    if kind == "random":
+        return trees.random_tree(d, rng)
+    if kind == "star":
+        return trees.star_tree(d)
+    if kind == "chain":
+        return trees.chain_tree(d)
+    return list(trees.SKELETON_EDGES)
+
+
+def stacked_trees(
+    plan: TrialPlan,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Draw the plan's ``reps`` ground-truth trees as stacked device arrays.
+
+    Returns ``(parents, rhos, adj_true)`` of shapes (reps, d), (reps, d)
+    and (reps, d, d): the topological parent form each trial samples from
+    and the true adjacency each trial's estimate is scored against.
+    """
+    d = plan.d
+    parents = np.zeros((plan.reps, d), np.int32)
+    rhos = np.zeros((plan.reps, d), np.float32)
+    for rep in range(plan.reps):
+        rng = np.random.default_rng(plan.seed0 + rep)
+        edges = _draw_tree(plan.tree, d, rng)
+        w = rng.uniform(plan.rho_min, plan.rho_max, size=d - 1)
+        parents[rep], rhos[rep], _ = trees.topological_parents(d, edges, w)
+    parents_j = jnp.asarray(parents)
+    rhos_j = jnp.asarray(rhos)
+    adj_true = trees.adjacency_from_parents(parents_j)
+    return parents_j, rhos_j, adj_true
+
+
+def trial_keys(plan: TrialPlan) -> jax.Array:
+    """(reps,) PRNG keys: one independent sampling stream per trial."""
+    base = jax.random.key(plan.seed0)
+    return jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+        base, jnp.arange(plan.reps, dtype=jnp.uint32))
+
+
+# --------------------------------------------------------------------------
+# Compiled stages (cached per strategy / shape; jit handles shape polymorphism)
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _sample_fn(n: int):
+    """jit: (keys, parents, rhos) -> (reps, n, d) samples, one per trial."""
+    return jax.jit(
+        lambda keys, parents, rhos:
+        sampler.sample_tree_ggm_batch(keys, n, parents, rhos))
+
+
+@functools.lru_cache(maxsize=None)
+def _weights_fn(strategy: Strategy, engine: GramEngine):
+    """jit: (reps, n, d) samples -> (reps, d, d) Chow-Liu weights.
+
+    Callers must pass a RESOLVED engine (never None): the closure is
+    cached, so a baked-in None would pin whatever process default was
+    live at first trace and silently ignore a later
+    ``set_default_engine``.
+    """
+    return jax.jit(jax.vmap(
+        lambda x: estimators.strategy_weights(x, strategy, engine=engine)))
+
+
+@functools.lru_cache(maxsize=None)
+def _mst_metrics_fn():
+    """jit: (reps, d, d) weights + true adjacencies -> stacked means.
+
+    One compile covers every (strategy, n) point of a sweep — the MWST +
+    metric stage only sees (reps, d, d) shapes.
+    """
+    def f(w_batch: jax.Array, adj_true: jax.Array) -> jax.Array:
+        est = jax.vmap(boruvka_mst)(w_batch)
+        err = trees.structure_error(est, adj_true).astype(jnp.float32)
+        ham = trees.structure_hamming(est, adj_true).astype(jnp.float32)
+        f1 = trees.edge_f1(est, adj_true)
+        return jnp.stack([err.mean(), ham.mean(), f1.mean()])
+
+    return jax.jit(f)
+
+
+# --------------------------------------------------------------------------
+# The sweep engine
+# --------------------------------------------------------------------------
+
+def run_trials(
+    plan: TrialPlan,
+    *,
+    engine: GramEngine | None = None,
+) -> TrialResult:
+    """Execute a full Monte-Carlo sweep on device.
+
+    For each n the trial data (reps, n, d) is sampled ONCE and shared by
+    every strategy (the reference loop's semantics: methods see the same
+    draws). Per (strategy, n) point the chain
+
+        quantize -> Gram -> weights -> vmap(boruvka_mst) -> metrics
+
+    runs as compiled device code over the whole trial axis; the only host
+    interaction is the single 3-float metric read-back per point.
+
+    The MWST inside the trial plane is always the device Boruvka solver —
+    exact-equal to host Kruskal by the shared rank construction (so a
+    ``Strategy(mst='kruskal')`` measures identically here).
+
+    The per-point read-back is an EXPLICIT ``jax.device_get``, so the
+    sweep body stays clean under ``jax.transfer_guard_device_to_host
+    ("disallow")`` — on accelerator backends that guard hard-fails any
+    implicit per-trial host transfer sneaking back in (on CPU, d2h reads
+    are zero-copy and unguarded; the trials benchmark's >= 10x-the-loop
+    check is the regression canary there).
+    """
+    engine = resolve_engine(engine)
+    parents, rhos, adj_true = stacked_trees(plan)
+    keys = trial_keys(plan)
+    metrics_fn = _mst_metrics_fn()
+    labels = [s.label for s in plan.strategies]
+    if len(set(labels)) != len(labels):
+        raise ValueError(f"duplicate strategy labels: {labels}")
+    error_rate = {lab: [] for lab in labels}
+    edit_distance = {lab: [] for lab in labels}
+    edge_f1 = {lab: [] for lab in labels}
+    syncs = 0
+    t0 = time.perf_counter()
+    for n in plan.ns:
+        x = _sample_fn(n)(keys, parents, rhos)  # async; shared across methods
+        for strat, lab in zip(plan.strategies, labels):
+            w = _weights_fn(strat, engine)(x)
+            m = metrics_fn(w, adj_true)
+            # THE host sync for this (strategy, n) point (explicit d2h)
+            m = jax.device_get(jax.block_until_ready(m))
+            syncs += 1
+            error_rate[lab].append(float(m[0]))
+            edit_distance[lab].append(float(m[1]))
+            edge_f1[lab].append(float(m[2]))
+    seconds = time.perf_counter() - t0
+    return TrialResult(
+        plan=plan, error_rate=error_rate, edit_distance=edit_distance,
+        edge_f1=edge_f1, seconds=seconds, host_syncs=syncs)
+
+
+# --------------------------------------------------------------------------
+# Single-dataset evaluation (Figs. 10-11: one big x, several strategies)
+# --------------------------------------------------------------------------
+
+def learned_adjacency(
+    x: jax.Array,
+    strategy: Strategy,
+    *,
+    engine: GramEngine | None = None,
+) -> jax.Array:
+    """Device-side structure estimate for one (n, d) dataset: the
+    sample->quantize->Gram->Boruvka chain, returning the bool adjacency."""
+    from .chow_liu import learn_structure_jit
+
+    return learn_structure_jit(
+        jnp.asarray(x), strategy, engine=resolve_engine(engine))
+
+
+def evaluate_strategies(
+    x: jax.Array,
+    adj_true: jax.Array,
+    strategies: Sequence[Strategy],
+    *,
+    engine: GramEngine | None = None,
+) -> dict[str, dict[str, float]]:
+    """Score several strategies on ONE dataset against a reference
+    adjacency, on device; one host sync per strategy.
+
+    Returns ``{label: {error, edit_distance, edge_f1}}`` where
+    ``edit_distance`` is the edge symmetric difference |E_hat ^ E_ref|
+    (host ``tree_edit_distance`` semantics).
+    """
+    x = jnp.asarray(x)
+    adj_true = jnp.asarray(adj_true)
+    out: dict[str, dict[str, float]] = {}
+    for strat in strategies:
+        est = learned_adjacency(x, strat, engine=engine)
+        m = jnp.stack([
+            trees.structure_error(est, adj_true).astype(jnp.float32),
+            trees.structure_hamming(est, adj_true).astype(jnp.float32),
+            trees.edge_f1(est, adj_true),
+        ])
+        m = jax.device_get(jax.block_until_ready(m))
+        out[strat.label] = {
+            "error": float(m[0]),
+            "edit_distance": float(m[1]),
+            "edge_f1": float(m[2]),
+        }
+    return out
+
+
+# --------------------------------------------------------------------------
+# Scalar Monte-Carlo engines (Figs. 5-6, 8, 9) — vmapped, one sync per call
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _crossover_fn(n: int, reps: int):
+    @jax.jit
+    def f(key: jax.Array, rho_e: jax.Array, rho_ep: jax.Array) -> jax.Array:
+        kk, kj, ks = jax.random.split(key, 3)
+        xk = jax.random.normal(kk, (reps, n), jnp.float32)
+        xj = rho_e * xk + jnp.sqrt(1 - rho_e**2) * jax.random.normal(
+            kj, (reps, n), jnp.float32)
+        xs = rho_ep * xk + jnp.sqrt(1 - rho_ep**2) * jax.random.normal(
+            ks, (reps, n), jnp.float32)
+        th_e = jnp.mean(jnp.sign(xj) * jnp.sign(xk) > 0, axis=1)
+        th_ep = jnp.mean(jnp.sign(xk) * jnp.sign(xs) > 0, axis=1)
+        return jnp.mean(th_e <= th_ep)
+
+    return f
+
+
+def mc_sign_crossover(
+    n: int, rho_e: float, rho_ep: float, reps: int, seed: int = 0
+) -> float:
+    """Monte-Carlo Pr(theta_hat_e <= theta_hat_e') for the Fig. 4 shared-
+    node pair — the crossover event of Figs. 5-6 — over ``reps`` vmapped
+    trials of n samples each (one device sweep, one host sync)."""
+    out = _crossover_fn(n, reps)(
+        jax.random.key(seed), jnp.float32(rho_e), jnp.float32(rho_ep))
+    return float(jax.device_get(jax.block_until_ready(out)))
+
+
+@functools.lru_cache(maxsize=None)
+def _corr_err_fn(n: int, rate: int, reps: int, against_empirical: bool):
+    q = PerSymbolQuantizer(rate)
+
+    @jax.jit
+    def f(key: jax.Array, rho: jax.Array) -> jax.Array:
+        kx, ke = jax.random.split(key)
+        x = jax.random.normal(kx, (reps, n), jnp.float32)
+        y = rho * x + jnp.sqrt(1 - rho**2) * jax.random.normal(
+            ke, (reps, n), jnp.float32)
+        est = jnp.mean(q.quantize(x) * q.quantize(y), axis=1)
+        ref = jnp.mean(x * y, axis=1) if against_empirical else rho
+        return jnp.mean(jnp.abs(ref - est))
+
+    return f
+
+
+def mc_persymbol_corr_error(
+    n: int,
+    rho: float,
+    rate: int,
+    reps: int,
+    *,
+    against_empirical: bool = False,
+    seed: int = 0,
+) -> float:
+    """Vmapped Monte-Carlo E|ref - mean(x_q * y_q)| for the R-bit
+    per-symbol quantizer on a correlated Gaussian pair.
+
+    ``against_empirical=True`` scores against the unquantized empirical
+    correlation (the Fig. 8 relative error); False scores against the true
+    rho (the Fig. 9 estimation error under a fixed bit budget).
+    """
+    out = _corr_err_fn(n, rate, reps, against_empirical)(
+        jax.random.key(seed), jnp.float32(rho))
+    return float(jax.device_get(jax.block_until_ready(out)))

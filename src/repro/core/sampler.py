@@ -1,21 +1,29 @@
 """Sampling from tree-structured GGMs.
 
-Two samplers are provided:
+Three samplers are provided:
   * ``sample_ggm`` — generic: Cholesky of the full correlation matrix.
   * ``sample_tree_ggm`` — topological: exploits the tree factorization
     p(x) = p(x_root) prod p(x_child | x_parent); for an edge (p, c) with
-    correlation rho the conditional is N(rho * x_p, 1 - rho^2). This is O(n*d),
-    numerically exact, and is the sampler the paper's synthetic experiments
-    imply (random weighted tree -> eq. 24 covariance -> i.i.d. normals).
+    correlation rho the conditional is N(rho * x_p, 1 - rho^2). This is the
+    sampler the paper's synthetic experiments imply (random weighted tree
+    -> eq. 24 covariance -> i.i.d. normals).
+  * ``sample_tree_ggm_parents`` — the same law in topological parent-array
+    form (see ``trees.topological_parents``): a single matmul against the
+    path-product mixer, pure and jit-able with no host preprocessing, and
+    ``sample_tree_ggm_batch`` vmaps it over stacked (key, parent, rho)
+    trial axes — the sampling stage of the on-device trial plane.
 
-Both are pure JAX and jit-able; the topological sampler is expressed as a
-scan over a BFS ordering so it lowers cleanly on any backend.
+All samplers are exact: x = M @ (c * z) with M the unit lower-triangular
+path-product matrix solves the conditional recursion in closed form, so
+cov(x) is exactly the eq.-24 correlation matrix.
 """
 from __future__ import annotations
 
 import numpy as np
 import jax
 import jax.numpy as jnp
+
+from . import trees
 
 
 def bfs_order(d: int, edges: list[tuple[int, int]], root: int = 0):
@@ -43,6 +51,42 @@ def bfs_order(d: int, edges: list[tuple[int, int]], root: int = 0):
     return np.array(order), np.array(parent), np.array(pedge)
 
 
+def sample_tree_ggm_parents(
+    key: jax.Array,
+    n: int,
+    parent: jax.Array,
+    rho: jax.Array,
+) -> jax.Array:
+    """Draw ``n`` samples from the tree GGM in parent-array form.
+
+    ``parent``/``rho``: (d,) topological arrays (``parent[t] < t``,
+    ``rho[0] = 0``). Pure jnp with static shapes — jit-able and the unit
+    the trial plane vmaps over. Returns (n, d) float32, unit variances.
+    """
+    d = parent.shape[0]
+    rho = jnp.asarray(rho, jnp.float32)
+    c = jnp.sqrt(jnp.clip(1.0 - jnp.square(rho), 0.0, None)).at[0].set(1.0)
+    z = jax.random.normal(key, (n, d), dtype=jnp.float32)
+    M = trees.path_product_mixer(parent, rho)
+    return (z * c[None, :]) @ M.T
+
+
+def sample_tree_ggm_batch(
+    keys: jax.Array,
+    n: int,
+    parents: jax.Array,
+    rhos: jax.Array,
+) -> jax.Array:
+    """Batched trial sampler: one tree GGM per leading index.
+
+    ``keys``: (t,) PRNG keys; ``parents``/``rhos``: (t, d) stacked
+    topological arrays. Returns (t, n, d) float32 — the data plane of
+    ``experiments.run_trials``, one vmapped call for all trials.
+    """
+    return jax.vmap(sample_tree_ggm_parents, in_axes=(0, None, 0, 0))(
+        keys, n, parents, rhos)
+
+
 def sample_tree_ggm(
     key: jax.Array,
     n: int,
@@ -52,21 +96,16 @@ def sample_tree_ggm(
 ) -> jax.Array:
     """Draw ``n`` i.i.d. samples from the tree GGM with unit variances.
 
-    Returns an (n, d) float32 array.
+    Host-facing wrapper over :func:`sample_tree_ggm_parents`: converts the
+    edge list to topological form, samples on device, and returns columns
+    in the ORIGINAL node labelling. Returns an (n, d) float32 array.
     """
-    order, parent, pedge = bfs_order(d, edges)
-    weights = np.asarray(weights, dtype=np.float32)
-    z = jax.random.normal(key, (n, d), dtype=jnp.float32)
-    # Sequential over the BFS order (d steps); each step is vectorized over n.
-    # Implemented as a python loop building the graph once — d is static.
-    cols = [None] * d
-    cols[int(order[0])] = z[:, int(order[0])]
-    for node in order[1:]:
-        node = int(node)
-        p = int(parent[node])
-        rho = float(weights[int(pedge[node])])
-        cols[node] = rho * cols[p] + np.sqrt(max(1.0 - rho * rho, 0.0)) * z[:, node]
-    return jnp.stack(cols, axis=1)
+    parent, rho, perm = trees.topological_parents(d, edges, weights)
+    x_topo = sample_tree_ggm_parents(key, n, jnp.asarray(parent),
+                                     jnp.asarray(rho))
+    inv = np.empty(d, dtype=np.int64)
+    inv[perm] = np.arange(d)
+    return x_topo[:, jnp.asarray(inv)]
 
 
 def sample_ggm(key: jax.Array, n: int, corr: np.ndarray) -> jax.Array:

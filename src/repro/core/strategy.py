@@ -1,0 +1,132 @@
+"""Declarative estimation strategy: the front door of every pipeline.
+
+A :class:`Strategy` pins down one point of the paper's design space —
+quantization method x bit rate x wire format x compute placement x MWST
+solver — as a single frozen, hashable value. The batch estimators
+(``core.estimators``), the streaming accumulator (``core.streaming``), the
+distributed shard_map runtime (``core.distributed``), the centralized
+Chow-Liu pipeline (``core.chow_liu``) and the vmapped trial engine
+(``core.experiments``) all accept the same object, replacing the loose
+``(method, rate, wire, compute)`` kwarg tuples that used to be threaded
+through each layer separately.
+
+Being frozen + hashable, a Strategy can key jit caches and result tables
+directly; ``label`` matches the paper-figure legend names ("sign",
+"R1".."R7", "original").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+Method = Literal["sign", "persymbol", "original"]
+Wire = Literal["int8", "packed", "float32"]
+Placement = Literal["replicated", "rowblock"]
+Mst = Literal["boruvka", "kruskal"]
+
+_METHODS = ("sign", "persymbol", "original")
+_WIRES = ("int8", "packed", "float32")
+_PLACEMENTS = ("replicated", "rowblock")
+_MSTS = ("boruvka", "kruskal")
+
+
+@dataclasses.dataclass(frozen=True)
+class Strategy:
+    """One point of the method x rate x wire x placement x mst design space.
+
+    Attributes:
+      method: 'sign' (1-bit signs, §4) | 'persymbol' (R-bit quantizer, §5)
+        | 'original' (unquantized baseline, eq. 1).
+      rate: bits per symbol for 'persymbol' (1..7 on an int8 wire; must
+        divide 8 for a packed wire). Forced to 1 for 'sign'.
+      wire: transmitted format — 'int8' (one byte per code), 'packed'
+        (dense R bits/symbol, the paper's budget), 'float32' (raw samples;
+        forced for 'original').
+      placement: distributed Gram placement — 'replicated' (collective-
+        minimal) or 'rowblock' (each rank computes d/M rows).
+      mst: central MWST solver — 'boruvka' (on-device, jit/vmap-able) or
+        'kruskal' (host reference). Both break ties identically.
+    """
+
+    method: Method = "sign"
+    rate: int = 1
+    wire: Wire = "int8"
+    placement: Placement = "replicated"
+    mst: Mst = "boruvka"
+
+    def __post_init__(self):
+        if self.method not in _METHODS:
+            raise ValueError(f"unknown method {self.method!r}")
+        if self.wire not in _WIRES:
+            raise ValueError(f"unknown wire {self.wire!r}")
+        if self.placement not in _PLACEMENTS:
+            raise ValueError(f"unknown placement {self.placement!r}")
+        if self.mst not in _MSTS:
+            raise ValueError(f"unknown mst backend {self.mst!r}")
+        if self.method == "sign":
+            object.__setattr__(self, "rate", 1)
+        elif self.method == "original":
+            # unquantized baseline: raw f32 samples are the wire
+            object.__setattr__(self, "wire", "float32")
+            object.__setattr__(self, "rate", 32)
+        else:
+            if not 1 <= self.rate <= 7:
+                raise ValueError(
+                    f"persymbol rate must be in [1, 7], got {self.rate}")
+            if self.wire == "packed" and 8 % self.rate != 0:
+                raise ValueError(
+                    f"packed wire needs rate | 8, got {self.rate}")
+        if self.method != "original" and self.wire == "float32":
+            raise ValueError("float32 wire is the unquantized baseline; "
+                             "use method='original'")
+
+    @property
+    def label(self) -> str:
+        """Legend name used across the paper figures and result tables."""
+        if self.method == "sign":
+            return "sign"
+        if self.method == "original":
+            return "original"
+        return f"R{self.rate}"
+
+    @property
+    def bits_per_symbol(self) -> int:
+        """ACTUAL wire cost per transmitted symbol for this wire format.
+
+        Equals the paper's R bits/symbol (§3) only on the dense 'packed'
+        wire; the 'int8' wire spends a full byte per code and 'float32'
+        a full float. Use ``rate`` for the paper's idealized budget.
+        """
+        if self.wire == "packed":
+            return self.rate
+        return 32 if self.wire == "float32" else 8
+
+    def communication_bits(self, n: int, d: int) -> int:
+        """Total wire bits an (n, d) dataset actually costs under this
+        strategy's wire format (n * d * bits_per_symbol); the paper's
+        idealized n * d * R only for the 'packed' wire."""
+        return n * d * self.bits_per_symbol
+
+
+def as_strategy(strategy: Strategy | None, **kw) -> Strategy:
+    """Normalize the (strategy | loose kwargs) calling conventions.
+
+    ``strategy`` wins when given; otherwise a Strategy is built from the
+    legacy kwargs (unknown keys rejected by the dataclass constructor).
+    """
+    if strategy is not None:
+        if kw:
+            strategy = dataclasses.replace(strategy, **kw)
+        return strategy
+    return Strategy(**kw)
+
+
+#: The six-curve suite of Fig. 3 — the paper's headline comparison.
+FIG3_STRATEGIES: tuple[Strategy, ...] = (
+    Strategy("sign"),
+    Strategy("persymbol", rate=1),
+    Strategy("persymbol", rate=2),
+    Strategy("persymbol", rate=3),
+    Strategy("persymbol", rate=4),
+    Strategy("original"),
+)

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 from . import estimators
 from .gram import GramEngine, resolve_engine
 from .quantizers import PerSymbolQuantizer, sign_codes
+from .strategy import Strategy
 
 
 @dataclasses.dataclass
@@ -45,6 +46,18 @@ class StreamingGram:
         self._quant = (
             PerSymbolQuantizer(self.rate) if self.method == "persymbol" else None
         )
+
+    @classmethod
+    def from_strategy(
+        cls,
+        d: int,
+        strategy: Strategy,
+        engine: GramEngine | None = None,
+    ) -> "StreamingGram":
+        """Build the accumulator for a declarative :class:`Strategy`
+        (shared with the batch/distributed/trial pipelines)."""
+        return cls(d=d, method=strategy.method, rate=strategy.rate,
+                   engine=engine)
 
     @property
     def _eng(self) -> GramEngine:
@@ -109,7 +122,20 @@ class StreamingGram:
             return -0.5 * jnp.log1p(-r2)
         return estimators.mi_gaussian(rho_bar)
 
-    def learn_structure(self, backend: str = "kruskal"):
-        from .chow_liu import chow_liu
+    def learn_adjacency(self) -> jax.Array:
+        """Device-side structure estimate: weights -> Boruvka MWST, no host
+        round-trip. Returns the (d, d) bool adjacency as a JAX array."""
+        from .chow_liu import boruvka_mst
 
-        return chow_liu(np.asarray(self.weights()), backend=backend)
+        return boruvka_mst(self.weights())
+
+    def learn_structure(self, backend: str = "kruskal"):
+        from .chow_liu import adjacency_to_edges, kruskal_mst
+
+        if backend == "boruvka":
+            # weights feed the device solver directly; edge-list conversion
+            # is the explicit host step at the API surface
+            return adjacency_to_edges(self.learn_adjacency())
+        if backend != "kruskal":
+            raise ValueError(f"unknown backend {backend!r}")
+        return kruskal_mst(np.asarray(self.weights()))

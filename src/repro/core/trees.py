@@ -4,10 +4,24 @@ Implements the synthetic-data machinery of the paper: random trees, the
 correlation-decay covariance construction (eq. 24: rho_rs = prod of edge
 correlations on Path(r,s)), structure comparison, and the human-skeleton
 topology used in the Figs. 10-11 experiment.
+
+Two representations coexist:
+
+* **edge lists** (host): ``[(j, k), ...]`` — the human-facing form used by
+  the reference pipelines and the paper's notation.
+* **topological parent arrays** (device): nodes relabelled in BFS order so
+  node ``t > 0`` has ``parent[t] < t`` with edge correlation ``rho[t]``
+  (``parent[0] = 0``, ``rho[0] = 0``). This form is pure data — jit-able,
+  vmap-able over stacked trees — and feeds the batched sampler, the
+  eq.-24 covariance (:func:`tree_correlation`) and the device-side
+  structure metrics (:func:`structure_error`, :func:`structure_hamming`,
+  :func:`edge_f1`) used by the on-device trial plane.
 """
 from __future__ import annotations
 
 import numpy as np
+import jax
+import jax.numpy as jnp
 
 
 def random_tree(d: int, rng: np.random.Generator) -> list[tuple[int, int]]:
@@ -94,6 +108,130 @@ def tree_correlation_matrix(
                 Q[root, child] = acc * w
                 stack.append((child, node, acc * w))
     return Q
+
+
+# --------------------------------------------------------------------------
+# Topological parent-array form + device-side (jnp) tree machinery
+# --------------------------------------------------------------------------
+
+def topological_parents(
+    d: int,
+    edges: list[tuple[int, int]],
+    weights,
+    root: int = 0,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Relabel a weighted tree into topological parent-array form.
+
+    Returns ``(parent, rho, perm)``: int32/float32 arrays of shape (d,)
+    with ``parent[t] < t`` for ``t > 0`` (``parent[0] = 0``, ``rho[0] =
+    0``), and ``perm`` mapping new labels to the original ones
+    (``perm[t] = original node at topological position t``). Relabelling
+    is a global permutation, so structure metrics computed in either
+    labelling agree.
+    """
+    weights = np.asarray(weights, dtype=np.float32)
+    assert len(edges) == d - 1 and weights.shape == (d - 1,)
+    nbrs: list[list[tuple[int, float]]] = [[] for _ in range(d)]
+    for (j, k), w in zip(edges, weights):
+        nbrs[j].append((k, float(w)))
+        nbrs[k].append((j, float(w)))
+    perm = np.empty(d, dtype=np.int64)
+    parent = np.zeros(d, dtype=np.int32)
+    rho = np.zeros(d, dtype=np.float32)
+    pos = np.empty(d, dtype=np.int64)  # original label -> topological slot
+    perm[0] = root
+    pos[root] = 0
+    seen = [False] * d
+    seen[root] = True
+    head, tail = 0, 1
+    while head < tail:
+        node = int(perm[head])
+        head += 1
+        for child, w in nbrs[node]:
+            if not seen[child]:
+                seen[child] = True
+                perm[tail] = child
+                pos[child] = tail
+                parent[tail] = pos[node]
+                rho[tail] = w
+                tail += 1
+    assert tail == d, "edges do not span a connected tree"
+    return parent, rho, perm
+
+
+def adjacency_from_parents(parent: jax.Array) -> jax.Array:
+    """(d,) topological parent array -> symmetric (d, d) bool adjacency.
+
+    Pure jnp: jit- and vmap-able (stack parents over a leading trial axis).
+    """
+    parent = jnp.asarray(parent)
+    d = parent.shape[-1]
+    idx = jnp.arange(d)
+    half = (idx[:, None] == parent[..., None, :]) & (idx[None, :] > 0)
+    # half[..., p, t] = (parent[t] == p) for t > 0: edge (t, parent[t])
+    return half | jnp.swapaxes(half, -1, -2)
+
+
+def path_product_mixer(parent: jax.Array, rho: jax.Array) -> jax.Array:
+    """Lower-triangular path-product matrix M with x = M @ (c * z).
+
+    Solves x_t = rho_t x_{parent(t)} + c_t z_t, i.e. M = (I - B)^{-1} with
+    B[t, parent[t]] = rho_t strictly lower triangular (topological
+    labelling). B is nilpotent, so the inverse is the finite product
+    ``prod_k (I + B^(2^k))`` — ceil(log2 d) matmuls, no solve, no scan:
+    jit- and vmap-able with fixed shapes.
+    """
+    parent = jnp.asarray(parent)
+    rho = jnp.asarray(rho, jnp.float32)
+    d = parent.shape[0]
+    t = jnp.arange(d)
+    B = jnp.zeros((d, d), jnp.float32).at[t, parent].set(
+        jnp.where(t > 0, rho, 0.0))
+    M = jnp.eye(d, dtype=jnp.float32) + B
+    P = B
+    for _ in range(max(int(np.ceil(np.log2(max(d, 2)))), 1)):
+        P = P @ P
+        M = M + M @ P
+    return M
+
+
+def tree_correlation(parent: jax.Array, rho: jax.Array) -> jax.Array:
+    """Eq. (24) correlation matrix from parent-array form, on device.
+
+    Equals :func:`tree_correlation_matrix` up to the topological
+    relabelling: ``Q_dev[t, s] == Q_host[perm[t], perm[s]]``.
+    """
+    rho = jnp.asarray(rho, jnp.float32)
+    c = jnp.sqrt(jnp.clip(1.0 - jnp.square(rho), 0.0, None)).at[0].set(1.0)
+    A = path_product_mixer(parent, rho) * c[None, :]
+    return A @ A.T
+
+
+def structure_hamming(adj_a: jax.Array, adj_b: jax.Array) -> jax.Array:
+    """Device edge-set symmetric difference |E_a ^ E_b| of two symmetric
+    adjacencies — equals host :func:`tree_edit_distance` on the edge
+    lists. int32 scalar (batched over leading axes)."""
+    diff = jnp.asarray(adj_a) != jnp.asarray(adj_b)
+    return jnp.sum(diff, axis=(-2, -1), dtype=jnp.int32) // 2
+
+
+def structure_error(adj_est: jax.Array, adj_true: jax.Array) -> jax.Array:
+    """Device indicator of the paper's error event {T_hat != T}: True iff
+    the two adjacencies differ anywhere. Bool scalar (batched over
+    leading axes)."""
+    return jnp.any(jnp.asarray(adj_est) != jnp.asarray(adj_true),
+                   axis=(-2, -1))
+
+
+def edge_f1(adj_est: jax.Array, adj_true: jax.Array) -> jax.Array:
+    """Device edge-level F1 = 2 TP / (2 TP + FP + FN); 1.0 iff identical
+    (both inputs symmetric bool). Float32 scalar (batched)."""
+    est = jnp.asarray(adj_est)
+    true = jnp.asarray(adj_true)
+    tp = jnp.sum(est & true, axis=(-2, -1)).astype(jnp.float32)
+    fp = jnp.sum(est & ~true, axis=(-2, -1)).astype(jnp.float32)
+    fn = jnp.sum(~est & true, axis=(-2, -1)).astype(jnp.float32)
+    return 2.0 * tp / jnp.maximum(2.0 * tp + fp + fn, 1.0)
 
 
 def edges_canonical(edges) -> set[tuple[int, int]]:
