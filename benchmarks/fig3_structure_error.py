@@ -40,8 +40,12 @@ def run(reps: int = 120, quick: bool = False) -> dict:
         "sign_beats_ps1": all(
             s <= p + 0.08 for s, p in zip(table["sign"], table["R1"])
         ),
+        # one-sided: the paper's claim is that 4 bits suffice — R4 must not
+        # be materially WORSE than the unquantized baseline (beating it at
+        # small n is fine: eq. 30's unbiased rho^2 can out-rank the plain
+        # squared sample correlation there, and quick runs are 30-rep MC)
         "ps4_close_to_original": all(
-            abs(a - b) <= 0.12 for a, b in zip(table["R4"], table["original"])
+            a - b <= 0.12 for a, b in zip(table["R4"], table["original"])
         ),
         "errors_decay": table["sign"][-1] <= table["sign"][0],
     }

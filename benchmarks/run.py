@@ -40,11 +40,13 @@ BENCH_TRIALS_JSON = os.path.join(_REPO_ROOT, "BENCH_trials.json")
 
 
 def write_bench_trials(payload: dict, path: str = BENCH_TRIALS_JSON) -> str:
-    """Persist the trial-plane perf artifact: vmapped-engine trials/s (cold
-    and warm) vs the legacy per-trial loop, and the speedup."""
+    """Persist the trial-plane perf artifact: sweep-engine trials/s per
+    mode (exact / bucketed / sharded, cold and warm) vs the legacy
+    per-trial loop, and the speedups + acceptance checks."""
     slim = {k: payload[k] for k in (
-        "backend", "d", "ns", "reps", "strategies", "trials", "engine",
-        "loop", "speedup_warm", "speedup_cold", "checks")}
+        "backend", "d", "ns", "reps", "strategies", "trials", "buckets",
+        "engine", "loop", "speedup_warm", "speedup_cold", "cold_vs_pr2",
+        "checks")}
     with open(path, "w") as f:
         json.dump(slim, f, indent=1, default=float)
     return path

@@ -166,7 +166,7 @@ def strategy_weights(
         return gaussian_weights(x, engine=engine)
     if strategy.method == "sign":
         n = x.shape[0]
-        if strategy.wire == "packed" and n % 8 == 0:
+        if strategy.packed_gram_ok(n):
             payload = pack_codes(
                 jnp.swapaxes((x >= 0).astype(jnp.int8), 0, 1), 1)
             return sign_method_weights_packed(payload, n, engine=engine)
@@ -174,3 +174,71 @@ def strategy_weights(
     q = PerSymbolQuantizer(strategy.rate)
     codes = q.encode(x).astype(jnp.int8)
     return persymbol_code_weights(codes, q.centroids, engine=engine)
+
+
+def strategy_weights_batch(
+    x: jax.Array,
+    strategy: Strategy,
+    *,
+    n_valid: jax.Array | int | None = None,
+    engine: GramEngine | None = None,
+) -> jax.Array:
+    """(t, n, d) stacked raw samples -> (t, d, d) Chow-Liu weights.
+
+    The batched, valid-length-masked form of :func:`strategy_weights` used
+    by the one-launch sweep engine (``experiments.run_trials``): the trial
+    axis goes through the Gram engine's ``*_batch`` entry points (a native
+    kernel grid dimension on pallas, one batched einsum on xla) instead of
+    ``vmap``-of-estimator.
+
+    ``n_valid`` (may be a TRACED scalar) enables shape bucketing: rows
+    >= n_valid are padding. Masking happens post-quantization — sign codes
+    and raw values zeroed, bin codes set to ``quantizers.MASKED_CODE`` — so
+    every pad row contributes exactly 0 to the Gram and all sample-count
+    normalizations use n_valid. For the integer-exact sign paths (int8 and
+    packed) the masked statistics are BIT-EQUAL to the unpadded ones;
+    float paths agree to accumulation-order rounding, which preserves the
+    weight rank order (all Boruvka needs) in every non-adversarial case.
+    """
+    from .quantizers import (MASKED_CODE, PerSymbolQuantizer, pack_codes,
+                             sign_codes, valid_sample_mask)
+
+    eng = resolve_engine(engine)
+    t, n_pad, d = x.shape
+    if n_valid is None:
+        mask = None
+        n = n_pad
+    else:
+        n = jnp.asarray(n_valid, jnp.float32)
+        mask = valid_sample_mask(n_pad, n_valid)[None, :, None]  # (1, n, 1)
+
+    if strategy.method == "original":
+        xm = x if mask is None else jnp.where(mask, x, 0.0)
+        return mi_gaussian(eng.gram_batch(xm) / n)
+
+    if strategy.method == "sign":
+        if strategy.packed_gram_ok(n_pad):
+            bits = x >= 0
+            if mask is not None:
+                bits &= mask
+            payload = pack_codes(
+                jnp.swapaxes(bits.astype(jnp.int8), -2, -1), 1)  # (t, d, n/8)
+            gram = eng.packed_sign_gram_batch(payload, n_pad)
+            # pad bits are 0 in every row, so they xor away and the kernel's
+            # n_pad - 2*popcount only needs the integer-exact shift to the
+            # true count: G_valid = n_valid - 2*popcount
+            gram = gram - (n_pad - n)
+        else:
+            u = sign_codes(x)
+            if mask is not None:
+                u = jnp.where(mask, u, jnp.int8(0))
+            gram = eng.gram_batch(u)
+        return mi_sign(0.5 + gram / (2.0 * n))
+
+    q = PerSymbolQuantizer(strategy.rate)
+    codes = q.encode(x).astype(jnp.int8)
+    if mask is not None:
+        codes = jnp.where(mask, codes, jnp.int8(MASKED_CODE))
+    rho_bar = eng.code_gram_batch(codes, q.centroids) / n
+    r2 = jnp.clip(rho_squared_unbiased(rho_bar, n), 0.0, 1.0 - 1e-9)
+    return -0.5 * jnp.log1p(-r2)

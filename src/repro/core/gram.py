@@ -33,6 +33,14 @@ Three input kinds cover every wire format; HBM/wire bytes per symbol:
 (the xla/numpy backends match each entry point's semantics but may widen
 internally — e.g. ``packed_sign_gram`` under xla unpacks to ±1 in registers
 before a matmul; only the pallas path keeps the 1-bit working set in HBM.)
+
+Every entry point has a ``*_batch`` twin taking a leading batch axis
+((b, n, d) values / codes, (b, d, nb) packed payloads) and returning
+(b, d, d). On the pallas backend the batch axis is a native leading grid
+dimension of the kernel — one launch for the whole batch, not a ``vmap``
+of ``pallas_call`` — which is how the trial plane
+(``core.experiments.run_trials``) turns a Monte-Carlo trial axis into a
+single kernel grid.
 """
 from __future__ import annotations
 
@@ -111,6 +119,28 @@ class GramEngine:
         vf = uf if v is None else jnp.asarray(v).astype(jnp.float32)
         return uf.T @ vf
 
+    def gram_batch(self, u: jax.Array, v: jax.Array | None = None) -> jax.Array:
+        """Batched :meth:`gram`: (b, n, d_l) [x (b, n, d_r)] -> (b, d_l, d_r).
+
+        Same dtype dispatch as ``gram``; the pallas path runs the batch as a
+        native leading grid dimension of one kernel launch.
+        """
+        backend = self.resolve()
+        if backend == "numpy":
+            uf = np.asarray(u, dtype=np.float32)
+            vf = uf if v is None else np.asarray(v, dtype=np.float32)
+            return np.einsum("bnd,bne->bde", uf, vf)
+        exact_in_bf16 = all(
+            jnp.issubdtype(a.dtype, jnp.integer) or a.dtype == jnp.bfloat16
+            for a in ((u,) if v is None else (u, v)))
+        if backend == "pallas" and exact_in_bf16:
+            return sign_corr(
+                u, v, block_n=self.block_n, block_d=self.block_d,
+                interpret=self._interpret())
+        uf = jnp.asarray(u).astype(jnp.float32)
+        vf = uf if v is None else jnp.asarray(v).astype(jnp.float32)
+        return jnp.einsum("bnd,bne->bde", uf, vf)
+
     # -- int8 bin codes + centroid codebook ---------------------------------
 
     def code_gram(
@@ -120,7 +150,11 @@ class GramEngine:
         codes_rhs: jax.Array | None = None,
     ) -> jax.Array:
         """Gram of centroid-decoded codes; pallas decodes in-kernel (no f32
-        copy of the decode ever reaches HBM), xla/numpy decode then contract."""
+        copy of the decode ever reaches HBM), xla/numpy decode then contract.
+
+        Out-of-range codes (the -1 valid-length sentinel of the bucketed
+        trial plane) decode to 0 on every backend and drop out of the Gram.
+        """
         backend = self.resolve()
         if backend == "pallas":
             return code_corr(
@@ -128,16 +162,58 @@ class GramEngine:
                 block_n=self.block_n, block_d=min(self.block_d, 128),
                 interpret=self._interpret())
         if backend == "numpy":
-            cb = np.asarray(centroids, dtype=np.float32)
-            uf = cb[np.asarray(codes, dtype=np.int64)]
-            vf = uf if codes_rhs is None else cb[np.asarray(codes_rhs, np.int64)]
+            uf = self._decode_np(codes, centroids)
+            vf = uf if codes_rhs is None else self._decode_np(
+                codes_rhs, centroids)
             return uf.T @ vf
-        cb = jnp.asarray(centroids, dtype=jnp.float32)
-        uf = jnp.take(cb, jnp.asarray(codes).astype(jnp.int32))
-        vf = (
-            uf if codes_rhs is None
-            else jnp.take(cb, jnp.asarray(codes_rhs).astype(jnp.int32)))
+        uf = self._decode_jnp(codes, centroids)
+        vf = uf if codes_rhs is None else self._decode_jnp(codes_rhs, centroids)
         return uf.T @ vf
+
+    def code_gram_batch(
+        self,
+        codes: jax.Array,
+        centroids: jax.Array,
+        codes_rhs: jax.Array | None = None,
+    ) -> jax.Array:
+        """Batched :meth:`code_gram`: (b, n, d) int8 codes -> (b, d, d).
+
+        The codebook is shared across the batch; the pallas path runs the
+        batch as a native leading grid dimension of one launch. -1 codes
+        decode to 0 (valid-length masking).
+        """
+        backend = self.resolve()
+        if backend == "pallas":
+            return code_corr(
+                codes, centroids, codes_rhs,
+                block_n=self.block_n, block_d=min(self.block_d, 128),
+                interpret=self._interpret())
+        if backend == "numpy":
+            uf = self._decode_np(codes, centroids)
+            vf = uf if codes_rhs is None else self._decode_np(
+                codes_rhs, centroids)
+            return np.einsum("bnd,bne->bde", uf, vf)
+        uf = self._decode_jnp(codes, centroids)
+        vf = uf if codes_rhs is None else self._decode_jnp(codes_rhs, centroids)
+        return jnp.einsum("bnd,bne->bde", uf, vf)
+
+    @staticmethod
+    def _decode_jnp(codes: jax.Array, centroids: jax.Array) -> jax.Array:
+        # out-of-range codes (incl. the -1 mask sentinel) decode to 0.0 —
+        # same semantics as the kernel's one-hot decode. The bounds check
+        # must be explicit: take's own OOB modes normalize negatives first.
+        cb = jnp.asarray(centroids, dtype=jnp.float32)
+        c = jnp.asarray(codes).astype(jnp.int32)
+        in_range = (c >= 0) & (c < cb.shape[0])
+        return jnp.where(
+            in_range, jnp.take(cb, jnp.clip(c, 0, cb.shape[0] - 1)), 0.0)
+
+    @staticmethod
+    def _decode_np(codes, centroids) -> np.ndarray:
+        cb = np.asarray(centroids, dtype=np.float32)
+        c = np.asarray(codes, dtype=np.int64)
+        in_range = (c >= 0) & (c < cb.shape[0])
+        return np.where(in_range, cb[np.clip(c, 0, cb.shape[0] - 1)], 0.0)
 
     # -- 1-bit packed sign codes --------------------------------------------
 
@@ -175,6 +251,38 @@ class GramEngine:
         uf = self._unpack_pm1(packed, n)
         vf = uf if packed_rhs is None else self._unpack_pm1(packed_rhs, n)
         return uf @ vf.T
+
+    def packed_sign_gram_batch(
+        self,
+        packed: jax.Array,
+        n: int,
+        packed_rhs: jax.Array | None = None,
+    ) -> jax.Array:
+        """Batched :meth:`packed_sign_gram`: (b, d, ceil(n/8)) -> (b, d, d).
+
+        Per-batch-element bit layout and the n - 2*popcount(xor) identity
+        are exactly the unbatched path's; pallas runs the batch as a native
+        leading grid dimension of one launch.
+        """
+        if packed_rhs is not None:
+            assert packed.shape[-1] == packed_rhs.shape[-1], (
+                f"packed operands disagree on byte width: "
+                f"{packed.shape} vs {packed_rhs.shape}")
+        backend = self.resolve()
+        if backend == "pallas":
+            return sign_corr_packed(
+                packed, n, packed_rhs,
+                block_d=min(self.block_d, 128), block_b=self.block_b,
+                interpret=self._interpret())
+        if backend == "numpy":
+            a = np.asarray(packed)
+            b = a if packed_rhs is None else np.asarray(packed_rhs)
+            pop = np.bitwise_count(a[:, :, None, :] ^ b[:, None, :, :]).sum(
+                axis=-1, dtype=np.int64)
+            return (n - 2 * pop).astype(np.float32)
+        uf = self._unpack_pm1(packed, n)
+        vf = uf if packed_rhs is None else self._unpack_pm1(packed_rhs, n)
+        return jnp.einsum("bdn,ben->bde", uf, vf)
 
     @staticmethod
     def _unpack_pm1(packed: jax.Array, n: int) -> jax.Array:

@@ -74,7 +74,16 @@ class PerSymbolQuantizer:
 
     def encode(self, x: jax.Array) -> jax.Array:
         """Map samples to bin indices in [0, 2^R) — the R-bit messages."""
-        return jnp.searchsorted(self.boundaries, x).astype(jnp.int32)
+        b = self.boundaries
+        if b.shape[0] <= 128:
+            # index-identical to searchsorted (side='left': count of
+            # boundaries strictly below x) but lowers to one broadcast
+            # compare + sum instead of a scan — an order of magnitude
+            # cheaper to compile, which the sweep engine's cold path pays
+            # once per (strategy set, bucket)
+            return jnp.sum(
+                x[..., None] > b, axis=-1, dtype=jnp.int32)
+        return jnp.searchsorted(b, x).astype(jnp.int32)
 
     def decode(self, codes: jax.Array) -> jax.Array:
         return jnp.take(self.centroids, codes)
@@ -86,6 +95,24 @@ class PerSymbolQuantizer:
 def reconstruction_distortion(rate: int) -> float:
     """Closed-form E[(x-u)^2] = 1 - sigma_u^2 for the R-bit quantizer."""
     return 1.0 - PerSymbolQuantizer(rate).codebook_variance
+
+
+#: Sentinel bin code marking a masked-out (padded) sample: it matches no
+#: quantizer level, so every Gram backend decodes it to 0 and it drops out
+#: of the contraction (see ``GramEngine.code_gram``).
+MASKED_CODE = -1
+
+
+def valid_sample_mask(n_pad: int, n_valid) -> jax.Array:
+    """(n_pad,) bool mask of the valid sample rows under shape bucketing.
+
+    ``n_valid`` may be a traced scalar — the trial plane compiles one
+    weights stage per bucket shape ``n_pad`` and feeds the true sample
+    count at run time. Rows >= n_valid are padding: sign codes are zeroed,
+    bin codes set to :data:`MASKED_CODE`, raw values zeroed, so every
+    masked Gram equals the unpadded Gram entry-for-entry.
+    """
+    return jnp.arange(n_pad) < n_valid
 
 
 def bitpack_signs(u_pm1: jax.Array) -> jax.Array:

@@ -11,7 +11,13 @@ Three samplers are provided:
     form (see ``trees.topological_parents``): a single matmul against the
     path-product mixer, pure and jit-able with no host preprocessing, and
     ``sample_tree_ggm_batch`` vmaps it over stacked (key, parent, rho)
-    trial axes — the sampling stage of the on-device trial plane.
+    trial axes.
+  * ``sample_tree_ggm_rows`` — the same law again with per-row PRNG keys,
+    making the draws independent of the total row count: the first m rows
+    of an (n, d) draw equal the (m, d) draw bit-for-bit. This is the
+    sampling stage of the bucketed sweep engine
+    (``experiments.run_trials``), where n is padded up to a shape bucket
+    and masked; ``sample_tree_ggm_rows_batch`` is its vmapped trial form.
 
 All samplers are exact: x = M @ (c * z) with M the unit lower-triangular
 path-product matrix solves the conditional recursion in closed form, so
@@ -85,6 +91,54 @@ def sample_tree_ggm_batch(
     """
     return jax.vmap(sample_tree_ggm_parents, in_axes=(0, None, 0, 0))(
         keys, n, parents, rhos)
+
+
+def sample_tree_ggm_rows(
+    key: jax.Array,
+    n: int,
+    parent: jax.Array,
+    rho: jax.Array,
+) -> jax.Array:
+    """Shape-stable tree-GGM sampler: row i depends only on (key, i).
+
+    Same law as :func:`sample_tree_ggm_parents`, but the driving normals
+    are drawn per-row from ``fold_in(key, i)`` instead of one (n, d) call,
+    so the first ``m`` rows of an (n, d) draw are BIT-EQUAL to the full
+    (m, d) draw for every m <= n. This is the sampling stage of the
+    bucketed trial plane (``experiments.run_trials``): padding n up to a
+    bucket and masking rows >= n_valid yields exactly the draws of the
+    unpadded sweep, point for point — and sharding the trial axis over a
+    mesh cannot change them either (each trial folds its own key).
+    """
+    return sample_tree_ggm_rows_batch(
+        key[None], n, parent[None], rho[None])[0]
+
+
+def sample_tree_ggm_rows_batch(
+    keys: jax.Array,
+    n: int,
+    parents: jax.Array,
+    rhos: jax.Array,
+) -> jax.Array:
+    """Batched :func:`sample_tree_ggm_rows`: (t,) keys + (t, d) stacked
+    topological arrays -> (t, n, d) float32. The data plane of the bucketed
+    sweep engine — one call for all trials, rows stable in n.
+
+    The (t, n) per-row keys are folded in one flat vmap (not a nested
+    per-trial vmap of ``normal(k, (d,))`` — that shape compiles ~3x
+    slower) and the per-trial conditional mixing is one batched einsum.
+    """
+    t = keys.shape[0]
+    d = parents.shape[-1]
+    rhos = jnp.asarray(rhos, jnp.float32)
+    row_keys = jax.vmap(
+        lambda k: jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+            k, jnp.arange(n, dtype=jnp.uint32)))(keys)
+    z = jax.vmap(lambda k: jax.random.normal(k, (d,), jnp.float32))(
+        row_keys.reshape(t * n)).reshape(t, n, d)
+    c = jnp.sqrt(jnp.clip(1.0 - jnp.square(rhos), 0.0, None)).at[:, 0].set(1.0)
+    M = jax.vmap(trees.path_product_mixer)(parents, rhos)
+    return jnp.einsum("tnd,ted->tne", z * c[:, None, :], M)
 
 
 def sample_tree_ggm(

@@ -107,6 +107,15 @@ class Strategy:
         idealized n * d * R only for the 'packed' wire."""
         return n * d * self.bits_per_symbol
 
+    def packed_gram_ok(self, n: int) -> bool:
+        """True when the dense packed payload of ``n`` samples can feed the
+        Gram engine directly (XNOR+popcount, no unpack): sign method,
+        packed wire, and n a multiple of the 8-symbol byte granularity.
+        The estimators fall back to the (statistically identical) int8
+        contraction otherwise — shape buckets are powers of two precisely
+        so bucketed sweeps never lose this path."""
+        return self.method == "sign" and self.wire == "packed" and n % 8 == 0
+
 
 def as_strategy(strategy: Strategy | None, **kw) -> Strategy:
     """Normalize the (strategy | loose kwargs) calling conventions.

@@ -35,6 +35,13 @@ Block shapes default to (512, 256) for the MXU kernels: per-step VMEM =
 ≈ 1.3 MB, comfortably inside v5e's ~16 MB VMEM; all dims are multiples of
 the 128-lane MXU tiling. The packed kernel defaults to (128, 128) byte
 tiles: its (bd, bd, bb) XOR intermediate is 2 MB at that size.
+
+All three kernels take either a single (n, d) operand or a batch-stacked
+(b, n, d) one (packed: (d, nb) / (b, d, nb)). The batch axis is a NATIVE
+leading grid dimension — grid (b, i, j, k) with one program per (trial,
+output tile, n-step) — not a ``vmap`` of ``pallas_call``, so a whole
+Monte-Carlo trial axis (``core.experiments``) runs as ONE kernel launch
+and the trial loop never re-enters the dispatch path.
 """
 from __future__ import annotations
 
@@ -45,16 +52,24 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def _as_batched(u: jax.Array) -> tuple[jax.Array, bool]:
+    """Promote a single operand to a unit batch; report whether it was 2-D."""
+    if u.ndim == 2:
+        return u[None], False
+    assert u.ndim == 3, u.shape
+    return u, True
+
+
 def _sign_corr_kernel(u_l_ref, u_r_ref, out_ref):
-    """Grid (d_l/bd, d_r/bd, n/bn); accumulates over the trailing grid dim."""
-    @pl.when(pl.program_id(2) == 0)
+    """Grid (b, d_l/bd, d_r/bd, n/bn); accumulates over the trailing grid dim."""
+    @pl.when(pl.program_id(3) == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
     # int8 -> bf16 on the fly; MXU contraction in f32 accumulation
-    ul = u_l_ref[...].astype(jnp.bfloat16)  # (bn, bd)
-    ur = u_r_ref[...].astype(jnp.bfloat16)  # (bn, bd)
-    out_ref[...] += jax.lax.dot_general(
+    ul = u_l_ref[0].astype(jnp.bfloat16)  # (bn, bd)
+    ur = u_r_ref[0].astype(jnp.bfloat16)  # (bn, bd)
+    out_ref[0] += jax.lax.dot_general(
         ul, ur,
         dimension_numbers=(((0,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
@@ -73,38 +88,44 @@ def sign_corr(
     """G = u^T v (v defaults to u) with int8/low-precision inputs, f32 accum.
 
     Args:
-      u: (n, d_l) codes; int8 (signs / bin indices mapped to centroid ids) or
-        any dtype castable to bf16. n, d padded internally to block multiples.
-      v: optional (n, d_r) right operand for rectangular Grams (e.g. the
-        rowblock placement in ``core.distributed``); must share u's n.
+      u: (n, d_l) codes — or a batch-stacked (b, n, d_l) — int8 (signs / bin
+        indices mapped to centroid ids) or any dtype castable to bf16. n, d
+        padded internally to block multiples; the batch axis is a native
+        leading grid dimension (one launch for the whole batch).
+      v: optional (n, d_r) / (b, n, d_r) right operand for rectangular Grams
+        (e.g. the rowblock placement in ``core.distributed``); must share
+        u's batch and n.
     Returns:
-      (d_l, d_r) float32 Gram matrix.
+      (d_l, d_r) — batched: (b, d_l, d_r) — float32 Gram matrix.
     """
     if v is None:
         v = u
-    n, dl = u.shape
-    nv, dr = v.shape
-    assert n == nv, (u.shape, v.shape)
+    u, batched = _as_batched(u)
+    v, _ = _as_batched(v)
+    b, n, dl = u.shape
+    bv, nv, dr = v.shape
+    assert (b, n) == (bv, nv), (u.shape, v.shape)
     bn = min(block_n, _ceil_mult(n, 8))
     bd = min(block_d, _ceil_mult(max(dl, dr), 128))
     n_p, dl_p, dr_p = _ceil_mult(n, bn), _ceil_mult(dl, bd), _ceil_mult(dr, bd)
     if (n_p, dl_p) != (n, dl):
-        u = jnp.pad(u, ((0, n_p - n), (0, dl_p - dl)))
+        u = jnp.pad(u, ((0, 0), (0, n_p - n), (0, dl_p - dl)))
     if (n_p, dr_p) != (nv, dr):
-        v = jnp.pad(v, ((0, n_p - nv), (0, dr_p - dr)))
-    grid = (dl_p // bd, dr_p // bd, n_p // bn)
+        v = jnp.pad(v, ((0, 0), (0, n_p - nv), (0, dr_p - dr)))
+    grid = (b, dl_p // bd, dr_p // bd, n_p // bn)
     out = pl.pallas_call(
         _sign_corr_kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bn, bd), lambda i, j, k: (k, i)),
-            pl.BlockSpec((bn, bd), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn, bd), lambda a, i, j, k: (a, k, i)),
+            pl.BlockSpec((1, bn, bd), lambda a, i, j, k: (a, k, j)),
         ],
-        out_specs=pl.BlockSpec((bd, bd), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((dl_p, dr_p), jnp.float32),
+        out_specs=pl.BlockSpec((1, bd, bd), lambda a, i, j, k: (a, i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, dl_p, dr_p), jnp.float32),
         interpret=interpret,
     )(u, v)
-    return out[:dl, :dr]
+    out = out[:, :dl, :dr]
+    return out if batched else out[0]
 
 
 # ---------------------------------------------------------------------------
@@ -112,7 +133,7 @@ def sign_corr(
 # ---------------------------------------------------------------------------
 
 def _code_corr_kernel(c_l_ref, c_r_ref, cents_ref, out_ref):
-    @pl.when(pl.program_id(2) == 0)
+    @pl.when(pl.program_id(3) == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
@@ -125,8 +146,8 @@ def _code_corr_kernel(c_l_ref, c_r_ref, cents_ref, out_ref):
             jnp.where(onehot, cents[0][None, None, :], 0.0), axis=-1
         ).astype(jnp.bfloat16)
 
-    out_ref[...] += jax.lax.dot_general(
-        decode(c_l_ref[...]), decode(c_r_ref[...]),
+    out_ref[0] += jax.lax.dot_general(
+        decode(c_l_ref[0]), decode(c_r_ref[0]),
         dimension_numbers=(((0,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     )
@@ -145,20 +166,27 @@ def code_corr(
     """G = decode(codes)^T decode(codes_rhs) with the decode fused in-kernel.
 
     Args:
-      codes: (n, d_l) int8 bin indices in [0, L).
-      centroids: (L,) codebook (``PerSymbolQuantizer.centroids``), L <= 128.
-      codes_rhs: optional (n, d_r) right operand (defaults to ``codes``).
+      codes: (n, d_l) — or batch-stacked (b, n, d_l) — int8 bin indices in
+        [0, L). Negative codes match no one-hot level and decode to 0, so a
+        -1 sentinel masks out padded samples (the trial plane's
+        valid-length masking under shape bucketing).
+      centroids: (L,) codebook (``PerSymbolQuantizer.centroids``), L <= 128;
+        shared across the batch.
+      codes_rhs: optional (n, d_r) / (b, n, d_r) right operand.
     Returns:
-      (d_l, d_r) float32 Gram of the centroid values; the decoded values only
-      ever exist as bf16 VMEM tiles (never in HBM).
+      (d_l, d_r) — batched: (b, d_l, d_r) — float32 Gram of the centroid
+      values; the decoded values only ever exist as bf16 VMEM tiles (never
+      in HBM).
     """
     if codes_rhs is None:
         codes_rhs = codes
     (L,) = centroids.shape
     assert L <= 128, "codebook must fit a VMEM lane tile (R <= 7)"
-    n, dl = codes.shape
-    nv, dr = codes_rhs.shape
-    assert n == nv, (codes.shape, codes_rhs.shape)
+    codes, batched = _as_batched(codes)
+    codes_rhs, _ = _as_batched(codes_rhs)
+    b, n, dl = codes.shape
+    bv, nv, dr = codes_rhs.shape
+    assert (b, n) == (bv, nv), (codes.shape, codes_rhs.shape)
     bn = min(block_n, _ceil_mult(n, 8))
     bd = min(block_d, _ceil_mult(max(dl, dr), 128))
     n_p, dl_p, dr_p = _ceil_mult(n, bn), _ceil_mult(dl, bd), _ceil_mult(dr, bd)
@@ -166,25 +194,27 @@ def code_corr(
     # (padding with 0 would decode to centroid c_0 and corrupt the Gram)
     if (n_p, dl_p) != (n, dl):
         codes = jnp.pad(
-            codes, ((0, n_p - n), (0, dl_p - dl)), constant_values=-1)
+            codes, ((0, 0), (0, n_p - n), (0, dl_p - dl)), constant_values=-1)
     if (n_p, dr_p) != (nv, dr):
         codes_rhs = jnp.pad(
-            codes_rhs, ((0, n_p - nv), (0, dr_p - dr)), constant_values=-1)
+            codes_rhs, ((0, 0), (0, n_p - nv), (0, dr_p - dr)),
+            constant_values=-1)
     cents = centroids.astype(jnp.float32)[None, :]  # (1, L)
-    grid = (dl_p // bd, dr_p // bd, n_p // bn)
+    grid = (b, dl_p // bd, dr_p // bd, n_p // bn)
     out = pl.pallas_call(
         _code_corr_kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bn, bd), lambda i, j, k: (k, i)),
-            pl.BlockSpec((bn, bd), lambda i, j, k: (k, j)),
-            pl.BlockSpec(cents.shape, lambda i, j, k: (0, 0)),
+            pl.BlockSpec((1, bn, bd), lambda a, i, j, k: (a, k, i)),
+            pl.BlockSpec((1, bn, bd), lambda a, i, j, k: (a, k, j)),
+            pl.BlockSpec(cents.shape, lambda a, i, j, k: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((bd, bd), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((dl_p, dr_p), jnp.float32),
+        out_specs=pl.BlockSpec((1, bd, bd), lambda a, i, j, k: (a, i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, dl_p, dr_p), jnp.float32),
         interpret=interpret,
     )(codes, codes_rhs, cents)
-    return out[:dl, :dr]
+    out = out[:, :dl, :dr]
+    return out if batched else out[0]
 
 
 # ---------------------------------------------------------------------------
@@ -199,15 +229,15 @@ def _popcount8(x: jax.Array) -> jax.Array:
 
 
 def _sign_corr_packed_kernel(a_ref, b_ref, out_ref):
-    """Grid (d_l/bd, d_r/bd, nb/bb); accumulates XOR popcounts over bytes."""
-    @pl.when(pl.program_id(2) == 0)
+    """Grid (b, d_l/bd, d_r/bd, nb/bb); accumulates XOR popcounts over bytes."""
+    @pl.when(pl.program_id(3) == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    a = a_ref[...]  # (bd, bb) uint8, feature-major packed bits
-    b = b_ref[...]
+    a = a_ref[0]  # (bd, bb) uint8, feature-major packed bits
+    b = b_ref[0]
     diff = _popcount8(a[:, None, :] ^ b[None, :, :])  # (bd, bd, bb) in [0, 8]
-    out_ref[...] += jnp.sum(diff.astype(jnp.int32), axis=-1)
+    out_ref[0] += jnp.sum(diff.astype(jnp.int32), axis=-1)
 
 
 @functools.partial(
@@ -224,43 +254,49 @@ def sign_corr_packed(
     """Sign-method Gram G = U^T U directly from bit-packed codes.
 
     Args:
-      packed: (d_l, nb) uint8, feature-major — row j holds feature j's n sign
-        bits packed 8/byte in little bit order (``quantizers.pack_codes`` /
-        ``bitpack_signs`` layout, i.e. the wire payload itself). Tail bits of
-        the last byte beyond ``n`` must be zero in every row (they then XOR
-        to zero and drop out of the identity below).
+      packed: (d_l, nb) — or batch-stacked (b, d_l, nb) — uint8, feature-
+        major: row j holds feature j's n sign bits packed 8/byte in little
+        bit order (``quantizers.pack_codes`` / ``bitpack_signs`` layout,
+        i.e. the wire payload itself). Bits beyond ``n`` must agree across
+        rows — zeroed, or any shared padding — so they XOR to zero and
+        drop out of the identity below.
       n: true number of samples (bits) per row; nb == ceil(n / 8).
-      packed_rhs: optional (d_r, nb) right operand for rectangular Grams.
+      packed_rhs: optional (d_r, nb) / (b, d_r, nb) right operand.
     Returns:
-      (d_l, d_r) float32 Gram, exactly n - 2*popcount(xor): integer-exact,
-      identical to ``sign_corr`` on the unpacked {-1,+1} codes.
+      (d_l, d_r) — batched: (b, d_l, d_r) — float32 Gram, exactly
+      n - 2*popcount(xor): integer-exact, identical to ``sign_corr`` on the
+      unpacked {-1,+1} codes.
     """
     if packed_rhs is None:
         packed_rhs = packed
     assert packed.dtype == jnp.uint8 and packed_rhs.dtype == jnp.uint8
-    dl, nb = packed.shape
-    dr, nbr = packed_rhs.shape
-    assert nb == nbr, (packed.shape, packed_rhs.shape)
+    packed, batched = _as_batched(packed)
+    packed_rhs, _ = _as_batched(packed_rhs)
+    b, dl, nb = packed.shape
+    bv, dr, nbr = packed_rhs.shape
+    assert (b, nb) == (bv, nbr), (packed.shape, packed_rhs.shape)
     bd = min(block_d, _ceil_mult(max(dl, dr), 8))
     bb = min(block_b, _ceil_mult(nb, 128))
     dl_p, dr_p, nb_p = _ceil_mult(dl, bd), _ceil_mult(dr, bd), _ceil_mult(nb, bb)
     if (dl_p, nb_p) != (dl, nb):
-        packed = jnp.pad(packed, ((0, dl_p - dl), (0, nb_p - nb)))
+        packed = jnp.pad(packed, ((0, 0), (0, dl_p - dl), (0, nb_p - nb)))
     if (dr_p, nb_p) != (dr, nbr):
-        packed_rhs = jnp.pad(packed_rhs, ((0, dr_p - dr), (0, nb_p - nbr)))
-    grid = (dl_p // bd, dr_p // bd, nb_p // bb)
+        packed_rhs = jnp.pad(
+            packed_rhs, ((0, 0), (0, dr_p - dr), (0, nb_p - nbr)))
+    grid = (b, dl_p // bd, dr_p // bd, nb_p // bb)
     pop = pl.pallas_call(
         _sign_corr_packed_kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bd, bb), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bd, bb), lambda i, j, k: (j, k)),
+            pl.BlockSpec((1, bd, bb), lambda a, i, j, k: (a, i, k)),
+            pl.BlockSpec((1, bd, bb), lambda a, i, j, k: (a, j, k)),
         ],
-        out_specs=pl.BlockSpec((bd, bd), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((dl_p, dr_p), jnp.int32),
+        out_specs=pl.BlockSpec((1, bd, bd), lambda a, i, j, k: (a, i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, dl_p, dr_p), jnp.int32),
         interpret=interpret,
     )(packed, packed_rhs)
-    return (n - 2 * pop[:dl, :dr]).astype(jnp.float32)
+    out = (n - 2 * pop[:, :dl, :dr]).astype(jnp.float32)
+    return out if batched else out[0]
 
 
 def _ceil_mult(x: int, m: int) -> int:

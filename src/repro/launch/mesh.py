@@ -24,6 +24,21 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
+def make_trial_mesh(data: int | None = None):
+    """1-D ("data",) mesh for the Monte-Carlo trial plane.
+
+    ``core.experiments.run_trials(..., mesh=make_trial_mesh())`` shard_maps
+    the rep axis of a sweep over this axis — all local devices by default
+    (``--xla_force_host_platform_device_count`` CPUs, or every accelerator
+    chip). ``data`` must divide the plan's rep count.
+    """
+    n = len(jax.devices())
+    data = n if data is None else data
+    if data > n:
+        raise ValueError(f"requested {data}-way trial mesh on {n} devices")
+    return jax.make_mesh((data,), ("data",), axis_types=(AxisType.Auto,))
+
+
 def make_host_mesh(data: int = 1, model: int = 1):
     """Mesh over whatever devices exist locally (CPU smoke / examples).
 

@@ -233,3 +233,39 @@ def test_wire_formats_and_ep2d():
         assert float(jnp.abs(o_ref - o_ep).max()) < 1e-5
         print('wire formats + ep2d OK')
     """)
+
+
+def test_shard_map_trial_sweep_parity():
+    """Satellite requirement: run_trials over a 1-device vs 4-device trial
+    mesh gives identical metrics (error/edit exactly — integer-derived;
+    f1 to f32 summation rounding across the psum), and still one host
+    sync per sweep."""
+    run_devices("""
+        import numpy as np, jax
+        from repro.core.experiments import TrialPlan, run_trials
+        from repro.core.strategy import FIG3_STRATEGIES
+        from repro.launch.mesh import make_trial_mesh
+        plan = TrialPlan(d=12, ns=(100, 400), strategies=FIG3_STRATEGIES,
+                         reps=8)
+        local = run_trials(plan)                            # vmap, no mesh
+        r1 = run_trials(plan, mesh=make_trial_mesh(1))
+        r4 = run_trials(plan, mesh=make_trial_mesh(4))
+        assert r4.mesh_devices == 4 and r4.host_syncs == 1
+        for ref in (local, r1):
+            for s in FIG3_STRATEGIES:
+                lab = s.label
+                assert r4.error_rate[lab] == ref.error_rate[lab], lab
+                assert r4.edit_distance[lab] == ref.edit_distance[lab], lab
+                assert np.allclose(r4.edge_f1[lab], ref.edge_f1[lab],
+                                   atol=2e-6), (lab, r4.edge_f1[lab])
+        # reps must divide the data axis
+        try:
+            run_trials(TrialPlan(d=6, ns=(64,),
+                                 strategies=FIG3_STRATEGIES[:1], reps=6),
+                       mesh=make_trial_mesh(4))
+        except ValueError:
+            pass
+        else:
+            raise AssertionError('indivisible reps must raise')
+        print('shard_map sweep parity OK')
+    """, n_devices=4)

@@ -7,9 +7,10 @@ import pytest
 
 from repro.core import chow_liu as CL
 from repro.core import estimators, sampler, trees
-from repro.core.experiments import (TrialPlan, evaluate_strategies,
+from repro.core.experiments import (TrialPlan, clear_compile_caches,
+                                    compile_cache_size, evaluate_strategies,
                                     mc_persymbol_corr_error,
-                                    mc_sign_crossover, run_trials,
+                                    mc_sign_crossover, next_pow2, run_trials,
                                     stacked_trees, trial_keys)
 from repro.core.strategy import FIG3_STRATEGIES, Strategy, as_strategy
 from repro.core.streaming import StreamingGram
@@ -229,7 +230,11 @@ def test_run_trials_shapes_and_telemetry():
     res = run_trials(plan)
     assert set(res.error_rate) == {"sign", "original"}
     assert all(len(v) == 2 for v in res.error_rate.values())
-    assert res.host_syncs == plan.points == 4
+    # the WHOLE sweep performs exactly one host sync (the metric tensor)
+    assert res.host_syncs == 1
+    assert res.buckets == {200: 256, 800: 1024}  # pow2 default
+    assert res.mesh_devices == 1
+    assert res.compile_cache_size > 0
     assert res.trials_per_s > 0
     for errs in res.error_rate.values():
         assert all(0.0 <= e <= 1.0 for e in errs)
@@ -246,7 +251,7 @@ def test_run_trials_deterministic():
 
 def test_run_trials_no_implicit_host_transfers():
     """The sweep body must survive a disallow d2h transfer guard: only
-    the engine's explicit per-point jax.device_get touches the host.
+    the engine's single explicit jax.device_get touches the host.
     (Hard assertion on accelerator backends; on CPU d2h reads are
     zero-copy and unguarded, so there this is a plain smoke.)"""
     plan = TrialPlan(d=6, ns=(150,),
@@ -255,7 +260,7 @@ def test_run_trials_no_implicit_host_transfers():
     run_trials(plan)  # cold: compiles outside the guard
     with jax.transfer_guard_device_to_host("disallow"):
         res = run_trials(plan)
-    assert res.host_syncs == plan.points
+    assert res.host_syncs == 1
 
 
 def test_stacked_trees_match_reference_rng():
@@ -291,6 +296,98 @@ def test_run_trials_matches_reference_loop_fig3_point():
     # same ground-truth trees (shared seeding), independent sampling
     # streams: binomial noise only. std <= sqrt(2 * 0.25 / 60) ~ 0.09.
     assert abs(dev - host) <= 0.25, (dev, host)
+
+
+# --------------------------------------------------------------------------
+# Shape bucketing: plan knobs, shape-stable sampler, masked weights, parity
+# --------------------------------------------------------------------------
+
+def test_bucket_resolution_and_validation():
+    assert next_pow2(1) == 8 and next_pow2(8) == 8
+    assert next_pow2(125) == 128 and next_pow2(1000) == 1024
+    plan = TrialPlan(d=6, ns=(125, 250), strategies=(Strategy("sign"),))
+    assert plan.buckets == {125: 128, 250: 256}
+    exact = TrialPlan(d=6, ns=(125,), strategies=(Strategy("sign"),),
+                      n_buckets=None)
+    assert exact.bucket_for(125) == 125
+    custom = TrialPlan(d=6, ns=(125, 250), strategies=(Strategy("sign"),),
+                       n_buckets=(256,))
+    assert custom.buckets == {125: 256, 250: 256}
+    with pytest.raises(ValueError):  # buckets must cover max(ns)
+        TrialPlan(d=6, ns=(300,), strategies=(Strategy("sign"),),
+                  n_buckets=(256,))
+    with pytest.raises(ValueError):
+        TrialPlan(d=6, ns=(100,), strategies=(Strategy("sign"),),
+                  n_buckets="pow3")
+
+
+def test_row_sampler_prefix_is_shape_stable():
+    """The bucketed sampler's first m rows equal the (m, d) draw
+    bit-for-bit — the property that makes padded sweeps replayable."""
+    _, _, parent, rho, _ = _random_tree_arrays(9, 4)
+    P, R = jnp.asarray(parent), jnp.asarray(rho)
+    key = jax.random.key(3)
+    small = np.asarray(sampler.sample_tree_ggm_rows(key, 100, P, R))
+    big = np.asarray(sampler.sample_tree_ggm_rows(key, 256, P, R))
+    assert np.array_equal(big[:100], small)
+    # batched form agrees with the per-trial form
+    keys = trial_keys(TrialPlan(d=9, ns=(10,), reps=3))
+    xb = np.asarray(sampler.sample_tree_ggm_rows_batch(
+        keys, 64, jnp.stack([P] * 3), jnp.stack([R] * 3)))
+    assert np.array_equal(
+        xb[1], np.asarray(sampler.sample_tree_ggm_rows(keys[1], 64, P, R)))
+
+
+def test_masked_batch_weights_match_unmasked():
+    """strategy_weights_batch under a valid-length mask == the per-sample
+    strategy_weights on the valid prefix: bit-equal off-diagonal for the
+    integer-exact sign paths, rounding-tight for the float paths."""
+    rng = np.random.default_rng(5)
+    n, n_pad, d = 120, 256, 7
+    x = jnp.asarray(rng.normal(size=(2, n, d)).astype(np.float32))
+    xpad = jnp.pad(x, ((0, 0), (0, n_pad - n), (0, 0)),
+                   constant_values=99.0)  # poison the pad rows
+    off = ~np.eye(d, dtype=bool)
+    for strat in (Strategy("sign"), Strategy("sign", wire="packed"),
+                  Strategy("persymbol", rate=3), Strategy("original")):
+        ref = np.stack([np.asarray(
+            estimators.strategy_weights(x[i], strat)) for i in range(2)])
+        got = np.asarray(estimators.strategy_weights_batch(
+            xpad, strat, n_valid=jnp.int32(n)))
+        if strat.method == "sign":
+            assert np.array_equal(got[:, off], ref[:, off]), strat.label
+        else:
+            np.testing.assert_allclose(
+                got[:, off], ref[:, off], rtol=1e-5, atol=1e-5)
+
+
+def test_run_trials_bucketing_parity_fig3_scale():
+    """Satellite requirement: for every Fig.-3 strategy, bucketing on vs
+    off yields IDENTICAL metrics on a fig3-scale plan (d=20, padded ns)."""
+    kw = dict(d=20, ns=(125, 500), strategies=FIG3_STRATEGIES, reps=10)
+    on = run_trials(TrialPlan(**kw))                   # pow2 buckets
+    off = run_trials(TrialPlan(**kw, n_buckets=None))  # exact shapes
+    assert on.buckets == {125: 128, 500: 512}
+    assert off.buckets == {125: 125, 500: 500}
+    for s in FIG3_STRATEGIES:
+        assert on.error_rate[s.label] == off.error_rate[s.label], s.label
+        assert on.edit_distance[s.label] == off.edit_distance[s.label], s.label
+        assert on.edge_f1[s.label] == off.edge_f1[s.label], s.label
+
+
+def test_compile_cache_helpers_and_plan_setup_cache():
+    plan = TrialPlan(d=5, ns=(40,), strategies=(Strategy("sign"),), reps=3)
+    run_trials(plan)
+    assert compile_cache_size() > 0
+    # per-plan host setup (trees + keys) is cached: same objects back
+    assert stacked_trees(plan)[0] is stacked_trees(plan)[0]
+    assert trial_keys(plan) is trial_keys(plan)
+    released = clear_compile_caches()
+    assert released >= 1
+    assert compile_cache_size() == 0
+    # engine still works from a cold cache
+    res = run_trials(plan)
+    assert res.host_syncs == 1
 
 
 # --------------------------------------------------------------------------

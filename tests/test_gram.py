@@ -238,3 +238,64 @@ def test_quantize_fused_pack_feeds_packed_gram():
     got = np.asarray(sign_corr_packed(payload, n, interpret=True))
     s = np.where(x > 0, 1.0, -1.0)  # rate-1 bin boundary is x > 0
     assert np.array_equal(got, s.T @ s)
+
+
+# ---------------------------------------------------------------------------
+# Batched entry points: the trial axis as a native kernel grid dimension
+# ---------------------------------------------------------------------------
+
+def test_gram_batch_matches_per_element():
+    rng = np.random.default_rng(7)
+    u = rng.choice([-1, 1], size=(3, 100, 17)).astype(np.int8)
+    uj = jnp.asarray(u)
+    for eng in (PALLAS, XLA):
+        got = np.asarray(eng.gram_batch(uj))
+        for i in range(3):
+            np.testing.assert_array_equal(got[i], np.asarray(eng.gram(uj[i])))
+    got_np = NUMPY.gram_batch(u)
+    for i in range(3):
+        np.testing.assert_array_equal(got_np[i], NUMPY.gram(u[i]))
+
+
+def test_gram_batch_rectangular_f32():
+    rng = np.random.default_rng(8)
+    u = jnp.asarray(rng.normal(size=(2, 64, 5)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(2, 64, 9)).astype(np.float32))
+    got = np.asarray(XLA.gram_batch(u, v))
+    assert got.shape == (2, 5, 9)
+    for i in range(2):
+        np.testing.assert_allclose(
+            got[i], np.asarray(XLA.gram(u[i], v[i])), rtol=1e-6)
+
+
+def test_code_gram_batch_matches_and_masks():
+    """Batched code Gram == per-element on every backend, and the -1
+    valid-length sentinel decodes to 0 (drops out) everywhere."""
+    q = PerSymbolQuantizer(3)
+    rng = np.random.default_rng(9)
+    codes = rng.integers(0, 8, size=(2, 90, 6)).astype(np.int8)
+    codes[:, 70:, :] = -1  # masked tail
+    cj = jnp.asarray(codes)
+    cents = np.asarray(q.centroids)
+    # oracle: decode valid codes, zero the masked tail
+    dec = np.where(codes >= 0, cents[np.clip(codes, 0, 7)], 0.0)
+    want = np.einsum("bnd,bne->bde", dec, dec)
+    for eng in (XLA, NUMPY):
+        np.testing.assert_allclose(
+            np.asarray(eng.code_gram_batch(cj, q.centroids)), want,
+            rtol=1e-5, atol=1e-5)
+    # pallas decodes to bf16 MXU tiles: per-sample absolute error scale
+    got_pl = np.asarray(PALLAS.code_gram_batch(cj, q.centroids))
+    assert np.abs(got_pl - want).max() / codes.shape[1] < 0.01
+
+
+def test_packed_sign_gram_batch_matches():
+    rng = np.random.default_rng(10)
+    n, d, b = 96, 7, 3
+    u = rng.choice([-1, 1], size=(b, n, d)).astype(np.int8)
+    payload = jnp.stack([_pack(u[i]) for i in range(b)])  # (b, d, n/8)
+    for eng in (PALLAS, XLA, NUMPY):
+        got = np.asarray(eng.packed_sign_gram_batch(payload, n))
+        for i in range(b):
+            want = u[i].T.astype(np.float32) @ u[i].astype(np.float32)
+            np.testing.assert_array_equal(got[i], want), (eng.backend, i)

@@ -220,3 +220,31 @@ def test_flash_prefill_matches_jnp_flash_attention():
     np.testing.assert_allclose(
         np.asarray(jnp_out.reshape(b, s, hkv * g, dh)),
         np.asarray(pallas_out), atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# Native batch grid dimension (the trial axis of the sweep engine)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,n,d", [(1, 64, 16), (3, 100, 30), (5, 37, 5)])
+def test_sign_corr_batched_grid(b, n, d):
+    rng = np.random.default_rng(b * 100 + n)
+    u = jnp.asarray(rng.choice([-1, 1], size=(b, n, d)), jnp.int8)
+    got = sign_corr(u, **I)
+    assert got.shape == (b, d, d)
+    for i in range(b):
+        np.testing.assert_allclose(
+            np.asarray(got[i]), np.asarray(ref.sign_corr_ref(u[i])),
+            rtol=1e-6)
+
+
+def test_sign_corr_batched_rectangular():
+    rng = np.random.default_rng(2)
+    u = jnp.asarray(rng.choice([-1, 1], size=(2, 80, 11)), jnp.int8)
+    v = jnp.asarray(rng.choice([-1, 1], size=(2, 80, 23)), jnp.int8)
+    got = sign_corr(u, v, **I)
+    assert got.shape == (2, 11, 23)
+    for i in range(2):
+        np.testing.assert_allclose(
+            np.asarray(got[i]), np.asarray(ref.sign_corr_ref(u[i], v[i])),
+            rtol=1e-6)
