@@ -46,7 +46,7 @@ def write_bench_trials(payload: dict, path: str = BENCH_TRIALS_JSON) -> str:
     slim = {k: payload[k] for k in (
         "backend", "d", "ns", "reps", "strategies", "trials", "buckets",
         "engine", "loop", "speedup_warm", "speedup_cold", "cold_vs_pr2",
-        "checks")}
+        "comm", "checks")}
     with open(path, "w") as f:
         json.dump(slim, f, indent=1, default=float)
     return path

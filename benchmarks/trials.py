@@ -224,6 +224,13 @@ def run(reps: int = 60, quick: bool = False) -> dict:
         "speedup_cold": speedup_cold,
         "cold_vs_pr2": cold_vs_pr2,
         "error": buck_warm.error_rate,
+        # honest per-strategy communication accounting (paper's logical
+        # n*d*R vs the bucket-shaped bytes a wire gather would move)
+        "comm": {
+            lab: {"logical_bits": [c.logical_bits for c in reports],
+                  "wire_bytes": [c.wire_bytes for c in reports]}
+            for lab, reports in buck_warm.comm.items()
+        },
         "checks": {
             "one_sync_per_sweep": all(
                 c.host_syncs == 1 and w.host_syncs == 1

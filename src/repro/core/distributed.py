@@ -15,6 +15,29 @@ sharding problem:
     **psum over the data axis**; the MWST then runs on the replicated
     weight matrix (device-side Boruvka) or on the host (Kruskal).
 
+The runtime is decomposed into three individually jit/vmap-able stages,
+carried by :class:`WirePlan` (the executable companion of the declarative
+:class:`~repro.core.strategy.Strategy`):
+
+  * :meth:`WirePlan.encode`  — per-machine local quantization: the rank's
+    feature slice -> its wire payload (``estimators.strategy_payload``);
+  * :meth:`WirePlan.wire`    — THE communication the paper counts: one
+    tiled all-gather of the payload over the model axis. Static payload
+    shapes make the cost exactly accountable — :meth:`WirePlan.comm_report`
+    measures it with ``jax.eval_shape`` on the encode stage and returns a
+    :class:`CommReport` (logical n*d*R bits vs bytes actually gathered);
+  * :meth:`WirePlan.central` — the center: Gram contraction on the
+    gathered payload (``estimators.payload_gram``, placement-aware) +
+    Chow-Liu weights (``estimators.weights_from_gram`` — the same math
+    every other pipeline runs; nothing is duplicated here).
+
+:func:`build_weights_fn` shard_maps the composed
+``encode -> wire -> central`` chain (:meth:`WirePlan.local_weights`) for
+one dataset; ``experiments.run_trials(plan, mesh=("data","model"))`` runs
+the SAME stages over the Monte-Carlo trial plane — trials sharded over
+``data``, features over ``model`` — with per-strategy ``CommReport``
+telemetry and bit-identical metrics to the single-device engine.
+
 Every Gram goes through :class:`repro.core.gram.GramEngine` (Pallas kernels
 on TPU/GPU, XLA matmuls on CPU). For ``wire="packed"`` with the sign method
 the Gram is computed **directly on the packed payload** via XNOR+popcount
@@ -33,6 +56,7 @@ Two compute placements are provided (see EXPERIMENTS.md §Perf):
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Literal
 
 import numpy as np
@@ -42,44 +66,197 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import estimators
 from .chow_liu import boruvka_mst
-from .gram import GramEngine, resolve_engine
-from .quantizers import PerSymbolQuantizer, pack_codes, unpack_codes
+from .gram import GramEngine
 from .strategy import Strategy
 
 
 def communication_bits(n: int, d: int, rate: int) -> int:
-    """The paper's total communication cost: n*d*R bits (§3)."""
+    """The paper's LOGICAL communication cost: n*d*R bits (§3).
+
+    This is the idealized budget (R information bits per symbol); what a
+    given wire format actually moves is ``Strategy.wire_bits(n, d)`` —
+    32 bits/symbol on a float32 wire and 8 on an int8 wire regardless of
+    R. The two agree only on the dense 'packed' wire.
+    """
     return n * d * rate
 
 
-def _weights_from_gram(gram: jax.Array, method: str, n) -> jax.Array:
-    if method == "original":
-        rho_bar = gram / n
-        r2 = jnp.clip(jnp.square(rho_bar), 0.0, 1.0 - 1e-9)
-        return -0.5 * jnp.log1p(-r2)
-    if method == "sign":
-        theta = 0.5 + gram / (2.0 * n)
-        return estimators.mi_sign(theta)
-    # persymbol: rho_bar_q = gram/n, then unbiased rho^2 -> gaussian MI
-    rho_bar = gram / n
-    r2 = jnp.clip(estimators.rho_squared_unbiased(rho_bar, n), 0.0, 1.0 - 1e-9)
-    return -0.5 * jnp.log1p(-r2)
+@dataclasses.dataclass(frozen=True)
+class CommReport:
+    """Honest communication accounting for one weights evaluation.
 
-
-def _resolve_strategy_kwargs(
-    strategy: Strategy | None, method: str, rate: int, compute: str, wire: str
-) -> tuple[str, int, str, str]:
-    """Strategy (preferred) -> the runtime's (method, rate, compute, wire).
-
-    ``method='original'`` maps onto the float32 wire: the raw samples are
-    gathered and the unquantized eq.-1 weights computed — exactly the
-    centralized-equivalent baseline this runtime already implements.
+    Attributes:
+      logical_bits: the paper's idealized n*d*R budget (§3) for the true
+        sample count n.
+      wire_bytes: bytes the model-axis all-gather ACTUALLY assembles at
+        the center — measured from the encode stage's static payload
+        shapes (so shape-bucket padding, int8 framing and float32 wires
+        all show up), not recomputed from a formula.
+      collectives: collectives one weights evaluation issues in the wire
+        runtime (payload all-gather, + the rowblock row gather; the
+        classic data-sharded runtime adds its Gram psum).
     """
-    if strategy is None:
-        return method, rate, compute, wire
-    if strategy.method == "original":
-        return "sign", 1, strategy.placement, "float32"
-    return strategy.method, strategy.rate, strategy.placement, strategy.wire
+
+    logical_bits: int
+    wire_bytes: int
+    collectives: int
+
+    @property
+    def wire_bits(self) -> int:
+        return 8 * self.wire_bytes
+
+    @property
+    def overhead(self) -> float:
+        """wire bits / logical bits — 1.0 means the wire is as dense as
+        the paper's budget (packed, no padding)."""
+        return 8.0 * self.wire_bytes / max(self.logical_bits, 1)
+
+
+def _as_wire_strategy(
+    strategy: Strategy | None, method: str, rate: int, compute: str, wire: str
+) -> Strategy:
+    """Normalize (strategy | loose kwargs) to the runtime's Strategy.
+
+    The loose spelling ``wire='float32'`` (raw samples gathered, eq.-1
+    weights) is the unquantized baseline: ``method='original'``.
+    """
+    if strategy is not None:
+        return strategy
+    if wire == "float32":
+        return Strategy("original", placement=compute)
+    return Strategy(method, rate=rate, wire=wire, placement=compute)
+
+
+@dataclasses.dataclass(frozen=True)
+class WirePlan:
+    """Stage-decomposed wire runtime for one Strategy on a device mesh.
+
+    Frozen + hashable (usable as a jit-cache key next to Strategy). The
+    three stages are pure functions of their operands — individually
+    jit/vmap-able, composable inside any ``shard_map`` whose mesh carries
+    ``model_axis`` (and ``data_axis`` for the sample-sharded runtime):
+
+      ``encode``  (per machine)  ->  ``wire``  (THE collective)  ->
+      ``central`` (Gram + weights at the center).
+
+    Payloads may carry a leading batch axis (the trial plane's trial
+    dimension); every stage passes it through to the engine's batched
+    kernels.
+    """
+
+    strategy: Strategy
+    data_axis: str = "data"
+    model_axis: str = "model"
+    engine: GramEngine | None = None
+
+    # ---- stage 1: local encoding, R bits/symbol (paper step 1) ----------
+
+    def encode(self, x_loc: jax.Array, *,
+               n_valid: jax.Array | int | None = None) -> jax.Array:
+        """Per-machine quantization of the rank's (..., n, d_loc) feature
+        slice into its wire payload (``estimators.strategy_payload``
+        layouts). ``n_valid`` threads the trial plane's valid-length mask.
+        """
+        s = self.strategy
+        if s.wire == "packed":
+            per = 8 // s.rate
+            assert x_loc.shape[-2] % per == 0, (
+                f"packed wire needs the sample count to be a multiple of "
+                f"{per} (got {x_loc.shape[-2]}); bucket n (pow2 buckets "
+                f"always qualify) or use the int8 wire")
+        payload = estimators.strategy_payload(x_loc, s, n_valid=n_valid)
+        if s.wire == "packed":
+            assert payload.dtype == jnp.uint8, "packed wire must stay packed"
+        return payload
+
+    # ---- stage 2: transmit to center == all-gather over model (step 2) --
+
+    def feature_axis(self, payload: jax.Array) -> int:
+        """Index of the feature axis in a payload (packed wires are
+        feature-major, everything else sample-major)."""
+        return payload.ndim - (2 if payload.dtype == jnp.uint8 else 1)
+
+    def wire(self, payload: jax.Array) -> jax.Array:
+        """THE communication the paper counts: tiled all-gather of the
+        payload over the model axis, reassembling the full feature
+        dimension in rank order (bit-identical to encoding the unsliced
+        data — the trial-plane parity gate)."""
+        return jax.lax.all_gather(
+            payload, self.model_axis, axis=self.feature_axis(payload),
+            tiled=True)
+
+    # ---- stage 3: central statistic + weights (paper step 3) ------------
+
+    def central(
+        self,
+        payload_full: jax.Array,
+        n,
+        *,
+        n_valid: jax.Array | int | None = None,
+        own_payload: jax.Array | None = None,
+        data_sharded: bool = False,
+    ) -> jax.Array:
+        """The center: Gram contraction on the gathered payload + Chow-Liu
+        weights, via the SAME ``estimators`` stage functions every other
+        pipeline runs.
+
+        Args:
+          payload_full: the gathered (full-feature) payload.
+          n: total sample count for the weight normalization (python int,
+            or traced f32 under valid-length masking).
+          own_payload: this rank's pre-gather payload — the lhs row block
+            under the ``rowblock`` placement (its features ARE the rank's
+            rows of the full payload, no slicing needed).
+          data_sharded: samples are sharded over ``data_axis`` (the
+            classic runtime): psum the Gram over it before the weights.
+        """
+        s = self.strategy
+        rows = own_payload if s.placement == "rowblock" else None
+        gram = estimators.payload_gram(
+            payload_full, s, n_valid=n_valid, payload_rows=rows,
+            engine=self.engine)
+        if data_sharded:
+            gram = jax.lax.psum(gram, self.data_axis)
+        if s.placement == "rowblock":
+            # tiled all_gather replicates the row blocks; VMA inference
+            # cannot prove replication for all_gather outputs, hence
+            # check_vma=False on the shard_map below.
+            gram = jax.lax.all_gather(
+                gram, self.model_axis, axis=gram.ndim - 2, tiled=True)
+        elif data_sharded:
+            # replicated over model by construction; make it explicit
+            gram = jax.lax.pmean(gram, self.model_axis)
+        return estimators.weights_from_gram(gram, n, s)
+
+    # ---- composed runtime + accounting ----------------------------------
+
+    def local_weights(self, x_loc: jax.Array) -> jax.Array:
+        """The classic sample+feature sharded runtime body: one device's
+        (n_loc, d_loc) block -> the replicated (d, d) weights. This is the
+        function :func:`build_weights_fn` shard_maps."""
+        n = x_loc.shape[0] * jax.lax.axis_size(self.data_axis)
+        payload = self.encode(x_loc)
+        full = self.wire(payload)
+        return self.central(full, n, own_payload=payload, data_sharded=True)
+
+    def comm_report(self, n: int, d: int, *,
+                    n_pad: int | None = None) -> CommReport:
+        """Measured communication accounting for one (n, d) evaluation.
+
+        ``wire_bytes`` comes from ``jax.eval_shape`` on the encode stage
+        at the shape the sweep actually gathers (``n_pad`` under shape
+        bucketing — padding costs real bytes and is reported as such);
+        ``logical_bits`` uses the true n (the paper's §3 budget).
+        """
+        n_wire = n if n_pad is None else n_pad
+        payload = jax.eval_shape(
+            lambda x: estimators.strategy_payload(x, self.strategy),
+            jax.ShapeDtypeStruct((n_wire, d), jnp.float32))
+        wire_bytes = int(np.prod(payload.shape)) * payload.dtype.itemsize
+        collectives = 1 + (1 if self.strategy.placement == "rowblock" else 0)
+        return CommReport(
+            logical_bits=communication_bits(n, d, self.strategy.rate),
+            wire_bytes=wire_bytes, collectives=collectives)
 
 
 def build_weights_fn(
@@ -98,15 +275,16 @@ def build_weights_fn(
 
     ``strategy`` (a :class:`~repro.core.strategy.Strategy`) is the
     declarative form of the loose ``method``/``rate``/``compute``/``wire``
-    kwargs and wins over them when given.
+    kwargs and wins over them when given; either way the body is the
+    :class:`WirePlan` stage chain ``encode -> wire -> central``.
 
     Wire formats for the model-axis all-gather (THE communication the
     paper counts):
-      * 'int8'    — one byte per symbol (codes, any R <= 7): the easy
-        baseline, already 4-8x under float.
-      * 'packed'  — dense R bits/symbol via :func:`pack_codes` — the
-        paper's actual budget (sign = 1 bit/symbol on the wire). For the
-        sign method the Gram is contracted directly on this payload.
+      * 'int8'    — one byte per symbol (±1 signs or bin codes, any
+        R <= 7): the easy baseline, already 4-8x under float.
+      * 'packed'  — dense R bits/symbol via ``quantizers.pack_codes`` —
+        the paper's actual budget (sign = 1 bit/symbol on the wire). For
+        the sign method the Gram is contracted directly on this payload.
       * 'float32' — unquantized samples (the centralized-equivalent
         baseline the paper compares against).
 
@@ -118,90 +296,16 @@ def build_weights_fn(
     traced backend — 'pallas' or 'xla' — inside shard_map; None = process
     default, which auto-selects per platform).
     """
-    method, rate, compute, wire = _resolve_strategy_kwargs(
-        strategy, method, rate, compute, wire)
-    quant = PerSymbolQuantizer(rate) if method == "persymbol" else None
-    if wire == "packed":
-        assert method == "sign" or 8 % rate == 0
-
-    def local_fn(x_loc: jax.Array) -> jax.Array:
-        # resolved at trace time so a build with engine=None tracks the
-        # process default (set_default_engine) like every other entry point
-        eng = resolve_engine(engine)
-        n = x_loc.shape[0] * jax.lax.axis_size(data_axis)
-        n_loc, d_loc = x_loc.shape
-        midx = jax.lax.axis_index(model_axis)
-        # ---- paper step 1: local encoding, R bits/symbol ----------------
-        if method == "sign":
-            codes = (x_loc >= 0).astype(jnp.int8)  # bit
-        else:
-            codes = quant.encode(x_loc).astype(jnp.int8)  # R <= 7 fits int8
-        # ---- paper step 2: transmit to center == all-gather over model --
-        # and step 3's Gram operand, in whatever dtype the wire delivered
-        packed_full = codes_full = u_full = None
-        if wire == "float32":
-            u_full = jax.lax.all_gather(x_loc, model_axis, axis=1, tiled=True)
-        elif wire == "packed":
-            # pack along the SAMPLE axis (always >> 8/R symbols; the local
-            # feature count can be as small as 1 machine per device)
-            payload = pack_codes(
-                jnp.swapaxes(codes, 0, 1),
-                rate if method != "sign" else 1)              # (d_loc, nR/8)
-            packed_full = jax.lax.all_gather(
-                payload, model_axis, axis=0, tiled=True)      # (d, nR/8)
-            if method != "sign":
-                # per-symbol packed: unpack to bin codes; the centroid
-                # decode stays fused inside the Gram backend
-                codes_full = jnp.swapaxes(
-                    unpack_codes(packed_full, rate), 0, 1).astype(jnp.int8)
-        else:
-            codes_full = jax.lax.all_gather(
-                codes, model_axis, axis=1, tiled=True)
-            if method == "sign":
-                u_full = (codes_full * 2 - 1).astype(jnp.int8)  # ±1 codes
-                codes_full = None
-        # ---- paper step 3: central statistic via the Gram engine --------
-        if u_full is not None:          # values (f32 samples or ±1 int8)
-            if compute == "replicated":
-                gram = eng.gram(u_full)
-            else:
-                u_rows = jax.lax.dynamic_slice_in_dim(
-                    u_full, midx * d_loc, d_loc, 1)
-                gram = eng.gram(u_rows, u_full)  # (d_loc, d)
-        elif codes_full is not None:    # int8 bin codes, decode in-kernel
-            if compute == "replicated":
-                gram = eng.code_gram(codes_full, quant.centroids)
-            else:
-                c_rows = jax.lax.dynamic_slice_in_dim(
-                    codes_full, midx * d_loc, d_loc, 1)
-                gram = eng.code_gram(c_rows, quant.centroids, codes_full)
-        else:                           # sign bits: contract the wire bytes
-            if compute == "replicated":
-                gram = eng.packed_sign_gram(packed_full, n_loc)
-            else:
-                p_rows = jax.lax.dynamic_slice_in_dim(
-                    packed_full, midx * d_loc, d_loc, 0)
-                gram = eng.packed_sign_gram(p_rows, n_loc, packed_full)
-        gram = jax.lax.psum(gram, data_axis)
-        if compute == "rowblock":
-            # tiled all_gather replicates the row blocks; VMA inference cannot
-            # prove replication for all_gather outputs, hence check_vma=False
-            # on the shard_map below.
-            gram = jax.lax.all_gather(gram, model_axis, axis=0, tiled=True)
-        else:
-            # replicated over model by construction; make it explicit
-            gram = jax.lax.pmean(gram, model_axis)
-        if wire == "float32":
-            return _weights_from_gram(gram, "original", n)
-        return _weights_from_gram(gram, method, n)
-
+    strat = _as_wire_strategy(strategy, method, rate, compute, wire)
+    plan = WirePlan(strat, data_axis=data_axis, model_axis=model_axis,
+                    engine=engine)
     in_spec = P(data_axis, model_axis)
     return jax.shard_map(
-        local_fn,
+        plan.local_weights,
         mesh=mesh,
         in_specs=(in_spec,),
         out_specs=P(),
-        check_vma=(compute != "rowblock"),
+        check_vma=(strat.placement != "rowblock"),
     ), NamedSharding(mesh, in_spec)
 
 

@@ -7,6 +7,20 @@ routes it through :class:`repro.core.gram.GramEngine` (Pallas kernels on
 TPU/GPU, plain XLA matmuls on CPU, numpy host reference), so the same code
 serves as both the production path and the kernels' reference semantics.
 Pass ``engine=`` to pin a backend; ``None`` uses the process default.
+
+The declarative entry points decompose into the three stages every
+pipeline in the repo shares (the same decomposition
+``core.distributed.WirePlan`` runs over real collectives):
+
+* :func:`strategy_payload` — **encode**: raw samples -> the strategy's
+  wire payload (±1 int8 signs, int8 bin codes, dense packed bits, or raw
+  f32 for the unquantized baseline), valid-length masked;
+* :func:`payload_gram`    — **central contraction**: payload -> (d, d)
+  Gram through the engine's (batched) kernels, straight off the wire
+  bytes where the format allows it;
+* :func:`weights_from_gram` — **central estimate**: Gram + sample count
+  -> Chow-Liu weights (eqs. 1/4/30), shared verbatim by the batch,
+  streaming, distributed and trial-plane paths.
 """
 from __future__ import annotations
 
@@ -118,9 +132,8 @@ def persymbol_method_weights(
     rho^2, so using rho^2_hat directly is order-equivalent; we report MI.
     """
     n = u_centroids.shape[0]
-    rho_bar = sample_correlation(u_centroids, engine=engine)
-    r2 = jnp.clip(rho_squared_unbiased(rho_bar, n), 0.0, 1.0 - 1e-9)
-    return -0.5 * jnp.log1p(-r2)
+    return weights_from_gram(
+        resolve_engine(engine).gram(u_centroids), n, "persymbol")
 
 
 def persymbol_code_weights(
@@ -133,16 +146,187 @@ def persymbol_code_weights(
     centroid decode happens inside the Gram backend (in-kernel on pallas),
     so no decoded copy of U is materialized."""
     n = codes.shape[0]
-    rho_bar = resolve_engine(engine).code_gram(codes, centroids) / n
-    r2 = jnp.clip(rho_squared_unbiased(rho_bar, n), 0.0, 1.0 - 1e-9)
-    return -0.5 * jnp.log1p(-r2)
+    return weights_from_gram(
+        resolve_engine(engine).code_gram(codes, centroids), n, "persymbol")
 
 
 def gaussian_weights(
     x: jax.Array, *, engine: GramEngine | None = None
 ) -> jax.Array:
     """Centralized (unquantized) baseline: MI from the sample correlation."""
-    return mi_gaussian(sample_correlation(x, engine=engine))
+    return weights_from_gram(
+        resolve_engine(engine).gram(x), x.shape[0], "original")
+
+
+def weights_from_gram(gram: jax.Array, n, method) -> jax.Array:
+    """Central-machine estimate: raw Gram + sample count -> Chow-Liu weights.
+
+    THE shared tail of every pipeline (batch estimators, streaming
+    accumulator, distributed wire runtime, trial plane): ``gram`` is the
+    ((..., d, d)) contraction of whatever the wire delivered, ``n`` the
+    sample count it sums over (a python int, or a traced f32 scalar under
+    the trial plane's valid-length masking), ``method`` a method string or
+    a :class:`~repro.core.strategy.Strategy`.
+
+    * ``'sign'``      — eq. 8 UMVE theta_hat -> MI of signs (eq. 4);
+    * ``'persymbol'`` — eq. 32 quantized correlation -> unbiased rho^2
+      (eq. 30) -> Gaussian MI (eq. 1);
+    * ``'original'``  — sample correlation -> Gaussian MI (eq. 1).
+    """
+    method = getattr(method, "method", method)
+    if method == "original":
+        return mi_gaussian(gram / n)
+    if method == "sign":
+        return mi_sign(0.5 + gram / (2.0 * n))
+    if method != "persymbol":
+        raise ValueError(f"unknown method {method!r}")
+    rho_bar = gram / n
+    # the clip bound must be representable in f32 (1 - 1e-9 rounds to 1.0
+    # and the MWST-irrelevant diagonal would become inf) — same guard as
+    # mi_gaussian
+    r2 = jnp.clip(rho_squared_unbiased(rho_bar, n), 0.0, 1.0 - 1e-7)
+    return -0.5 * jnp.log1p(-r2)
+
+
+def strategy_payload(
+    x: jax.Array,
+    strategy: Strategy,
+    *,
+    n_valid: jax.Array | int | None = None,
+) -> jax.Array:
+    """Encode stage: raw (..., n, d) samples -> the strategy's wire payload.
+
+    This is exactly what one of the paper's machines transmits (and what
+    :func:`payload_gram` contracts): elementwise per feature column, so a
+    feature-sliced call followed by an all-gather reassembles the full
+    payload bit-for-bit — the property the distributed trial plane's
+    parity gate rests on.
+
+    Layouts (leading batch axes pass through):
+      * values / signs / bin codes — sample-major ``(..., n, d)`` (f32 /
+        int8 ±1 / int8 in [0, 2^R));
+      * packed wires — feature-major ``(..., d, n*R/8)`` uint8
+        (``quantizers.pack_codes`` sample-axis layout). Sign payloads pack
+        whenever ``strategy.packed_gram_ok(n)``; per-symbol payloads pack
+        when ``(8 // rate) | n`` (else they fall back to int8 codes).
+
+    ``n_valid`` (may be traced) masks pad rows: values/signs to 0, bin
+    codes to ``quantizers.MASKED_CODE`` (packed wires carry pad symbols as
+    0 bits — :func:`payload_operand` restores the sentinel at the center).
+    """
+    from .quantizers import (MASKED_CODE, PerSymbolQuantizer, pack_codes,
+                             sign_codes, valid_sample_mask)
+
+    n_pad = x.shape[-2]
+    mask = None
+    if n_valid is not None:
+        mask = valid_sample_mask(n_pad, n_valid)[:, None]  # (n, 1)
+
+    if strategy.method == "original":
+        return x if mask is None else jnp.where(mask, x, 0.0)
+    if strategy.method == "sign":
+        if strategy.packed_gram_ok(n_pad):
+            bits = x >= 0
+            if mask is not None:
+                bits &= mask
+            return pack_codes(
+                jnp.swapaxes(bits.astype(jnp.int8), -2, -1), 1)  # (., d, n/8)
+        u = sign_codes(x)
+        return u if mask is None else jnp.where(mask, u, jnp.int8(0))
+    q = PerSymbolQuantizer(strategy.rate)
+    codes = q.encode(x).astype(jnp.int8)
+    if strategy.wire == "packed" and n_pad % (8 // strategy.rate) == 0:
+        # dense R-bit wire: pad symbols travel as code 0 (any valid code —
+        # the center re-masks them from n_valid before contracting)
+        if mask is not None:
+            codes = jnp.where(mask, codes, jnp.int8(0))
+        return pack_codes(
+            jnp.swapaxes(codes, -2, -1), strategy.rate)  # (., d, n*R/8)
+    if mask is not None:
+        codes = jnp.where(mask, codes, jnp.int8(MASKED_CODE))
+    return codes
+
+
+def payload_operand(
+    payload: jax.Array,
+    strategy: Strategy,
+    *,
+    n_valid: jax.Array | int | None = None,
+) -> jax.Array:
+    """Wire payload -> the Gram operand the engine kernels ingest.
+
+    Identity for every format the engine contracts natively (values, ±1
+    signs, bin codes, 1-bit packed signs). Only the per-symbol packed wire
+    needs work: unpack the dense R-bit bytes back to int8 bin codes
+    (feature-major -> sample-major) and restore the ``MASKED_CODE``
+    sentinel on pad rows — integer-exact, so the operand equals the
+    un-packed codes entry for entry.
+    """
+    from .quantizers import MASKED_CODE, unpack_codes, valid_sample_mask
+
+    if strategy.method != "persymbol" or payload.dtype != jnp.uint8:
+        return payload
+    codes = jnp.swapaxes(
+        unpack_codes(payload, strategy.rate), -2, -1).astype(jnp.int8)
+    if n_valid is not None:
+        mask = valid_sample_mask(codes.shape[-2], n_valid)[:, None]
+        codes = jnp.where(mask, codes, jnp.int8(MASKED_CODE))
+    return codes
+
+
+def payload_gram(
+    payload: jax.Array,
+    strategy: Strategy,
+    *,
+    n_valid: jax.Array | int | None = None,
+    payload_rows: jax.Array | None = None,
+    engine: GramEngine | None = None,
+) -> jax.Array:
+    """Central contraction: (gathered) wire payload -> (..., d, d) Gram.
+
+    Dispatches through the engine's batched entry points when the payload
+    carries a leading batch axis (the trial plane's trial dimension — one
+    kernel launch for the whole batch on pallas). 1-bit packed sign
+    payloads are contracted DIRECTLY (XNOR + popcount on the wire bytes);
+    everything else goes through :func:`payload_operand` first.
+
+    ``payload_rows`` (a feature-slice payload of the same format) selects
+    the rowblock placement: the result is the rectangular
+    ``(..., d_rows, d)`` Gram block of those rows against the full
+    payload. ``n_valid`` applies the integer-exact masked-count shift to
+    the packed sign identity (``G = n_valid - 2*popcount``).
+    """
+    eng = resolve_engine(engine)
+    batched = payload.ndim == 3
+
+    if strategy.method == "sign" and payload.dtype == jnp.uint8:
+        n_pad = payload.shape[-1] * 8
+        fn = eng.packed_sign_gram_batch if batched else eng.packed_sign_gram
+        if payload_rows is not None:
+            gram = fn(payload_rows, n_pad, payload)
+        else:
+            gram = fn(payload, n_pad)
+        if n_valid is not None:
+            # pad bits are 0 in every row, so they xor away and the
+            # kernel's n_pad - 2*popcount only needs the integer-exact
+            # shift to the true count: G_valid = n_valid - 2*popcount
+            gram = gram - (n_pad - jnp.asarray(n_valid, jnp.float32))
+        return gram
+
+    u = payload_operand(payload, strategy, n_valid=n_valid)
+    rows = None
+    if payload_rows is not None:
+        rows = payload_operand(payload_rows, strategy, n_valid=n_valid)
+    if strategy.method == "persymbol":
+        from .quantizers import PerSymbolQuantizer
+
+        q = PerSymbolQuantizer(strategy.rate)
+        fn = eng.code_gram_batch if batched else eng.code_gram
+        if rows is not None:
+            return fn(rows, q.centroids, u)
+        return fn(u, q.centroids)
+    fn = eng.gram_batch if batched else eng.gram
+    return fn(u if rows is None else rows, u if rows is not None else None)
 
 
 def strategy_weights(
@@ -153,27 +337,15 @@ def strategy_weights(
 ) -> jax.Array:
     """(n, d) raw samples -> (d, d) Chow-Liu weight matrix for a Strategy.
 
-    The single declarative entry point over the per-method estimators:
-    quantizes per ``strategy.method``/``rate``, honors ``strategy.wire``
-    (a 1-bit packed sign payload is contracted directly when n is a
-    multiple of 8), and dispatches the Gram through ``engine``. Pure and
-    jit-able with ``strategy`` as a trace-time constant — the weights
-    stage of the vmapped trial plane.
+    The single declarative entry point over the per-method estimators —
+    the encode -> contract -> estimate stage chain
+    (:func:`strategy_payload` -> :func:`payload_gram` ->
+    :func:`weights_from_gram`) on one unbatched dataset. Pure and jit-able
+    with ``strategy`` as a trace-time constant.
     """
-    from .quantizers import PerSymbolQuantizer, pack_codes, sign_codes
-
-    if strategy.method == "original":
-        return gaussian_weights(x, engine=engine)
-    if strategy.method == "sign":
-        n = x.shape[0]
-        if strategy.packed_gram_ok(n):
-            payload = pack_codes(
-                jnp.swapaxes((x >= 0).astype(jnp.int8), 0, 1), 1)
-            return sign_method_weights_packed(payload, n, engine=engine)
-        return sign_method_weights(sign_codes(x), engine=engine)
-    q = PerSymbolQuantizer(strategy.rate)
-    codes = q.encode(x).astype(jnp.int8)
-    return persymbol_code_weights(codes, q.centroids, engine=engine)
+    payload = strategy_payload(x, strategy)
+    gram = payload_gram(payload, strategy, engine=engine)
+    return weights_from_gram(gram, x.shape[0], strategy)
 
 
 def strategy_weights_batch(
@@ -186,59 +358,21 @@ def strategy_weights_batch(
     """(t, n, d) stacked raw samples -> (t, d, d) Chow-Liu weights.
 
     The batched, valid-length-masked form of :func:`strategy_weights` used
-    by the one-launch sweep engine (``experiments.run_trials``): the trial
-    axis goes through the Gram engine's ``*_batch`` entry points (a native
-    kernel grid dimension on pallas, one batched einsum on xla) instead of
-    ``vmap``-of-estimator.
+    by the one-launch sweep engine (``experiments.run_trials``): the same
+    stage chain, with the trial axis going through the Gram engine's
+    ``*_batch`` entry points (a native kernel grid dimension on pallas,
+    one batched einsum on xla) instead of ``vmap``-of-estimator.
 
     ``n_valid`` (may be a TRACED scalar) enables shape bucketing: rows
-    >= n_valid are padding. Masking happens post-quantization — sign codes
-    and raw values zeroed, bin codes set to ``quantizers.MASKED_CODE`` — so
+    >= n_valid are padding, masked inside :func:`strategy_payload` so
     every pad row contributes exactly 0 to the Gram and all sample-count
     normalizations use n_valid. For the integer-exact sign paths (int8 and
     packed) the masked statistics are BIT-EQUAL to the unpadded ones;
     float paths agree to accumulation-order rounding, which preserves the
     weight rank order (all Boruvka needs) in every non-adversarial case.
     """
-    from .quantizers import (MASKED_CODE, PerSymbolQuantizer, pack_codes,
-                             sign_codes, valid_sample_mask)
-
-    eng = resolve_engine(engine)
     t, n_pad, d = x.shape
-    if n_valid is None:
-        mask = None
-        n = n_pad
-    else:
-        n = jnp.asarray(n_valid, jnp.float32)
-        mask = valid_sample_mask(n_pad, n_valid)[None, :, None]  # (1, n, 1)
-
-    if strategy.method == "original":
-        xm = x if mask is None else jnp.where(mask, x, 0.0)
-        return mi_gaussian(eng.gram_batch(xm) / n)
-
-    if strategy.method == "sign":
-        if strategy.packed_gram_ok(n_pad):
-            bits = x >= 0
-            if mask is not None:
-                bits &= mask
-            payload = pack_codes(
-                jnp.swapaxes(bits.astype(jnp.int8), -2, -1), 1)  # (t, d, n/8)
-            gram = eng.packed_sign_gram_batch(payload, n_pad)
-            # pad bits are 0 in every row, so they xor away and the kernel's
-            # n_pad - 2*popcount only needs the integer-exact shift to the
-            # true count: G_valid = n_valid - 2*popcount
-            gram = gram - (n_pad - n)
-        else:
-            u = sign_codes(x)
-            if mask is not None:
-                u = jnp.where(mask, u, jnp.int8(0))
-            gram = eng.gram_batch(u)
-        return mi_sign(0.5 + gram / (2.0 * n))
-
-    q = PerSymbolQuantizer(strategy.rate)
-    codes = q.encode(x).astype(jnp.int8)
-    if mask is not None:
-        codes = jnp.where(mask, codes, jnp.int8(MASKED_CODE))
-    rho_bar = eng.code_gram_batch(codes, q.centroids) / n
-    r2 = jnp.clip(rho_squared_unbiased(rho_bar, n), 0.0, 1.0 - 1e-9)
-    return -0.5 * jnp.log1p(-r2)
+    payload = strategy_payload(x, strategy, n_valid=n_valid)
+    gram = payload_gram(payload, strategy, n_valid=n_valid, engine=engine)
+    n = n_pad if n_valid is None else jnp.asarray(n_valid, jnp.float32)
+    return weights_from_gram(gram, n, strategy)

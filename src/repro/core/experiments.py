@@ -28,6 +28,23 @@ replaces it with a batched engine built from three stacked optimizations:
   with a psum-reduced metric stage, scaling sweeps across
   ``--xla_force_host_platform_device_count`` CPUs today and real
   accelerator meshes unchanged.
+* **Distributed trial plane** — a 2-D ``("data", "model")`` mesh
+  (``make_trial_mesh(model=...)``) runs every trial through the
+  stage-decomposed wire runtime (``distributed.WirePlan``): trials shard
+  over ``data``, features over ``model``, and each trial's encode ->
+  all-gather -> central chain issues the paper's ACTUAL collectives. The
+  per-trial metric sums are integer-exact (error indicator, edge
+  symmetric difference, shared-edge count), so the psum-reduced results
+  are bit-identical to the single-device engine, and every strategy's
+  wire cost is reported as a :class:`~repro.core.distributed.CommReport`
+  (logical n*d*R bits vs bytes actually gathered) on ``TrialResult.comm``.
+
+The MWST inside the trial plane is the device Boruvka solver
+(exact-equal to host Kruskal by the shared rank construction);
+``run_trials(..., mst="host_kruskal")`` is the escape hatch for future
+solvers that break that rank equivalence — it pulls the weight tensors
+back in ONE stacked device_get and runs the host Kruskal + host metrics
+loop, metric-identical to the device path on the current estimators.
 
 :func:`mc_sign_crossover` / :func:`mc_persymbol_corr_error` are the
 analogous vmapped engines for the scalar Monte-Carlo curves of
@@ -53,7 +70,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from . import estimators, sampler, trees
-from .chow_liu import boruvka_mst
+from .chow_liu import boruvka_mst, kruskal_mst
+from .distributed import CommReport, WirePlan
 from .gram import GramEngine, resolve_engine
 from .quantizers import PerSymbolQuantizer
 from .strategy import FIG3_STRATEGIES, Strategy
@@ -161,12 +179,21 @@ class TrialResult:
     #: host syncs the whole sweep performed — exactly 1 (the metric-tensor
     #: device_get); the sweep body never touches the host
     host_syncs: int
+    #: label -> [CommReport per n]: honest per-strategy communication
+    #: accounting — the paper's logical n*d*R bits next to the bytes the
+    #: wire actually gathers (measured from the encode stage's payload
+    #: shapes at the bucket the sweep ran; see ``distributed.CommReport``).
+    #: ``collectives`` counts the per-trial wire collectives — 0 unless the
+    #: sweep ran the distributed trial plane (a ("data","model") mesh).
+    comm: dict[str, list[CommReport]] = dataclasses.field(default_factory=dict)
     #: n -> padded bucket the weights stage actually compiled for
     buckets: dict[int, int] = dataclasses.field(default_factory=dict)
     #: module compile-cache entries live after this sweep (see
     #: :func:`compile_cache_size` / :func:`clear_compile_caches`)
     compile_cache_size: int = 0
-    #: devices the rep axis was sharded over (1 = single-device vmap)
+    #: total devices of the mesh the sweep ran under (1 = single-device
+    #: vmap; on a 2-D wire mesh this is data * model — the rep axis
+    #: shards over the "data" axis size only)
     mesh_devices: int = 1
 
     @property
@@ -277,13 +304,23 @@ def _stacked_weights(keys, parents, rhos, n_valid, strategies, n_pad, engine):
 
 def _per_trial_metrics(w: jax.Array, adj_true: jax.Array) -> jax.Array:
     """(S, r, d, d) weights + (r, d, d) truth -> (S, r, 3) per-trial
-    [error, hamming, f1] via one flattened vmapped Boruvka solve."""
+    [error, hamming, shared-edge count] via one flattened vmapped Boruvka
+    solve.
+
+    All three channels are INTEGER-VALUED f32 (the error indicator, the
+    edge symmetric difference, and |E_hat & E_true| — for spanning trees
+    edge F1 is exactly shared/(d-1), recovered once at the end of
+    ``run_trials``), so their sums are exact in f32 under any reduction
+    order: a psum over a sharded rep axis reproduces the single-device
+    sums bit for bit — the distributed trial plane's parity gate.
+    """
     S, r, d, _ = w.shape
     est = jax.vmap(boruvka_mst)(w.reshape(S * r, d, d)).reshape(S, r, d, d)
     err = trees.structure_error(est, adj_true[None]).astype(jnp.float32)
     ham = trees.structure_hamming(est, adj_true[None]).astype(jnp.float32)
-    f1 = trees.edge_f1(est, adj_true[None])
-    return jnp.stack([err, ham, f1], axis=-1)
+    shared = jnp.sum(est & adj_true[None], axis=(-2, -1)).astype(
+        jnp.float32) / 2  # symmetric adjacencies: exact integer halves
+    return jnp.stack([err, ham, shared], axis=-1)
 
 
 @functools.lru_cache(maxsize=None)
@@ -342,13 +379,72 @@ def _sharded_point_fn(
     ))
 
 
+@functools.lru_cache(maxsize=None)
+def _wire_point_fn(
+    strategies: tuple[Strategy, ...],
+    n_pad: int,
+    engine: GramEngine,
+    mesh: Mesh,
+    data_axis: str,
+    model_axis: str,
+):
+    """jit(shard_map): one sweep point on the DISTRIBUTED trial plane —
+    trials sharded over ``data_axis``, features over ``model_axis``.
+
+    Each (data, model) rank samples its rep shard's full-feature data
+    (replicated over the model axis — PRNG-deterministic, so every rank
+    agrees bit for bit), slices out its feature block (its group of the
+    paper's machines), and runs the stage-decomposed wire runtime per
+    strategy: ``WirePlan.encode`` (local quantization of the slice) ->
+    ``WirePlan.wire`` (THE all-gather the paper counts) ->
+    ``WirePlan.central`` (Gram on the gathered payload + weights). The
+    gathered payload is bit-identical to the single-device encode of the
+    unsliced data, so weights, Boruvka trees, and the integer-exact
+    psum-reduced metric sums all reproduce the single-device engine
+    EXACTLY — the parity gate CI enforces on 1 vs 8 forced host devices.
+    """
+    n_model = mesh.shape[model_axis]
+
+    def body(key_data, parents, rhos, adj_true, n_valid):
+        keys = jax.random.wrap_key_data(key_data)
+        x = sampler.sample_tree_ggm_rows_batch(keys, n_pad, parents, rhos)
+        d = x.shape[-1]
+        d_loc = d // n_model
+        midx = jax.lax.axis_index(model_axis)
+        x_loc = jax.lax.dynamic_slice_in_dim(x, midx * d_loc, d_loc, 2)
+        n = jnp.asarray(n_valid, jnp.float32)
+        ws = []
+        for s in strategies:
+            plan = WirePlan(s, data_axis=data_axis, model_axis=model_axis,
+                            engine=engine)
+            payload = plan.encode(x_loc, n_valid=n_valid)
+            full = plan.wire(payload)
+            ws.append(plan.central(full, n, n_valid=n_valid,
+                                   own_payload=payload))
+        w = jnp.stack(ws)
+        sums = _per_trial_metrics(w, adj_true).sum(axis=1)  # (S, 3) local
+        # exact: integer-valued f32 sums; replicated over the model axis
+        # by construction (every rank holds the full gathered payload or
+        # the gathered row blocks)
+        return jax.lax.psum(sums, data_axis)
+
+    return jax.jit(jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(data_axis), P(data_axis), P(data_axis), P(data_axis),
+                  P()),
+        out_specs=P(),
+        check_vma=False,
+    ))
+
+
 # --------------------------------------------------------------------------
 # Compile-cache hygiene (satellite: bound long-lived sweep services)
 # --------------------------------------------------------------------------
 
 def _compile_caches():
     return (_plan_setup, _weights_stage, _mst_metrics_fn, _sharded_point_fn,
-            _crossover_fn, _corr_err_fn)
+            _wire_point_fn, _crossover_fn, _corr_err_fn)
 
 
 def compile_cache_size() -> int:
@@ -377,12 +473,109 @@ def clear_compile_caches() -> int:
 # The sweep engine
 # --------------------------------------------------------------------------
 
+def _comm_reports(
+    plan: TrialPlan, engine: GramEngine, data_axis: str, model_axis: str,
+    wire_plane: bool,
+) -> dict[str, list[CommReport]]:
+    """Per-strategy CommReport per n: logical n*d*R bits (true n) next to
+    the wire bytes the encode stage's payload actually occupies at the
+    bucket the sweep gathered. Collective counts apply only when the wire
+    runtime really ran (the distributed trial plane)."""
+    comm: dict[str, list[CommReport]] = {}
+    for s in plan.strategies:
+        wp = WirePlan(s, data_axis=data_axis, model_axis=model_axis,
+                      engine=engine)
+        reports = []
+        for n in plan.ns:
+            rep = wp.comm_report(n, plan.d, n_pad=plan.bucket_for(n))
+            if not wire_plane:
+                rep = dataclasses.replace(rep, collectives=0)
+            reports.append(rep)
+        comm[s.label] = reports
+    return comm
+
+
+def _package_result(
+    plan: TrialPlan,
+    m: np.ndarray,
+    *,
+    seconds: float,
+    host_syncs: int,
+    comm: dict[str, list[CommReport]],
+    mesh_devices: int,
+) -> TrialResult:
+    """(S, len(ns), 3) mean-metric tensor (f32: [error, hamming, shared
+    edges]) -> TrialResult. Shared by the device and host-Kruskal paths so
+    the f32 arithmetic (notably shared/(d-1) -> edge F1) is identical."""
+    labels = [s.label for s in plan.strategies]
+    error_rate = {lab: [float(v) for v in m[i, :, 0]]
+                  for i, lab in enumerate(labels)}
+    edit_distance = {lab: [float(v) for v in m[i, :, 1]]
+                     for i, lab in enumerate(labels)}
+    # Boruvka/Kruskal estimates and the ground truth are spanning trees,
+    # so edge F1 == shared edges / (d - 1) exactly (same f32 division on
+    # both paths).
+    edge_f1 = {lab: [float(v) for v in m[i, :, 2] / np.float32(plan.d - 1)]
+               for i, lab in enumerate(labels)}
+    return TrialResult(
+        plan=plan, error_rate=error_rate, edit_distance=edit_distance,
+        edge_f1=edge_f1, seconds=seconds, host_syncs=host_syncs, comm=comm,
+        buckets=plan.buckets, compile_cache_size=compile_cache_size(),
+        mesh_devices=mesh_devices)
+
+
+def _host_kruskal_trials(
+    plan: TrialPlan, engine: GramEngine, data_axis: str, model_axis: str
+) -> TrialResult:
+    """The ``mst="host_kruskal"`` escape hatch: device weights stage, host
+    MWST + metrics.
+
+    Every (n, strategy, rep) weight matrix is computed by the SAME
+    compiled weights stage as the device path, stacked across ns ((S, r,
+    d, d) is n-independent) and read back in ONE ``jax.device_get`` —
+    host_syncs stays 1 — then the host loop runs ``kruskal_mst`` (the
+    paper's §3 solver) and numpy metrics per trial. Metric-identical to
+    the device Boruvka path while the two solvers are rank-equivalent;
+    the hatch exists for future solvers that break that equivalence.
+    """
+    parents, rhos, adj_true, keys = _plan_setup(*_setup_key(plan))
+    t0 = time.perf_counter()
+    ws = []
+    for n in plan.ns:
+        n_pad = plan.bucket_for(n)
+        ws.append(_weights_stage(plan.strategies, n_pad, engine)(
+            keys, parents, rhos, jnp.asarray(n, jnp.int32)))
+    stacked = jnp.stack(ws)  # (len(ns), S, reps, d, d)
+    host_w, host_adj = jax.device_get(
+        jax.block_until_ready((stacked, adj_true)))
+    syncs = 1
+    d = plan.d
+    sums = np.zeros((len(plan.strategies), len(plan.ns), 3), np.float32)
+    for i_n in range(len(plan.ns)):
+        for i_s in range(len(plan.strategies)):
+            for rep in range(plan.reps):
+                est = np.zeros((d, d), dtype=bool)
+                for j, k in kruskal_mst(host_w[i_n, i_s, rep]):
+                    est[j, k] = est[k, j] = True
+                true = host_adj[rep]
+                sums[i_s, i_n, 0] += (est != true).any()
+                sums[i_s, i_n, 1] += (est != true).sum() // 2
+                sums[i_s, i_n, 2] += (est & true).sum() // 2
+    m = sums / np.float32(plan.reps)
+    seconds = time.perf_counter() - t0
+    comm = _comm_reports(plan, engine, data_axis, model_axis, False)
+    return _package_result(plan, m, seconds=seconds, host_syncs=syncs,
+                           comm=comm, mesh_devices=1)
+
+
 def run_trials(
     plan: TrialPlan,
     *,
     engine: GramEngine | None = None,
     mesh: Mesh | None = None,
     data_axis: str = "data",
+    model_axis: str = "model",
+    mst: str = "device",
 ) -> TrialResult:
     """Execute a full Monte-Carlo sweep on device with ONE host sync.
 
@@ -401,27 +594,55 @@ def run_trials(
     EXPLICIT ``jax.device_get``, so the sweep body stays clean under
     ``jax.transfer_guard_device_to_host("disallow")``.
 
-    The MWST inside the trial plane is always the device Boruvka solver —
-    exact-equal to host Kruskal by the shared rank construction (so a
-    ``Strategy(mst='kruskal')`` measures identically here).
+    ``mst`` picks the MWST solver: ``"device"`` (default) is the on-device
+    Boruvka — exact-equal to host Kruskal by the shared rank construction
+    (so a ``Strategy(mst='kruskal')`` measures identically here) —
+    ``"host_kruskal"`` is the escape hatch for future solvers that break
+    that rank equivalence: the device weights are read back in one stacked
+    ``device_get`` (host_syncs stays 1) and the MWST + metrics run as a
+    host loop; metric-identical to the device path on the current
+    estimators (pinned by test).
 
-    With ``mesh=`` (e.g. ``launch.mesh.make_trial_mesh()``) the rep axis
-    is shard_mapped over ``mesh.shape[data_axis]`` devices with
-    psum-reduced metric sums; ``plan.reps`` must divide evenly. Per-trial
-    draws are keyed per (rep, row), so sharding — like bucketing — cannot
-    change any trial's data or recovered tree.
+    Mesh modes (``plan.reps`` must divide the ``data_axis`` size; draws
+    are keyed per (rep, row), so neither sharding nor bucketing can change
+    any trial's data or recovered tree):
+
+    * 1-D ``("data",)`` (``launch.mesh.make_trial_mesh()``) — the rep axis
+      is shard_mapped over the data axis with psum-reduced metric sums.
+    * 2-D ``("data", "model")`` (``make_trial_mesh(model=M)``) — the
+      DISTRIBUTED trial plane: reps shard over data AND features over
+      model (``plan.d % M == 0``), each trial running the stage-decomposed
+      wire runtime (``distributed.WirePlan``: encode -> all-gather ->
+      central) with the paper's actual collectives. Metric sums are
+      integer-exact, so results are bit-identical to the single-device
+      engine; ``TrialResult.comm`` carries each strategy's measured
+      CommReport either way.
     """
     engine = resolve_engine(engine)
     labels = [s.label for s in plan.strategies]
     if len(set(labels)) != len(labels):
         raise ValueError(f"duplicate strategy labels: {labels}")
+    if mst not in ("device", "host_kruskal"):
+        raise ValueError(f"unknown mst mode {mst!r}")
+    if mst == "host_kruskal":
+        if mesh is not None:
+            raise ValueError(
+                "mst='host_kruskal' is the single-process escape hatch; "
+                "run it without a mesh")
+        return _host_kruskal_trials(plan, engine, data_axis, model_axis)
     shards = 1
+    wire_plane = False
     if mesh is not None:
         shards = mesh.shape[data_axis]
         if plan.reps % shards != 0:
             raise ValueError(
                 f"reps={plan.reps} must divide over the {shards}-way "
                 f"{data_axis!r} mesh axis")
+        wire_plane = model_axis in mesh.axis_names
+        if wire_plane and plan.d % mesh.shape[model_axis] != 0:
+            raise ValueError(
+                f"d={plan.d} must divide over the "
+                f"{mesh.shape[model_axis]}-way {model_axis!r} mesh axis")
     parents, rhos, adj_true, keys = _plan_setup(*_setup_key(plan))
     warm_thread = None
     if mesh is not None:
@@ -458,6 +679,12 @@ def run_trials(
                 warm_thread.join()
                 warm_thread = None
             point_sums.append(metrics_fn(w, adj_true))
+        elif wire_plane:
+            point_sums.append(
+                _wire_point_fn(
+                    plan.strategies, n_pad, engine, mesh, data_axis,
+                    model_axis)(
+                    key_data, parents, rhos, adj_true, n_valid))
         else:
             point_sums.append(
                 _sharded_point_fn(
@@ -474,17 +701,10 @@ def run_trials(
     syncs += 1
     seconds = time.perf_counter() - t0
 
-    error_rate = {lab: [float(v) for v in m[i, :, 0]]
-                  for i, lab in enumerate(labels)}
-    edit_distance = {lab: [float(v) for v in m[i, :, 1]]
-                     for i, lab in enumerate(labels)}
-    edge_f1 = {lab: [float(v) for v in m[i, :, 2]]
-               for i, lab in enumerate(labels)}
-    return TrialResult(
-        plan=plan, error_rate=error_rate, edit_distance=edit_distance,
-        edge_f1=edge_f1, seconds=seconds, host_syncs=syncs,
-        buckets=plan.buckets, compile_cache_size=compile_cache_size(),
-        mesh_devices=shards)
+    comm = _comm_reports(plan, engine, data_axis, model_axis, wire_plane)
+    return _package_result(
+        plan, m, seconds=seconds, host_syncs=syncs, comm=comm,
+        mesh_devices=(mesh.size if mesh is not None else 1))
 
 
 # --------------------------------------------------------------------------

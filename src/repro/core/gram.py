@@ -38,9 +38,11 @@ Every entry point has a ``*_batch`` twin taking a leading batch axis
 ((b, n, d) values / codes, (b, d, nb) packed payloads) and returning
 (b, d, d). On the pallas backend the batch axis is a native leading grid
 dimension of the kernel — one launch for the whole batch, not a ``vmap``
-of ``pallas_call`` — which is how the trial plane
+of ``pallas_call``. Two consumers ride it: the trial plane
 (``core.experiments.run_trials``) turns a Monte-Carlo trial axis into a
-single kernel grid.
+single kernel grid, and the streaming accumulator's shard-ingestion path
+(``StreamingGram.update_codes_batch`` / ``update_packed_batch``) folds a
+stack of per-machine wire blocks in one launch.
 """
 from __future__ import annotations
 

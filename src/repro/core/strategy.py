@@ -101,11 +101,26 @@ class Strategy:
             return self.rate
         return 32 if self.wire == "float32" else 8
 
-    def communication_bits(self, n: int, d: int) -> int:
-        """Total wire bits an (n, d) dataset actually costs under this
-        strategy's wire format (n * d * bits_per_symbol); the paper's
-        idealized n * d * R only for the 'packed' wire."""
+    def logical_bits(self, n: int, d: int) -> int:
+        """The paper's idealized communication budget: n * d * R bits (§3)
+        — R information bits per transmitted symbol, independent of how
+        the wire actually frames them. Pair with :meth:`wire_bits` for the
+        honest cost (the two agree only on the dense 'packed' wire)."""
+        return n * d * self.rate
+
+    def wire_bits(self, n: int, d: int) -> int:
+        """Bits an (n, d) dataset ACTUALLY moves under this strategy's wire
+        format: n * d * bits_per_symbol. A 'float32' wire spends 32
+        bits/symbol and an 'int8' wire 8 bits/symbol REGARDLESS of R —
+        only the dense 'packed' wire achieves the paper's n * d * R
+        (:meth:`logical_bits`)."""
         return n * d * self.bits_per_symbol
+
+    def communication_bits(self, n: int, d: int) -> int:
+        """Alias of :meth:`wire_bits` (the honest accounting), kept for
+        callers of the original name; use :meth:`logical_bits` for the
+        paper's idealized n * d * R."""
+        return self.wire_bits(n, d)
 
     def packed_gram_ok(self, n: int) -> bool:
         """True when the dense packed payload of ``n`` samples can feed the

@@ -15,7 +15,16 @@ Every per-batch Gram goes through :class:`repro.core.gram.GramEngine`:
 * :meth:`update_codes` folds in already-quantized wire blocks directly
   (what the center actually receives);
 * :meth:`update_packed` folds in 1-bit packed sign payloads via the
-  XNOR+popcount Gram — the wire bytes are the compute operand.
+  XNOR+popcount Gram — the wire bytes are the compute operand;
+* :meth:`update_codes_batch` / :meth:`update_packed_batch` fold a STACK of
+  per-machine blocks (the shard-ingestion case: M machines' payloads
+  arriving together) through the engine's batched kernel grids
+  (``GramEngine.code_gram_batch`` / ``packed_sign_gram_batch``) — ONE
+  launch for all machines, summed into the accumulator.
+
+The final estimate (:meth:`weights`) is ``estimators.weights_from_gram``
+— the same central-machine math the batch, distributed and trial-plane
+paths run, so streaming equals batch exactly on the concatenated stream.
 """
 from __future__ import annotations
 
@@ -85,10 +94,7 @@ class StreamingGram:
         indices in [0, 2^R). Codes go straight into the kernel as int8."""
         assert codes.shape[1] == self.d
         if self.method == "sign":
-            u = jnp.asarray(codes).astype(jnp.int8)
-            # accept {0,1} wire bits as well as {-1,+1} signs
-            u = jnp.where(u > 0, jnp.int8(1), jnp.int8(-1))
-            g = self._eng.gram(u)
+            g = self._eng.gram(self._codes_pm1(codes))
         elif self.method == "persymbol":
             g = self._eng.code_gram(
                 jnp.asarray(codes).astype(jnp.int8), self._quant.centroids)
@@ -109,18 +115,56 @@ class StreamingGram:
         self.n += n_batch
         return self
 
+    def _codes_pm1(self, codes: jax.Array) -> jax.Array:
+        """Accept {0,1} wire bits as well as {-1,+1} signs, as int8."""
+        u = jnp.asarray(codes).astype(jnp.int8)
+        return jnp.where(u > 0, jnp.int8(1), jnp.int8(-1))
+
+    def update_codes_batch(self, codes: jax.Array) -> "StreamingGram":
+        """Fold in a STACK of already-quantized per-machine wire blocks —
+        (m, n_b, d) int8 — through ONE batched Gram launch.
+
+        The shard-ingestion path of the distributed pipeline: m machines'
+        code blocks arrive together and enter the engine as a native
+        kernel grid (``GramEngine.code_gram_batch`` / ``gram_batch``)
+        instead of m sequential launches; the per-machine Grams are summed
+        into the accumulator. Exactly equals m :meth:`update_codes` calls.
+        """
+        assert codes.ndim == 3 and codes.shape[2] == self.d, codes.shape
+        m, n_b, _ = codes.shape
+        if self.method == "sign":
+            g = self._eng.gram_batch(self._codes_pm1(codes))
+        elif self.method == "persymbol":
+            g = self._eng.code_gram_batch(
+                jnp.asarray(codes).astype(jnp.int8), self._quant.centroids)
+        else:
+            raise ValueError("update_codes_batch requires a quantized method")
+        self.gram = self.gram + jnp.sum(g, axis=0)
+        self.n += m * n_b
+        return self
+
+    def update_packed_batch(
+        self, payloads: jax.Array, n_batch: int
+    ) -> "StreamingGram":
+        """Fold in a STACK of 1-bit packed sign payloads — (m, d,
+        ceil(n_b/8)) uint8, one per machine, each encoding ``n_batch``
+        samples — via ONE ``packed_sign_gram_batch`` launch (the machine
+        axis is a native kernel grid dimension on pallas). The wire bytes
+        are the compute operand; nothing is unpacked to HBM. Exactly
+        equals m :meth:`update_packed` calls."""
+        assert self.method == "sign", "packed wire is the sign method"
+        assert payloads.ndim == 3 and payloads.shape[1] == self.d, (
+            payloads.shape)
+        g = self._eng.packed_sign_gram_batch(payloads, n_batch)
+        self.gram = self.gram + jnp.sum(g, axis=0)
+        self.n += payloads.shape[0] * n_batch
+        return self
+
     def weights(self) -> jax.Array:
         """Chow-Liu weight matrix — identical to the batch estimator on the
-        concatenation of every batch seen so far."""
-        if self.method == "sign":
-            theta = 0.5 + self.gram / (2.0 * self.n)
-            return estimators.mi_sign(theta)
-        rho_bar = self.gram / self.n
-        if self.method == "persymbol":
-            r2 = jnp.clip(
-                estimators.rho_squared_unbiased(rho_bar, self.n), 0.0, 1.0 - 1e-7)
-            return -0.5 * jnp.log1p(-r2)
-        return estimators.mi_gaussian(rho_bar)
+        concatenation of every batch seen so far (the shared
+        ``estimators.weights_from_gram`` central-machine math)."""
+        return estimators.weights_from_gram(self.gram, self.n, self.method)
 
     def learn_adjacency(self) -> jax.Array:
         """Device-side structure estimate: weights -> Boruvka MWST, no host

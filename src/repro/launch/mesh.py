@@ -24,15 +24,34 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
-def make_trial_mesh(data: int | None = None):
-    """1-D ("data",) mesh for the Monte-Carlo trial plane.
+def make_trial_mesh(data: int | None = None, model: int | None = None):
+    """Mesh for the Monte-Carlo trial plane.
 
+    Without ``model``: the 1-D ("data",) mesh —
     ``core.experiments.run_trials(..., mesh=make_trial_mesh())`` shard_maps
     the rep axis of a sweep over this axis — all local devices by default
     (``--xla_force_host_platform_device_count`` CPUs, or every accelerator
     chip). ``data`` must divide the plan's rep count.
+
+    With ``model=M``: the 2-D ("data", "model") wire mesh of the
+    DISTRIBUTED trial plane — reps shard over ``data`` (defaulting to
+    every remaining device) and features over ``model`` (each model rank
+    plays a block of the paper's machines; ``M`` must divide the plan's
+    d), so every trial's encode -> all-gather -> central chain runs the
+    paper's actual collectives (``distributed.WirePlan``).
     """
     n = len(jax.devices())
+    if model is not None:
+        if model < 1 or n % model != 0:
+            raise ValueError(
+                f"model={model} must divide the {n} local devices")
+        data = (n // model) if data is None else data
+        if data * model > n:
+            raise ValueError(
+                f"requested {data}x{model} trial mesh on {n} devices")
+        return jax.make_mesh(
+            (data, model), ("data", "model"),
+            axis_types=(AxisType.Auto,) * 2)
     data = n if data is None else data
     if data > n:
         raise ValueError(f"requested {data}-way trial mesh on {n} devices")

@@ -187,10 +187,61 @@ def test_compressed_collectives_and_error_feedback():
 
 
 def test_communication_cost_accounting():
-    """Sign method over the wire is n*d*R bits (paper §3)."""
+    """Logical cost is the paper's n*d*R bits (§3); the wire cost is
+    format-honest (float32 = 32 and int8 = 8 bits/symbol regardless of R,
+    only the dense packed wire achieves n*d*R)."""
     from repro.core.distributed import communication_bits
+    from repro.core.strategy import Strategy
+
     assert communication_bits(1000, 20, 1) == 20_000
     assert communication_bits(500, 20, 4) == 40_000
+    r4 = Strategy("persymbol", rate=4)
+    assert r4.logical_bits(500, 20) == 40_000
+    assert r4.wire_bits(500, 20) == 80_000          # int8 wire: 8 bits/sym
+    assert Strategy("persymbol", rate=4, wire="packed").wire_bits(
+        500, 20) == 40_000                          # packed == logical
+    assert Strategy("sign").logical_bits(1000, 20) == 20_000
+    assert Strategy("sign").wire_bits(1000, 20) == 160_000
+    assert Strategy("sign", wire="packed").wire_bits(1000, 20) == 20_000
+    orig = Strategy("original")
+    assert orig.wire_bits(1000, 20) == orig.logical_bits(1000, 20) \
+        == 32 * 20_000
+    # the pre-existing name keeps the honest semantics
+    assert r4.communication_bits(500, 20) == r4.wire_bits(500, 20)
+
+
+def test_comm_report_measures_payload_shapes():
+    """CommReport.wire_bytes equals the nbytes of the payload the encode
+    stage actually emits (and the model-axis gather assembles), for every
+    wire format — measured from the stage, not recomputed from a formula."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.distributed import WirePlan, communication_bits
+    from repro.core.estimators import strategy_payload
+    from repro.core.strategy import Strategy
+
+    n, d = 256, 12
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    for strat, expect in [
+        (Strategy("sign"), n * d),                            # int8
+        (Strategy("sign", wire="packed"), n * d // 8),        # 1 bit/sym
+        (Strategy("persymbol", rate=4), n * d),               # int8 codes
+        (Strategy("persymbol", rate=4, wire="packed"), n * d // 2),
+        (Strategy("persymbol", rate=2, wire="packed"), n * d // 4),
+        (Strategy("original"), 4 * n * d),                    # f32
+    ]:
+        plan = WirePlan(strat)
+        rep = plan.comm_report(n, d)
+        payload = strategy_payload(x, strat)
+        assert rep.wire_bytes == payload.nbytes == expect, (strat, rep)
+        assert rep.logical_bits == communication_bits(n, d, strat.rate)
+        assert rep.collectives == 1
+    # rowblock adds the row-block gather; bucketing pads the wire
+    rb = WirePlan(Strategy("sign", placement="rowblock"))
+    assert rb.comm_report(n, d).collectives == 2
+    padded = WirePlan(Strategy("sign")).comm_report(100, d, n_pad=128)
+    assert padded.wire_bytes == 128 * d and padded.logical_bits == 100 * d
 
 
 def test_wire_formats_and_ep2d():
@@ -232,6 +283,101 @@ def test_wire_formats_and_ep2d():
         sharding.set_mesh(None); sharding.set_ep2d(False)
         assert float(jnp.abs(o_ref - o_ep).max()) < 1e-5
         print('wire formats + ep2d OK')
+    """)
+
+
+def test_rowblock_packed_wire_placements():
+    """The rowblock placement slice composes with the packed wire's unpack
+    path (persymbol) and the direct popcount path (sign): all four
+    (placement x packed-wire method) combinations reproduce the
+    centralized weights and tree."""
+    run_devices("""
+        import numpy as np, jax, jax.numpy as jnp
+        import repro.core as core
+        from repro.core import estimators, quantizers
+        from repro.core.distributed import (distributed_learn_structure,
+                                            distributed_weights)
+        from repro.core.strategy import Strategy
+        rng = np.random.default_rng(0)
+        d, n = 16, 4096
+        edges = core.random_tree(d, rng)
+        w = rng.uniform(0.4, 0.9, d - 1)
+        x = core.sampler.sample_tree_ggm(jax.random.key(0), n, d, edges, w)
+        mesh = jax.make_mesh((2, 4), ('data', 'model'),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        off = ~np.eye(d, dtype=bool)
+        refs = {
+            'sign': estimators.sign_method_weights(quantizers.sign_quantize(x)),
+            'persymbol': estimators.persymbol_method_weights(
+                quantizers.PerSymbolQuantizer(2).quantize(x)),
+        }
+        for method in ('sign', 'persymbol'):
+            for placement in ('replicated', 'rowblock'):
+                strat = Strategy(method, rate=2, wire='packed',
+                                 placement=placement)
+                got = distributed_weights(x, mesh, strategy=strat)
+                err = float(np.abs(np.asarray(got - refs[method]))[off].max())
+                assert err < 1e-4, (method, placement, err)
+                est = distributed_learn_structure(x, mesh, strategy=strat)
+                assert core.tree_edit_distance(edges, est) == 0, (
+                    method, placement)
+        print('rowblock x packed wire OK')
+    """)
+
+
+def test_wire_trial_plane_parity():
+    """ACCEPTANCE GATE: for every Fig.-3 strategy, run_trials under a
+    ("data", "model") wire mesh — each trial's encode -> all-gather ->
+    central chain running the paper's actual collectives — reproduces the
+    single-device trial plane's metrics EXACTLY (integer-exact psum-
+    reduced sums), on 1 and 8 forced host devices, with one host sync per
+    sweep and honest per-strategy CommReports attached."""
+    run_devices("""
+        import numpy as np, jax
+        from repro.core.experiments import TrialPlan, run_trials
+        from repro.core.strategy import FIG3_STRATEGIES, Strategy
+        from repro.launch.mesh import make_trial_mesh
+        plan = TrialPlan(d=16, ns=(100, 400), strategies=FIG3_STRATEGIES,
+                         reps=8)
+        ref = run_trials(plan)                       # single-device vmap
+        r11 = run_trials(plan, mesh=make_trial_mesh(1, model=1))
+        r24 = run_trials(plan, mesh=make_trial_mesh(2, model=4))
+        assert r24.mesh_devices == 8 and r24.host_syncs == 1
+        assert r11.host_syncs == 1
+        for r, name in ((r11, '1x1'), (r24, '2x4')):
+            for s in FIG3_STRATEGIES:
+                lab = s.label
+                assert r.error_rate[lab] == ref.error_rate[lab], (name, lab)
+                assert r.edit_distance[lab] == ref.edit_distance[lab], (
+                    name, lab)
+                assert r.edge_f1[lab] == ref.edge_f1[lab], (name, lab)
+        # rowblock placement inside the wire plane: same exact metrics
+        # (integer-exact sign Gram through the rectangular row blocks)
+        rb = TrialPlan(d=16, ns=(100,),
+                       strategies=(Strategy('sign', placement='rowblock'),),
+                       reps=8)
+        ref_rb = run_trials(rb)
+        got_rb = run_trials(rb, mesh=make_trial_mesh(2, model=4))
+        assert got_rb.error_rate == ref_rb.error_rate
+        assert got_rb.edge_f1 == ref_rb.edge_f1
+        # honest comm accounting rides along: logical n*d*R vs the
+        # bucket-shaped bytes the gather actually moved, + the collective
+        sign = r24.comm['sign']
+        assert [c.logical_bits for c in sign] == [100 * 16, 400 * 16]
+        assert [c.wire_bytes for c in sign] == [128 * 16, 512 * 16]
+        assert all(c.collectives == 1 for c in sign)
+        assert [c.wire_bytes for c in r24.comm['original']] == [
+            4 * 128 * 16, 4 * 512 * 16]
+        # d must divide the model axis
+        try:
+            run_trials(TrialPlan(d=15, ns=(64,),
+                                 strategies=(Strategy('sign'),), reps=8),
+                       mesh=make_trial_mesh(2, model=4))
+        except ValueError:
+            pass
+        else:
+            raise AssertionError('indivisible d must raise')
+        print('wire trial plane parity OK')
     """)
 
 

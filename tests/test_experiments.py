@@ -390,6 +390,53 @@ def test_compile_cache_helpers_and_plan_setup_cache():
     assert res.host_syncs == 1
 
 
+def test_run_trials_host_kruskal_matches_device():
+    """The host-loop escape hatch (run_trials(mst='host_kruskal')) is
+    metric-identical to the device Boruvka path on the current estimators
+    (the rank-equivalence the hatch exists to outlive), still one host
+    sync (a single stacked weights device_get)."""
+    plan = TrialPlan(d=10, ns=(60, 250), strategies=FIG3_STRATEGIES[:3],
+                     reps=6)
+    dev = run_trials(plan)
+    host = run_trials(plan, mst="host_kruskal")
+    assert host.host_syncs == 1
+    for s in plan.strategies:
+        lab = s.label
+        assert host.error_rate[lab] == dev.error_rate[lab], lab
+        assert host.edit_distance[lab] == dev.edit_distance[lab], lab
+        assert host.edge_f1[lab] == dev.edge_f1[lab], lab
+    with pytest.raises(ValueError):
+        run_trials(plan, mst="prim")
+    with pytest.raises(ValueError):  # the hatch is single-process only
+        import jax as _jax
+        run_trials(plan, mst="host_kruskal",
+                   mesh=_jax.make_mesh((1,), ("data",)))
+
+
+def test_trial_result_comm_reports():
+    """Every sweep carries honest per-strategy communication accounting:
+    the paper's logical n*d*R next to the wire bytes of the (bucketed)
+    payload the encode stage emits."""
+    plan = TrialPlan(d=8, ns=(100,),
+                     strategies=(Strategy("sign", wire="packed"),
+                                 Strategy("persymbol", rate=4),
+                                 Strategy("original")),
+                     reps=4)
+    res = run_trials(plan)
+    comm = res.comm
+    assert set(comm) == set(res.error_rate)
+    n_pad = plan.bucket_for(100)  # 128
+    assert comm["sign"][0].logical_bits == 100 * 8
+    assert comm["sign"][0].wire_bytes == n_pad * 8 // 8     # 1 bit/sym
+    assert comm["sign"][0].collectives == 0                 # no wire mesh
+    assert comm["R4"][0].logical_bits == 4 * 100 * 8
+    assert comm["R4"][0].wire_bytes == n_pad * 8            # byte per code
+    assert comm["original"][0].wire_bytes == 4 * n_pad * 8  # f32 wire
+    assert comm["original"][0].wire_bits == 8 * 4 * n_pad * 8
+    assert comm["sign"][0].overhead == pytest.approx(
+        n_pad / 100)  # padding is the only packed-wire overhead
+
+
 # --------------------------------------------------------------------------
 # Strategy plumbing through the other layers
 # --------------------------------------------------------------------------
@@ -429,6 +476,52 @@ def test_streaming_from_strategy_and_device_learn():
         trees.edges_canonical(sg.learn_structure("kruskal"))
     with pytest.raises(ValueError):
         sg.learn_structure("nope")
+
+
+def test_streaming_batch_ingestion_matches_sequential():
+    """update_codes_batch / update_packed_batch (one batched Gram launch
+    for a stack of per-machine blocks) fold in exactly what the sequential
+    per-block updates fold in."""
+    from repro.core.quantizers import PerSymbolQuantizer, bitpack_signs
+
+    rng = np.random.default_rng(7)
+    d, n_b, m = 6, 64, 4
+    x = rng.normal(size=(m, n_b, d)).astype(np.float32)
+
+    # per-symbol codes
+    q = PerSymbolQuantizer(3)
+    codes = np.asarray(q.encode(jnp.asarray(x)))
+    seq = StreamingGram(d=d, method="persymbol", rate=3)
+    for i in range(m):
+        seq.update_codes(jnp.asarray(codes[i]))
+    bat = StreamingGram(d=d, method="persymbol", rate=3)
+    bat.update_codes_batch(jnp.asarray(codes).astype(jnp.int8))
+    assert bat.n == seq.n == m * n_b
+    assert np.allclose(np.asarray(bat.gram), np.asarray(seq.gram), atol=1e-4)
+    assert np.allclose(np.asarray(bat.weights()), np.asarray(seq.weights()),
+                       atol=1e-5)
+
+    # sign codes (int8 wire) and 1-bit packed payloads
+    seq = StreamingGram(d=d, method="sign")
+    bat = StreamingGram(d=d, method="sign")
+    pk_seq = StreamingGram(d=d, method="sign")
+    pk_bat = StreamingGram(d=d, method="sign")
+    signs = (x >= 0).astype(np.int8)
+    payloads = bitpack_signs(
+        jnp.asarray(np.swapaxes(np.where(signs > 0, 1, -1), 1, 2)))
+    for i in range(m):
+        seq.update_codes(jnp.asarray(signs[i]))
+        pk_seq.update_packed(payloads[i], n_b)
+    bat.update_codes_batch(jnp.asarray(signs))
+    pk_bat.update_packed_batch(payloads, n_b)
+    # integer-exact paths: bit-equal accumulators
+    assert np.array_equal(np.asarray(bat.gram), np.asarray(seq.gram))
+    assert np.array_equal(np.asarray(pk_bat.gram), np.asarray(pk_seq.gram))
+    assert np.array_equal(np.asarray(pk_bat.gram), np.asarray(bat.gram))
+    assert pk_bat.n == bat.n == m * n_b
+    with pytest.raises(ValueError):
+        StreamingGram(d=d, method="original").update_codes_batch(
+            jnp.asarray(signs))
 
 
 def test_mc_engines_run_and_bound():
