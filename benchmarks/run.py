@@ -16,7 +16,7 @@ import time
 from . import (ext_glasso, fig3_structure_error, fig56_crossover, fig7_star,
                fig8_rel_error, fig9_quality_quantity, fig1011_skeleton,
                ggm_comm, ggm_roofline, gram_engine, kernel_throughput,
-               roofline, trials)
+               roofline, sparse, trials)
 
 BENCHES = {
     "fig3": fig3_structure_error.run,
@@ -31,25 +31,41 @@ BENCHES = {
     "gram": gram_engine.run,
     "kernels": kernel_throughput.run,
     "roofline": roofline.run,
+    "sparse": sparse.run,
     "trials": trials.run,
 }
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BENCH_GRAM_JSON = os.path.join(_REPO_ROOT, "BENCH_gram.json")
 BENCH_TRIALS_JSON = os.path.join(_REPO_ROOT, "BENCH_trials.json")
+BENCH_SPARSE_JSON = os.path.join(_REPO_ROOT, "BENCH_sparse.json")
+
+
+def _write_slim(payload: dict, keys: tuple, path: str) -> str:
+    """Shared slim-artifact writer (the gram artifact needs bespoke row
+    slicing and keeps its own)."""
+    with open(path, "w") as f:
+        json.dump({k: payload[k] for k in keys}, f, indent=1, default=float)
+    return path
+
+
+def write_bench_sparse(payload: dict, path: str = BENCH_SPARSE_JSON) -> str:
+    """Persist the sparse-trial-plane artifact: per-(strategy, n) support
+    recovery (F1/precision/recall) + comm accounting, engine throughput,
+    and the parity / one-sync acceptance checks."""
+    return _write_slim(payload, (
+        "d", "lam", "density", "ns", "reps", "strategies", "glasso_tol",
+        "glasso_steps", "engine", "wire_parity", "rows", "checks"), path)
 
 
 def write_bench_trials(payload: dict, path: str = BENCH_TRIALS_JSON) -> str:
     """Persist the trial-plane perf artifact: sweep-engine trials/s per
     mode (exact / bucketed / sharded, cold and warm) vs the legacy
     per-trial loop, and the speedups + acceptance checks."""
-    slim = {k: payload[k] for k in (
+    return _write_slim(payload, (
         "backend", "d", "ns", "reps", "strategies", "trials", "buckets",
         "engine", "loop", "speedup_warm", "speedup_cold", "cold_vs_pr2",
-        "comm", "checks")}
-    with open(path, "w") as f:
-        json.dump(slim, f, indent=1, default=float)
-    return path
+        "comm", "checks"), path)
 
 
 def write_bench_gram(payload: dict, path: str = BENCH_GRAM_JSON) -> str:
@@ -91,6 +107,8 @@ def main() -> int:
                 print("wrote", write_bench_gram(result), flush=True)
             if name == "trials" and args.json:
                 print("wrote", write_bench_trials(result), flush=True)
+            if name == "sparse" and args.json:
+                print("wrote", write_bench_sparse(result), flush=True)
             checks = (result or {}).get("checks", {})
             bad = [k for k, v in checks.items() if not v]
             status = "PASS" if not bad else f"CHECKS-FAILED:{bad}"

@@ -1,0 +1,173 @@
+"""Sparse trial plane: glasso-over-quantized-data sweeps as first-class
+Monte-Carlo workloads (the paper's §7 extension).
+
+Runs a sparse ``TrialPlan`` (random sparse precision ground truths,
+``structure="sparse"`` strategies) through ``run_trials`` cold and warm:
+the whole sample -> quantize -> Gram -> batched-glasso -> support-metric
+chain is device-resident with exactly ONE host sync per sweep. A
+subprocess with 8 forced host devices re-runs the same plan on the
+distributed wire mesh (``make_trial_mesh(2, model=4)``) and asserts the
+support metrics are BIT-IDENTICAL to the single-device engine — the
+sparse twin of the tree plane's parity gate.
+
+Checks: one host sync per sweep; wire-plane parity; 4-bit per-symbol
+F1 close to the unquantized baseline at the largest n (the §7
+conjecture); F1 monotone in rate; recovery improving with n.
+Artifact: ``BENCH_sparse.json`` via ``benchmarks.run --only sparse --json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+
+from repro.core.experiments import TrialPlan, clear_compile_caches, run_trials
+from repro.core.strategy import Strategy
+
+from .common import save_artifact
+
+D, LAM, DENSITY = 16, 0.06, 0.18
+STRATEGIES = (
+    Strategy("sign", structure="sparse", lam=LAM),
+    Strategy("persymbol", rate=4, structure="sparse", lam=LAM),
+    Strategy("original", structure="sparse", lam=LAM),
+)
+
+
+def _plan(ns: tuple[int, ...], reps: int) -> TrialPlan:
+    return TrialPlan(d=D, ns=ns, tree="sparse", density=DENSITY,
+                     strategies=STRATEGIES, reps=reps,
+                     rho_min=0.25, rho_max=0.45, glasso_steps=300)
+
+
+def _wire_parity_subprocess(
+    ns: tuple[int, ...], reps: int, force_devices: int = 8
+) -> dict | None:
+    """Single-device vs (2, 4) wire-mesh sparse sweep in a forced
+    multi-device subprocess; returns {'bit_identical': ..., 'host_syncs':
+    ...} or None if the subprocess fails."""
+    script = f"""
+import json
+from repro.core.experiments import TrialPlan, run_trials
+from repro.core.strategy import Strategy
+from repro.launch.mesh import make_trial_mesh
+strats = (Strategy('sign', structure='sparse', lam={LAM}),
+          Strategy('persymbol', rate=4, structure='sparse', lam={LAM}),
+          Strategy('original', structure='sparse', lam={LAM}))
+plan = TrialPlan(d={D}, ns={tuple(ns)!r}, tree='sparse', density={DENSITY},
+                 strategies=strats, reps={reps}, rho_min=0.25, rho_max=0.45,
+                 glasso_steps=300)
+ref = run_trials(plan)
+wire = run_trials(plan, mesh=make_trial_mesh(2, model=4))
+same = all(
+    wire.error_rate[lab] == ref.error_rate[lab]
+    and wire.edit_distance[lab] == ref.edit_distance[lab]
+    and wire.edge_f1[lab] == ref.edge_f1[lab]
+    and wire.precision[lab] == ref.precision[lab]
+    and wire.recall[lab] == ref.recall[lab]
+    for lab in ref.error_rate)
+print(json.dumps(dict(bit_identical=same, host_syncs=wire.host_syncs,
+                      mesh_devices=wire.mesh_devices)))
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "") +
+        f" --xla_force_host_platform_device_count={force_devices}").strip()
+    try:
+        out = subprocess.run(
+            [sys.executable, "-c", script], capture_output=True, text=True,
+            timeout=900, env=env)
+        if out.returncode != 0:
+            print(f"sparse wire subprocess failed:\n{out.stderr}", flush=True)
+            return None
+        return json.loads(out.stdout.strip().splitlines()[-1])
+    except (subprocess.TimeoutExpired, OSError, ValueError) as e:
+        print(f"sparse wire subprocess failed: {e!r}", flush=True)
+        return None
+
+
+def run(quick: bool = False) -> dict:
+    ns = (250, 1000, 2000) if quick else (250, 1000, 4000)
+    reps = 32
+    plan = _plan(ns, reps)
+
+    clear_compile_caches()
+    cold = run_trials(plan)
+    with jax.transfer_guard_device_to_host("disallow"):
+        warm = run_trials(plan)
+
+    rows = []
+    for i, n in enumerate(ns):
+        row = {"n": n}
+        for s in STRATEGIES:
+            lab = s.label
+            row[lab] = {
+                "error": warm.error_rate[lab][i],
+                "hamming": warm.edit_distance[lab][i],
+                "f1": warm.edge_f1[lab][i],
+                "precision": warm.precision[lab][i],
+                "recall": warm.recall[lab][i],
+                "logical_bits": warm.comm[lab][i].logical_bits,
+                "wire_bytes": warm.comm[lab][i].wire_bytes,
+            }
+        rows.append(row)
+        print(f"sparse n={n:<6} " + "  ".join(
+            f"{s.label}: f1={row[s.label]['f1']:.3f} "
+            f"P={row[s.label]['precision']:.2f} "
+            f"R={row[s.label]['recall']:.2f}" for s in STRATEGIES),
+            flush=True)
+    print(f"sparse engine: {plan.trials} trials  "
+          f"cold {cold.trials_per_s:7.1f}/s ({cold.seconds:.2f}s)  "
+          f"warm {warm.trials_per_s:7.1f}/s ({warm.seconds:.2f}s)  "
+          f"syncs/sweep={warm.host_syncs}", flush=True)
+
+    parity = None
+    if jax.default_backend() == "cpu":
+        parity = _wire_parity_subprocess(ns[:2], reps)
+        if parity is not None:
+            print(f"sparse wire parity (subprocess, "
+                  f"{parity['mesh_devices']} forced devices): "
+                  f"bit_identical={parity['bit_identical']} "
+                  f"syncs={parity['host_syncs']}", flush=True)
+
+    labs = [s.label for s in STRATEGIES]
+    sign_lab, r4_lab, orig_lab = labs
+    last = rows[-1]
+    checks = {
+        # the engine contract: a whole sparse sweep is ONE device_get
+        "one_sync_per_sweep": warm.host_syncs == 1 and cold.host_syncs == 1,
+        # §7 conjecture: 4-bit per-symbol glasso ~ unquantized glasso
+        "r4_close_to_original": last[r4_lab]["f1"]
+        >= last[orig_lab]["f1"] - 0.08,
+        "monotone_in_rate": last[sign_lab]["f1"] <= last[r4_lab]["f1"] + 0.05,
+        "f1_improves_with_n": rows[-1][r4_lab]["f1"]
+        >= rows[0][r4_lab]["f1"] - 0.05,
+        "original_good": last[orig_lab]["f1"] > 0.85,
+    }
+    if jax.default_backend() == "cpu":
+        # on CPU the parity subprocess is EXPECTED to run: a crashed or
+        # unparseable subprocess must fail the gate, not skip it
+        checks["wire_parity_bit_identical"] = bool(
+            parity and parity["bit_identical"] and parity["host_syncs"] == 1)
+    payload = {
+        "d": D, "lam": LAM, "density": DENSITY, "ns": ns, "reps": reps,
+        "strategies": labs, "glasso_tol": plan.glasso_tol,
+        "glasso_steps": plan.glasso_steps,
+        "engine": {
+            "cold_seconds": cold.seconds,
+            "cold_trials_per_s": cold.trials_per_s,
+            "warm_seconds": warm.seconds,
+            "warm_trials_per_s": warm.trials_per_s,
+            "host_syncs": warm.host_syncs,
+        },
+        "wire_parity": parity, "rows": rows, "checks": checks,
+    }
+    save_artifact("sparse_trials", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -7,7 +7,8 @@ under Communication Constraints", IEEE TSP 2018.
 from . import bounds, chow_liu, distributed, estimators, experiments, glasso, gram, quantizers, sampler, strategy, streaming, trees  # noqa: F401
 from .chow_liu import boruvka_mst, chow_liu as mwst, kruskal_forest, kruskal_mst, learn_structure, learn_structure_jit  # noqa: F401
 from .distributed import CommReport, WirePlan  # noqa: F401
-from .experiments import TrialPlan, TrialResult, evaluate_strategies, run_trials  # noqa: F401
+from .experiments import TrialPlan, TrialResult, evaluate_strategies, run_trials, sparse_ground_truth  # noqa: F401
+from .glasso import glasso as graphical_lasso, learn_sparse_structure  # noqa: F401
 from .gram import GramEngine, default_engine, set_default_engine  # noqa: F401
 from .strategy import FIG3_STRATEGIES, Strategy  # noqa: F401
 from .streaming import StreamingGram  # noqa: F401

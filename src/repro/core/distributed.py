@@ -64,8 +64,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from . import estimators
+from . import estimators, glasso
 from .chow_liu import boruvka_mst
+from .glasso import DEFAULT_STEPS as GLASSO_STEPS
 from .gram import GramEngine
 from .strategy import Strategy
 
@@ -148,6 +149,9 @@ class WirePlan:
     data_axis: str = "data"
     model_axis: str = "model"
     engine: GramEngine | None = None
+    #: ISTA iteration budget of the central glasso solve (sparse
+    #: structures only; tree strategies never read it)
+    glasso_steps: int = GLASSO_STEPS
 
     # ---- stage 1: local encoding, R bits/symbol (paper step 1) ----------
 
@@ -196,9 +200,16 @@ class WirePlan:
         own_payload: jax.Array | None = None,
         data_sharded: bool = False,
     ) -> jax.Array:
-        """The center: Gram contraction on the gathered payload + Chow-Liu
-        weights, via the SAME ``estimators`` stage functions every other
-        pipeline runs.
+        """The center: Gram contraction on the gathered payload + the
+        central estimate, via the SAME ``estimators`` stage functions every
+        other pipeline runs.
+
+        For ``structure='tree'`` strategies the estimate is the Chow-Liu
+        weight matrix (``estimators.weights_from_gram``); for
+        ``structure='sparse'`` it is the sparse precision matrix — the
+        correlation statistic (``estimators.corr_from_gram``, arcsine
+        inversion + PSD repair for the sign method) fed through the
+        batched device glasso (one fused solve for a whole trial batch).
 
         Args:
           payload_full: the gathered (full-feature) payload.
@@ -210,6 +221,28 @@ class WirePlan:
           data_sharded: samples are sharded over ``data_axis`` (the
             classic runtime): psum the Gram over it before the weights.
         """
+        s = self.strategy
+        gram = self._assemble_gram(payload_full, n_valid=n_valid,
+                                   own_payload=own_payload,
+                                   data_sharded=data_sharded)
+        if s.structure == "sparse":
+            corr = estimators.corr_from_gram(gram, n, s)
+            solve = glasso.glasso_batch if corr.ndim == 3 else glasso.glasso
+            return solve(corr, s.lam, n_steps=self.glasso_steps)
+        return estimators.weights_from_gram(gram, n, s)
+
+    def _assemble_gram(
+        self,
+        payload_full: jax.Array,
+        *,
+        n_valid: jax.Array | int | None = None,
+        own_payload: jax.Array | None = None,
+        data_sharded: bool = False,
+    ) -> jax.Array:
+        """The center's full (d, d) Gram from the gathered payload:
+        placement-aware contraction (+ the rowblock row gather / the
+        data-axis psum). The one copy both :meth:`central` and
+        :meth:`central_corr` build on."""
         s = self.strategy
         rows = own_payload if s.placement == "rowblock" else None
         gram = estimators.payload_gram(
@@ -226,7 +259,34 @@ class WirePlan:
         elif data_sharded:
             # replicated over model by construction; make it explicit
             gram = jax.lax.pmean(gram, self.model_axis)
-        return estimators.weights_from_gram(gram, n, s)
+        return gram
+
+    def central_corr(
+        self,
+        payload_full: jax.Array,
+        n,
+        *,
+        n_valid: jax.Array | int | None = None,
+        own_payload: jax.Array | None = None,
+    ) -> jax.Array:
+        """The center's PRE-SOLVE statistic for a sparse strategy: Gram on
+        the gathered payload + ``estimators.corr_from_gram`` (arcsine
+        inversion and PSD repair for the sign method), WITHOUT the glasso
+        solve.
+
+        The sparse trial plane ends its shard_map here: the correlation
+        statistic is bit-stable across shardings (integer-exact sign
+        Grams, batch-stable eigh), while the ISTA loop's fused reductions
+        are compilation-context-sensitive — so ``run_trials`` gathers
+        these statistics and runs the solve+metric stage through the SAME
+        single-device executable as the mesh-less engine, which is what
+        makes the sparse parity gate bit-exact.
+        """
+        s = self.strategy
+        assert s.structure == "sparse", "central_corr is the sparse center"
+        gram = self._assemble_gram(payload_full, n_valid=n_valid,
+                                   own_payload=own_payload)
+        return estimators.corr_from_gram(gram, n, s)
 
     # ---- composed runtime + accounting ----------------------------------
 
@@ -270,8 +330,11 @@ def build_weights_fn(
     compute: Literal["replicated", "rowblock"] = "replicated",
     wire: Literal["int8", "packed", "float32"] = "int8",
     engine: GramEngine | None = None,
+    glasso_steps: int = GLASSO_STEPS,
 ):
-    """shard_map pipeline (n, d) samples -> (d, d) Chow-Liu weights.
+    """shard_map pipeline (n, d) samples -> (d, d) central estimate
+    (Chow-Liu weights, or the glasso precision for a sparse strategy —
+    ``glasso_steps`` sets that solve's ISTA budget).
 
     ``strategy`` (a :class:`~repro.core.strategy.Strategy`) is the
     declarative form of the loose ``method``/``rate``/``compute``/``wire``
@@ -298,7 +361,7 @@ def build_weights_fn(
     """
     strat = _as_wire_strategy(strategy, method, rate, compute, wire)
     plan = WirePlan(strat, data_axis=data_axis, model_axis=model_axis,
-                    engine=engine)
+                    engine=engine, glasso_steps=glasso_steps)
     in_spec = P(data_axis, model_axis)
     return jax.shard_map(
         plan.local_weights,
@@ -321,20 +384,22 @@ def distributed_weights(
     compute: Literal["replicated", "rowblock"] = "replicated",
     wire: Literal["int8", "packed", "float32"] = "int8",
     engine: GramEngine | None = None,
+    glasso_steps: int = GLASSO_STEPS,
 ) -> jax.Array:
-    """Pairwise Chow-Liu weight matrix from vertically-sharded data.
+    """Central estimate from vertically-sharded data: the Chow-Liu weight
+    matrix, or the glasso precision matrix for a sparse strategy.
 
     Args:
       x: (n, d) samples; will be placed as P(data_axis, model_axis) — each
         device holds a (n/D, d/M) block, i.e. the paper's vertical partition.
       strategy: declarative Strategy (wins over the loose kwargs).
     Returns:
-      (d, d) weight matrix, fully replicated.
+      (d, d) estimate, fully replicated.
     """
     fn, sharding = build_weights_fn(
         mesh, strategy=strategy, method=method, rate=rate,
         data_axis=data_axis, model_axis=model_axis, compute=compute,
-        wire=wire, engine=engine)
+        wire=wire, engine=engine, glasso_steps=glasso_steps)
     x = jax.device_put(x, sharding)
     return jax.jit(fn)(x)
 
@@ -349,11 +414,30 @@ def distributed_learn_structure(
     backend: str | None = None,
     **kw,
 ) -> list[tuple[int, int]]:
-    """End-to-end distributed Chow-Liu: returns the estimated tree edges.
+    """End-to-end distributed structure learning: the estimated edges.
+
+    Tree strategies return the Chow-Liu MWST edges; sparse strategies
+    (``strategy.structure == 'sparse'``) return the glasso support edges
+    (``glasso.support`` with ``kw['tol']`` if given — the central estimate
+    from the wire runtime is the precision matrix itself).
 
     The MWST solver comes from ``backend`` if given, else
     ``strategy.mst``, else the on-device Boruvka default.
     """
+    if strategy is not None and strategy.structure == "sparse":
+        from .chow_liu import adjacency_to_edges
+        from .glasso import SUPPORT_TOL, support
+
+        if backend is not None:
+            raise ValueError(
+                "backend= names an MWST solver; sparse strategies recover "
+                "a glasso support (tune tol= instead)")
+        tol = kw.pop("tol", SUPPORT_TOL)
+        w = distributed_weights(x, mesh, strategy=strategy, method=method,
+                                rate=rate, **kw)
+        return adjacency_to_edges(support(w, tol))
+    # tree strategies: kw passes through verbatim (an unknown kwarg like
+    # tol= still fails loudly instead of being silently swallowed)
     w = distributed_weights(x, mesh, strategy=strategy, method=method,
                             rate=rate, **kw)
     if backend is None:

@@ -188,6 +188,66 @@ def weights_from_gram(gram: jax.Array, n, method) -> jax.Array:
     return -0.5 * jnp.log1p(-r2)
 
 
+def corr_from_gram(gram: jax.Array, n, method) -> jax.Array:
+    """Central-machine estimate for SPARSE structures: raw Gram + sample
+    count -> the correlation statistic the glasso solve ingests.
+
+    The sparse twin of :func:`weights_from_gram` (same operands, same
+    batched shapes, same method dispatch — ``method`` a method string or a
+    :class:`~repro.core.strategy.Strategy`):
+
+    * ``'original'`` / ``'persymbol'`` — the sample correlation gram / n
+      (eqs. 31/32; PSD by construction, no repair needed);
+    * ``'sign'`` — the arcsine law inverted on the eq.-8 statistic:
+      rho = sin(pi * gram / (2n)). The elementwise `sin` transform of a
+      sample sign-Gram is NOT guaranteed PSD at small n, so the result is
+      eigen-clipped back to a valid correlation matrix
+      (``glasso.nearest_correlation``) before it reaches the `-logdet`
+      objective.
+    """
+    from .glasso import nearest_correlation
+
+    method = getattr(method, "method", method)
+    if method in ("original", "persymbol"):
+        return gram / n
+    if method != "sign":
+        raise ValueError(f"unknown method {method!r}")
+    return nearest_correlation(jnp.sin(jnp.pi * gram / (2.0 * n)))
+
+
+def strategy_corr(
+    x: jax.Array,
+    strategy: Strategy,
+    *,
+    engine: GramEngine | None = None,
+) -> jax.Array:
+    """(n, d) raw samples -> the (d, d) correlation statistic a sparse
+    Strategy's glasso solve ingests — the encode -> contract -> estimate
+    chain with :func:`corr_from_gram` as the tail (the sparse twin of
+    :func:`strategy_weights`)."""
+    payload = strategy_payload(x, strategy)
+    gram = payload_gram(payload, strategy, engine=engine)
+    return corr_from_gram(gram, x.shape[0], strategy)
+
+
+def strategy_corr_batch(
+    x: jax.Array,
+    strategy: Strategy,
+    *,
+    n_valid: jax.Array | int | None = None,
+    engine: GramEngine | None = None,
+) -> jax.Array:
+    """(t, n, d) stacked raw samples -> (t, d, d) correlation statistics
+    for a sparse Strategy: the batched, valid-length-masked form of
+    :func:`strategy_corr` used by the sparse trial plane (same bucketing
+    semantics as :func:`strategy_weights_batch`)."""
+    n_pad = x.shape[-2]
+    payload = strategy_payload(x, strategy, n_valid=n_valid)
+    gram = payload_gram(payload, strategy, n_valid=n_valid, engine=engine)
+    n = n_pad if n_valid is None else jnp.asarray(n_valid, jnp.float32)
+    return corr_from_gram(gram, n, strategy)
+
+
 def strategy_payload(
     x: jax.Array,
     strategy: Strategy,

@@ -46,6 +46,23 @@ solvers that break that rank equivalence — it pulls the weight tensors
 back in ONE stacked device_get and runs the host Kruskal + host metrics
 loop, metric-identical to the device path on the current estimators.
 
+* **Sparse trial plane** — the paper's §7 extension ("glasso over the
+  quantized data") as a first-class scenario: a plan whose strategies
+  carry ``structure="sparse"`` (+ a ``lam`` penalty) sweeps random sparse
+  precision ground truths (``tree="sparse"``,
+  ``glasso.random_sparse_precision``) through the same
+  sample -> quantize -> Gram chain, with the central solve swapped from
+  Boruvka to the BATCHED device glasso: the whole (S*reps, d, d) point is
+  one fused vmapped ISTA launch, support is thresholded on normalized
+  partial correlations on device, and the five integer-exact support
+  channels (error, Hamming, shared/est/true edge counts) recover
+  precision/recall/micro-F1 exactly — still ONE host sync per sweep.
+  Under a mesh the corr stage (and the wire plane's actual all-gather)
+  shard_maps exactly like the tree plane, but the solve+metric stage runs
+  through the shared single-device executable (statistics gathered by a
+  device_put, not a host sync), so mesh results are bit-identical to the
+  mesh-less engine by construction.
+
 :func:`mc_sign_crossover` / :func:`mc_persymbol_corr_error` are the
 analogous vmapped engines for the scalar Monte-Carlo curves of
 Figs. 5-6, 8 and 9.
@@ -69,7 +86,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from . import estimators, sampler, trees
+from . import estimators, glasso, sampler, trees
 from .chow_liu import boruvka_mst, kruskal_mst
 from .distributed import CommReport, WirePlan
 from .gram import GramEngine, resolve_engine
@@ -77,6 +94,10 @@ from .quantizers import PerSymbolQuantizer
 from .strategy import FIG3_STRATEGIES, Strategy
 
 TREE_KINDS = ("random", "star", "chain", "skeleton")
+#: ground-truth generators of the SPARSE trial plane (the §7 extension):
+#: random sparse diagonally-dominant precision matrices
+#: (``glasso.random_sparse_precision``)
+SPARSE_KINDS = ("sparse",)
 
 
 def next_pow2(n: int) -> int:
@@ -116,9 +137,17 @@ class TrialPlan:
     rho_max: float = 0.9
     seed0: int = 0
     n_buckets: tuple[int, ...] | str | None = "pow2"
+    #: edge density of the sparse ground-truth precision (sparse plans
+    #: only; ``rho_min``/``rho_max`` double as the |Theta_jk| strength
+    #: range of ``glasso.random_sparse_precision``)
+    density: float = 0.2
+    #: partial-correlation support threshold of the sparse metric stage
+    glasso_tol: float = glasso.SUPPORT_TOL
+    #: ISTA iteration budget of the batched glasso solve
+    glasso_steps: int = glasso.DEFAULT_STEPS
 
     def __post_init__(self):
-        if self.tree not in TREE_KINDS:
+        if self.tree not in TREE_KINDS + SPARSE_KINDS:
             raise ValueError(f"unknown tree kind {self.tree!r}")
         if self.tree == "skeleton" and self.d != 20:
             raise ValueError("skeleton topology is the 20-joint body")
@@ -126,6 +155,18 @@ class TrialPlan:
             raise ValueError("need reps >= 1 and d >= 2")
         object.__setattr__(self, "ns", tuple(int(n) for n in self.ns))
         object.__setattr__(self, "strategies", tuple(self.strategies))
+        structures = {s.structure for s in self.strategies}
+        if len(structures) > 1:
+            raise ValueError(
+                "a plan must be homogeneous in Strategy.structure (tree "
+                f"and sparse metrics differ), got {sorted(structures)}")
+        if (self.tree in SPARSE_KINDS) != (structures == {"sparse"}):
+            raise ValueError(
+                f"tree kind {self.tree!r} does not match the strategies' "
+                f"structure {sorted(structures)}: sparse strategies sweep "
+                "over tree='sparse' ground truths and vice versa")
+        if self.tree in SPARSE_KINDS and not 0.0 < self.density <= 1.0:
+            raise ValueError(f"density must be in (0, 1], got {self.density}")
         nb = self.n_buckets
         if isinstance(nb, str):
             if nb != "pow2":
@@ -156,6 +197,12 @@ class TrialPlan:
         return {n: self.bucket_for(n) for n in self.ns}
 
     @property
+    def structure(self) -> str:
+        """'tree' or 'sparse' — which trial plane the plan runs on
+        (homogeneous across strategies by validation)."""
+        return "sparse" if self.tree in SPARSE_KINDS else "tree"
+
+    @property
     def points(self) -> int:
         return len(self.ns) * len(self.strategies)
 
@@ -169,16 +216,26 @@ class TrialResult:
     """Per-(strategy, n) Monte-Carlo metrics + engine telemetry."""
 
     plan: TrialPlan
-    #: label -> [Pr(T_hat != T) per n in plan.ns]
+    #: label -> [Pr(T_hat != T) per n in plan.ns] (sparse plans: Pr of
+    #: imperfect support recovery)
     error_rate: dict[str, list[float]]
     #: label -> [mean edge symmetric difference |E_hat ^ E| per n]
+    #: (sparse plans: the support Hamming distance)
     edit_distance: dict[str, list[float]]
-    #: label -> [mean edge F1 per n]
+    #: label -> [edge F1 per n] — spanning trees: mean shared/(d-1);
+    #: sparse supports: micro-F1 2*shared/(est+true) recovered exactly
+    #: from the integer edge-count channels
     edge_f1: dict[str, list[float]]
     seconds: float
     #: host syncs the whole sweep performed — exactly 1 (the metric-tensor
     #: device_get); the sweep body never touches the host
     host_syncs: int
+    #: label -> [edge precision per n] (micro-averaged shared/est; for
+    #: spanning trees est == d-1 so precision == recall == F1)
+    precision: dict[str, list[float]] = dataclasses.field(
+        default_factory=dict)
+    #: label -> [edge recall per n] (micro-averaged shared/true)
+    recall: dict[str, list[float]] = dataclasses.field(default_factory=dict)
     #: label -> [CommReport per n]: honest per-strategy communication
     #: accounting — the paper's logical n*d*R bits next to the bytes the
     #: wire actually gathers (measured from the encode stage's payload
@@ -255,14 +312,69 @@ def stacked_trees(
     and (reps, d, d): the topological parent form each trial samples from
     and the true adjacency each trial's estimate is scored against.
     Cached per plan (with the trial keys) — see :func:`_plan_setup`.
+    Sparse plans have no tree ground truth — use
+    :func:`sparse_ground_truth`.
     """
+    if plan.structure == "sparse":
+        raise ValueError(
+            "sparse plans draw precision-matrix ground truths, not trees; "
+            "use sparse_ground_truth(plan)")
     return _plan_setup(*_setup_key(plan))[:3]
 
 
 def trial_keys(plan: TrialPlan) -> jax.Array:
     """(reps,) PRNG keys: one independent sampling stream per trial.
-    Served from the same per-plan cache as :func:`stacked_trees`."""
+    Served from the same per-plan cache as :func:`stacked_trees` (or the
+    sparse setup cache for sparse plans)."""
+    if plan.structure == "sparse":
+        return _sparse_plan_setup(*_sparse_setup_key(plan))[2]
     return _plan_setup(*_setup_key(plan))[3]
+
+
+@functools.lru_cache(maxsize=None)
+def _sparse_plan_setup(
+    d: int, reps: int, density: float, rho_min: float, rho_max: float,
+    seed0: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Cached host-side SPARSE sweep setup: (chols, adj_true, keys).
+
+    Trial ``rep`` draws its ground truth from
+    ``np.random.default_rng(seed0 + rep)`` — a random sparse
+    diagonally-dominant precision (``glasso.random_sparse_precision``,
+    edge strength Uniform[rho_min, rho_max]) — exactly mirroring the tree
+    plane's per-rep rng convention. ``chols`` are the (reps, d, d)
+    float32 Cholesky factors of the implied unit-variance covariances
+    (the row-keyed sampler's mixers); ``adj_true`` the (reps, d, d) bool
+    supports; ``keys`` the same per-rep fold_in streams as
+    :func:`_plan_setup`.
+    """
+    chols = np.zeros((reps, d, d), np.float32)
+    adj = np.zeros((reps, d, d), bool)
+    for rep in range(reps):
+        rng = np.random.default_rng(seed0 + rep)
+        theta = glasso.random_sparse_precision(
+            d, density, rng, strength=(rho_min, rho_max))
+        cov = np.linalg.inv(theta)
+        chols[rep] = np.linalg.cholesky(cov)
+        a = np.abs(theta) > 1e-8
+        np.fill_diagonal(a, False)
+        adj[rep] = a
+    keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+        jax.random.key(seed0), jnp.arange(reps, dtype=jnp.uint32))
+    return jnp.asarray(chols), jnp.asarray(adj), keys
+
+
+def _sparse_setup_key(plan: TrialPlan):
+    return (plan.d, plan.reps, plan.density,
+            plan.rho_min, plan.rho_max, plan.seed0)
+
+
+def sparse_ground_truth(plan: TrialPlan) -> tuple[jax.Array, jax.Array]:
+    """The sparse plan's ``reps`` ground truths as stacked device arrays:
+    ``(chols, adj_true)`` of shapes (reps, d, d) each — the Cholesky
+    mixers the trials sample through and the true supports they are
+    scored against. Cached per plan (with the trial keys)."""
+    return _sparse_plan_setup(*_sparse_setup_key(plan))[:2]
 
 
 # --------------------------------------------------------------------------
@@ -340,6 +452,172 @@ def _mst_metrics_fn():
 #: (S, reps, d) metric-stage shapes already compiled this process — guards
 #: the cold-sweep prewarm so warm sweeps never pay the dummy launch.
 _warmed_metric_shapes: set[tuple[int, int, int]] = set()
+
+#: (strategies, bucket, engine, structure) stage keys already prewarmed —
+#: guards the cross-bucket compile overlap so warm sweeps never spawn the
+#: dummy executions.
+_warmed_weight_stages: set = set()
+
+
+# --------------------------------------------------------------------------
+# Sparse trial plane stages (the §7 extension: glasso over quantized data)
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _corr_stage(
+    strategies: tuple[Strategy, ...], n_pad: int, engine: GramEngine
+):
+    """jit: (keys, chols, n_valid) -> (S, reps, d, d) correlation
+    statistics — the sparse twin of :func:`_weights_stage` (same bucketing
+    and caching contract; the tail is ``estimators.corr_from_gram``
+    instead of the Chow-Liu weights)."""
+    def f(keys, chols, n_valid):
+        return _stacked_corr(keys, chols, n_valid, strategies, n_pad, engine)
+
+    return jax.jit(f)
+
+
+def _stacked_corr(keys, chols, n_valid, strategies, n_pad, engine):
+    """Shared trace body of the single-device and sharded sparse stages:
+    sample the bucket-shaped data once through the row-keyed generic
+    sampler, emit every strategy's (r, d, d) correlation statistic."""
+    x = sampler.sample_ggm_rows_batch(keys, n_pad, chols)
+    return jnp.stack([
+        estimators.strategy_corr_batch(x, s, n_valid=n_valid, engine=engine)
+        for s in strategies])
+
+
+def _support_metric_channels(est: jax.Array, adj_true: jax.Array) -> jax.Array:
+    """(..., d, d) bool support estimates + truths -> (..., 5) channels
+    [error, hamming, shared, est_edges, true_edges].
+
+    All five are INTEGER-VALUED f32 (error indicator, support symmetric
+    difference, and the :func:`trees.edge_counts` triple), so their sums
+    are exact in f32 under any reduction order — precision, recall and
+    micro-F1 are recovered EXACTLY from the reduced sums
+    (P = shared/est, R = shared/true, F1 = 2*shared/(est+true)),
+    generalizing the spanning-tree-only ``F1 = shared/(d-1)`` identity of
+    the tree plane. This is the sparse parity gate's foundation: a psum
+    over a sharded rep axis reproduces the single-device sums bit for bit.
+    """
+    err = trees.structure_error(est, adj_true).astype(jnp.float32)
+    ham = trees.structure_hamming(est, adj_true).astype(jnp.float32)
+    shared, n_est, n_true = trees.edge_counts(est, adj_true)
+    return jnp.stack([err, ham, shared.astype(jnp.float32),
+                      n_est.astype(jnp.float32),
+                      n_true.astype(jnp.float32)], axis=-1)
+
+
+def _sparse_per_trial_metrics(
+    corr: jax.Array, adj_true: jax.Array, lams: tuple, tol: float,
+    n_steps: int,
+) -> jax.Array:
+    """(S, r, d, d) correlation statistics + (r, d, d) truths -> (S, r, 5)
+    per-trial support channels via ONE fused batched-glasso launch: the
+    whole (S*r, d, d) stack solves in a single vmapped ISTA loop
+    (per-strategy penalties ride as a batched lam vector), the support is
+    thresholded on normalized partial correlations on device."""
+    S, r, d, _ = corr.shape
+    lam = jnp.repeat(jnp.asarray(lams, jnp.float32), r)
+    theta = glasso.glasso_batch(
+        corr.reshape(S * r, d, d), lam, n_steps=n_steps)
+    est = glasso.support_from_theta(theta, tol).reshape(S, r, d, d)
+    return _support_metric_channels(est, adj_true[None])
+
+
+@functools.lru_cache(maxsize=None)
+def _sparse_metrics_fn(lams: tuple, tol: float, n_steps: int):
+    """jit: (S, reps, d, d) correlation statistics + true supports ->
+    (S, 5) metric SUMS over the rep axis — the sparse twin of
+    :func:`_mst_metrics_fn` (glasso solve + support threshold instead of
+    Boruvka; one compile per (penalty vector, tol, steps) serves every
+    point of every sweep at that shape)."""
+    return jax.jit(
+        lambda corr, adj_true: _sparse_per_trial_metrics(
+            corr, adj_true, lams, tol, n_steps).sum(axis=1))
+
+
+@functools.lru_cache(maxsize=None)
+def _sparse_sharded_corr_fn(
+    strategies: tuple[Strategy, ...],
+    n_pad: int,
+    engine: GramEngine,
+    mesh: Mesh,
+    data_axis: str,
+):
+    """jit(shard_map): the SPARSE corr stage with the rep axis sharded
+    over ``data_axis`` — emits the (S, reps, d, d) correlation statistics
+    (rep-sharded on the way out).
+
+    The sparse mesh paths deliberately end the shard_map at the
+    correlation statistic: it is bit-stable across shardings
+    (integer-exact sign Grams, batch-stable eigh — verified by the parity
+    gate), while the ISTA loop's fused reductions are
+    compilation-context-sensitive. ``run_trials`` gathers the statistics
+    to one device and runs the SAME compiled solve+metric stage as the
+    mesh-less engine, making mesh results bit-identical by construction.
+    """
+    def body(key_data, chols, n_valid):
+        keys = jax.random.wrap_key_data(key_data)
+        return _stacked_corr(keys, chols, n_valid, strategies, n_pad, engine)
+
+    return jax.jit(jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(data_axis), P(data_axis), P()),
+        out_specs=P(None, data_axis),
+        check_vma=False,
+    ))
+
+
+@functools.lru_cache(maxsize=None)
+def _sparse_wire_corr_fn(
+    strategies: tuple[Strategy, ...],
+    n_pad: int,
+    engine: GramEngine,
+    mesh: Mesh,
+    data_axis: str,
+    model_axis: str,
+):
+    """jit(shard_map): the SPARSE corr stage on the DISTRIBUTED trial
+    plane — trials sharded over ``data_axis``, features over
+    ``model_axis``, each trial running the paper's actual all-gather
+    (``WirePlan.encode -> wire -> central_corr``).
+
+    The gathered payload is bit-identical to the single-device encode of
+    the unsliced data, so the emitted (S, reps, d, d) statistics equal the
+    mesh-less corr stage bit for bit; the glasso solve + support metrics
+    then run through the shared single-device executable (see
+    :func:`_sparse_sharded_corr_fn` for why the solve stays outside the
+    shard_map) — the sparse extension of the CI parity gate.
+    """
+    n_model = mesh.shape[model_axis]
+
+    def body(key_data, chols, n_valid):
+        keys = jax.random.wrap_key_data(key_data)
+        x = sampler.sample_ggm_rows_batch(keys, n_pad, chols)
+        d = x.shape[-1]
+        d_loc = d // n_model
+        midx = jax.lax.axis_index(model_axis)
+        x_loc = jax.lax.dynamic_slice_in_dim(x, midx * d_loc, d_loc, 2)
+        n = jnp.asarray(n_valid, jnp.float32)
+        corrs = []
+        for s in strategies:
+            plan = WirePlan(s, data_axis=data_axis, model_axis=model_axis,
+                            engine=engine)
+            payload = plan.encode(x_loc, n_valid=n_valid)
+            full = plan.wire(payload)
+            corrs.append(plan.central_corr(full, n, n_valid=n_valid,
+                                           own_payload=payload))
+        return jnp.stack(corrs)  # (S, r_loc, d, d)
+
+    return jax.jit(jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(data_axis), P(data_axis), P()),
+        out_specs=P(None, data_axis),
+        check_vma=False,
+    ))
 
 
 @functools.lru_cache(maxsize=None)
@@ -444,7 +722,9 @@ def _wire_point_fn(
 
 def _compile_caches():
     return (_plan_setup, _weights_stage, _mst_metrics_fn, _sharded_point_fn,
-            _wire_point_fn, _crossover_fn, _corr_err_fn)
+            _wire_point_fn, _sparse_plan_setup, _corr_stage,
+            _sparse_metrics_fn, _sparse_sharded_corr_fn,
+            _sparse_wire_corr_fn, _crossover_fn, _corr_err_fn)
 
 
 def compile_cache_size() -> int:
@@ -466,6 +746,7 @@ def clear_compile_caches() -> int:
     for c in _compile_caches():
         c.cache_clear()
     _warmed_metric_shapes.clear()
+    _warmed_weight_stages.clear()
     return n
 
 
@@ -504,22 +785,40 @@ def _package_result(
     comm: dict[str, list[CommReport]],
     mesh_devices: int,
 ) -> TrialResult:
-    """(S, len(ns), 3) mean-metric tensor (f32: [error, hamming, shared
-    edges]) -> TrialResult. Shared by the device and host-Kruskal paths so
-    the f32 arithmetic (notably shared/(d-1) -> edge F1) is identical."""
+    """Mean-metric tensor -> TrialResult; shared by every engine path so
+    the f32 arithmetic of the derived metrics is identical everywhere.
+
+    Tree plans carry (S, len(ns), 3) channels [error, hamming, shared]
+    (edge F1 == shared/(d-1) exactly for spanning trees); sparse plans
+    (S, len(ns), 5) [error, hamming, shared, est_edges, true_edges], from
+    which precision / recall / micro-F1 are recovered exactly
+    (P = shared/est, R = shared/true, F1 = 2*shared/(est+true) — ratios of
+    integer-exact channel means)."""
     labels = [s.label for s in plan.strategies]
-    error_rate = {lab: [float(v) for v in m[i, :, 0]]
-                  for i, lab in enumerate(labels)}
-    edit_distance = {lab: [float(v) for v in m[i, :, 1]]
-                     for i, lab in enumerate(labels)}
-    # Boruvka/Kruskal estimates and the ground truth are spanning trees,
-    # so edge F1 == shared edges / (d - 1) exactly (same f32 division on
-    # both paths).
-    edge_f1 = {lab: [float(v) for v in m[i, :, 2] / np.float32(plan.d - 1)]
-               for i, lab in enumerate(labels)}
+
+    def _cols(a: np.ndarray) -> dict[str, list[float]]:
+        return {lab: [float(v) for v in a[i]] for i, lab in enumerate(labels)}
+
+    error_rate = _cols(m[:, :, 0])
+    edit_distance = _cols(m[:, :, 1])
+    if plan.structure == "sparse":
+        shared, n_est, n_true = m[:, :, 2], m[:, :, 3], m[:, :, 4]
+        precision = _cols(shared / np.maximum(n_est, np.float32(1e-9)))
+        recall = _cols(shared / np.maximum(n_true, np.float32(1e-9)))
+        edge_f1 = _cols(2.0 * shared
+                        / np.maximum(n_est + n_true, np.float32(1e-9)))
+    else:
+        # Boruvka/Kruskal estimates and the ground truth are spanning
+        # trees, so edge F1 == shared edges / (d - 1) exactly (same f32
+        # division on both paths) — and est == true == d-1 makes
+        # precision == recall == F1.
+        edge_f1 = _cols(m[:, :, 2] / np.float32(plan.d - 1))
+        precision = {lab: list(v) for lab, v in edge_f1.items()}
+        recall = {lab: list(v) for lab, v in edge_f1.items()}
     return TrialResult(
         plan=plan, error_rate=error_rate, edit_distance=edit_distance,
-        edge_f1=edge_f1, seconds=seconds, host_syncs=host_syncs, comm=comm,
+        edge_f1=edge_f1, precision=precision, recall=recall,
+        seconds=seconds, host_syncs=host_syncs, comm=comm,
         buckets=plan.buckets, compile_cache_size=compile_cache_size(),
         mesh_devices=mesh_devices)
 
@@ -617,6 +916,15 @@ def run_trials(
       integer-exact, so results are bit-identical to the single-device
       engine; ``TrialResult.comm`` carries each strategy's measured
       CommReport either way.
+
+    SPARSE plans (``plan.structure == "sparse"``; see :class:`TrialPlan`)
+    run the same modes with the Boruvka stage replaced by the batched
+    device glasso + partial-correlation support threshold; under a mesh
+    the shard_map ends at the correlation statistic and the solve+metric
+    stage runs on one device through the same executable as the mesh-less
+    engine (bit-identical results, still one host sync — the gather is a
+    device_put). ``TrialResult.precision`` / ``recall`` join the metric
+    tables (micro-averaged, exact from the integer channels).
     """
     engine = resolve_engine(engine)
     labels = [s.label for s in plan.strategies]
@@ -624,11 +932,16 @@ def run_trials(
         raise ValueError(f"duplicate strategy labels: {labels}")
     if mst not in ("device", "host_kruskal"):
         raise ValueError(f"unknown mst mode {mst!r}")
+    sparse = plan.structure == "sparse"
     if mst == "host_kruskal":
         if mesh is not None:
             raise ValueError(
                 "mst='host_kruskal' is the single-process escape hatch; "
                 "run it without a mesh")
+        if sparse:
+            raise ValueError(
+                "mst='host_kruskal' is a tree-plane escape hatch; sparse "
+                "plans solve glasso, not an MWST")
         return _host_kruskal_trials(plan, engine, data_axis, model_axis)
     shards = 1
     wire_plane = False
@@ -643,27 +956,75 @@ def run_trials(
             raise ValueError(
                 f"d={plan.d} must divide over the "
                 f"{mesh.shape[model_axis]}-way {model_axis!r} mesh axis")
-    parents, rhos, adj_true, keys = _plan_setup(*_setup_key(plan))
+    lams = tuple(s.lam for s in plan.strategies)
+    if sparse:
+        chols, adj_true, keys = _sparse_plan_setup(*_sparse_setup_key(plan))
+        gt_args = (chols,)
+    else:
+        parents, rhos, adj_true, keys = _plan_setup(*_setup_key(plan))
+        gt_args = (parents, rhos)
+    stage_fn = _corr_stage if sparse else _weights_stage
+    #: (bucket, n) -> (thread, [stage output]) from the cross-bucket
+    #: compile-overlap threads; the main loop reuses these results
+    prewarmed: dict[tuple[int, int], tuple[threading.Thread, list]] = {}
+    if sparse:
+        # the glasso solve + support metric stage runs on ONE device even
+        # under a mesh (the mesh parallelizes sampling, quantization, Gram
+        # and the wire collectives; the statistics are gathered with a
+        # device_put — not a host sync — and solved through the same
+        # compiled executable as the mesh-less engine, which is what makes
+        # mesh metrics bit-identical)
+        metrics_fn = _sparse_metrics_fn(
+            lams, plan.glasso_tol, plan.glasso_steps)
     warm_thread = None
     if mesh is not None:
         key_data = jax.random.key_data(keys)
     else:
-        metrics_fn = _mst_metrics_fn()
+        if sparse:
+            shape_key = (lams, plan.glasso_tol, plan.glasso_steps,
+                         plan.reps, plan.d)
+            dummy = (jnp.zeros((len(lams), plan.reps, plan.d, plan.d),
+                               jnp.float32),
+                     jnp.zeros((plan.reps, plan.d, plan.d), jnp.bool_))
+        else:
+            metrics_fn = _mst_metrics_fn()
+            shape_key = (len(plan.strategies), plan.reps, plan.d)
+            S, r, d = shape_key
+            dummy = (jnp.zeros((S, r, d, d), jnp.float32),
+                     jnp.zeros((r, d, d), jnp.bool_))
         # overlap the two cold compiles: warm the (sweep-wide, shape-fixed)
-        # MWST+metric stage on a dummy batch in a background thread while
-        # the main thread compiles the first bucket's weights stage — XLA
-        # releases the GIL, so a cold sweep pays closer to max() than
-        # sum() of the two. Only on a genuinely cold shape: warm sweeps
-        # must not pay the dummy launch.
-        shape_key = (len(plan.strategies), plan.reps, plan.d)
+        # metric stage (MWST or glasso+support) on a dummy batch in a
+        # background thread while the main thread compiles the first
+        # bucket's weights/corr stage — XLA releases the GIL, so a cold
+        # sweep pays closer to max() than sum() of the two. Only on a
+        # genuinely cold shape: warm sweeps must not pay the dummy launch.
         if shape_key not in _warmed_metric_shapes:
             _warmed_metric_shapes.add(shape_key)
-            S, r, d = shape_key
             warm_thread = threading.Thread(
-                target=lambda: metrics_fn(
-                    jnp.zeros((S, r, d, d), jnp.float32),
-                    jnp.zeros((r, d, d), jnp.bool_)),
+                target=lambda fn=metrics_fn, a=dummy: fn(*a), daemon=True)
+        # overlap the per-bucket stage compiles across ns: while the main
+        # thread compiles (and runs) the first bucket, background threads
+        # drive every LATER cold bucket's stage through its own compile,
+        # at the first n that bucket serves. The dispatched result is kept
+        # (the stage is deterministic), so when the loop reaches that
+        # (bucket, n) it joins the thread and REUSES the arrays — the
+        # overlap costs no duplicate device work.
+        first_n = {}
+        for n in plan.ns:
+            first_n.setdefault(plan.bucket_for(n), n)
+        for b, n0 in list(first_n.items())[1:]:
+            stage_key = (plan.strategies, b, engine, plan.structure)
+            if stage_key in _warmed_weight_stages:
+                continue
+            _warmed_weight_stages.add(stage_key)
+            out: list = []
+            t = threading.Thread(
+                target=lambda st=stage_fn(plan.strategies, b, engine),
+                a=(keys, *gt_args, jnp.asarray(n0, jnp.int32)),
+                o=out: o.append(st(*a)),
                 daemon=True)
+            t.start()
+            prewarmed[(b, n0)] = (t, out)
 
     point_sums = []
     t0 = time.perf_counter()
@@ -673,23 +1034,43 @@ def run_trials(
         n_pad = plan.bucket_for(n)
         n_valid = jnp.asarray(n, jnp.int32)
         if mesh is None:
-            w = _weights_stage(plan.strategies, n_pad, engine)(
-                keys, parents, rhos, n_valid)
+            pre = prewarmed.pop((n_pad, n), None)
+            if pre is not None:
+                pre[0].join()
+            if pre is not None and pre[1]:
+                w = pre[1][0]
+            else:  # not prewarmed (or its thread failed): compute inline
+                w = stage_fn(plan.strategies, n_pad, engine)(
+                    keys, *gt_args, n_valid)
             if warm_thread is not None:
                 warm_thread.join()
                 warm_thread = None
             point_sums.append(metrics_fn(w, adj_true))
+        elif sparse:
+            corr_fn = (
+                _sparse_wire_corr_fn(
+                    plan.strategies, n_pad, engine, mesh, data_axis,
+                    model_axis)
+                if wire_plane else
+                _sparse_sharded_corr_fn(
+                    plan.strategies, n_pad, engine, mesh, data_axis))
+            corr = corr_fn(key_data, *gt_args, n_valid)
+            # gather the rep-sharded statistics onto one device (a d2d
+            # copy, NOT a host sync) so the solve+metric executable is the
+            # single-device one — bit-identical results by construction
+            corr = jax.device_put(corr, jax.devices()[0])
+            point_sums.append(metrics_fn(corr, adj_true))
         elif wire_plane:
             point_sums.append(
                 _wire_point_fn(
                     plan.strategies, n_pad, engine, mesh, data_axis,
                     model_axis)(
-                    key_data, parents, rhos, adj_true, n_valid))
+                    key_data, *gt_args, adj_true, n_valid))
         else:
             point_sums.append(
                 _sharded_point_fn(
                     plan.strategies, n_pad, engine, mesh, data_axis)(
-                    key_data, parents, rhos, adj_true, n_valid))
+                    key_data, *gt_args, adj_true, n_valid))
     # (S, len(ns), 3) metric tensor, still on device; THE host sync.
     # host_syncs counts actual read-backs (the += convention every host
     # touch in this loop must follow), so the one_sync_per_sweep checks in
@@ -716,11 +1097,22 @@ def learned_adjacency(
     strategy: Strategy,
     *,
     engine: GramEngine | None = None,
+    glasso_tol: float = glasso.SUPPORT_TOL,
+    glasso_steps: int = glasso.DEFAULT_STEPS,
 ) -> jax.Array:
-    """Device-side structure estimate for one (n, d) dataset: the
-    sample->quantize->Gram->Boruvka chain, returning the bool adjacency."""
+    """Device-side structure estimate for one (n, d) dataset, returning
+    the bool adjacency: the sample->quantize->Gram->Boruvka chain for
+    tree strategies, or Gram->glasso->partial-correlation support for
+    sparse ones (``glasso_tol`` / ``glasso_steps`` mirror the TrialPlan
+    knobs, so a sweep point can be reproduced through this door)."""
     from .chow_liu import learn_structure_jit
 
+    if strategy.structure == "sparse":
+        corr = estimators.strategy_corr(
+            jnp.asarray(x), strategy, engine=resolve_engine(engine))
+        theta = glasso.glasso_batch(
+            corr[None], strategy.lam, n_steps=glasso_steps)[0]
+        return glasso.support_from_theta(theta, glasso_tol)
     return learn_structure_jit(
         jnp.asarray(x), strategy, engine=resolve_engine(engine))
 
@@ -731,6 +1123,8 @@ def evaluate_strategies(
     strategies: Sequence[Strategy],
     *,
     engine: GramEngine | None = None,
+    glasso_tol: float = glasso.SUPPORT_TOL,
+    glasso_steps: int = glasso.DEFAULT_STEPS,
 ) -> dict[str, dict[str, float]]:
     """Score several strategies on ONE dataset against a reference
     adjacency, on device; the per-strategy metric vectors are stacked and
@@ -738,13 +1132,17 @@ def evaluate_strategies(
 
     Returns ``{label: {error, edit_distance, edge_f1}}`` where
     ``edit_distance`` is the edge symmetric difference |E_hat ^ E_ref|
-    (host ``tree_edit_distance`` semantics).
+    (host ``tree_edit_distance`` semantics; ``edge_f1`` is the general
+    support formula, valid for sparse strategies too — the glasso knobs
+    mirror :class:`TrialPlan`'s and only sparse strategies read them).
     """
     x = jnp.asarray(x)
     adj_true = jnp.asarray(adj_true)
     stacked = []
     for strat in strategies:
-        est = learned_adjacency(x, strat, engine=engine)
+        est = learned_adjacency(x, strat, engine=engine,
+                                glasso_tol=glasso_tol,
+                                glasso_steps=glasso_steps)
         stacked.append(jnp.stack([
             trees.structure_error(est, adj_true).astype(jnp.float32),
             trees.structure_hamming(est, adj_true).astype(jnp.float32),

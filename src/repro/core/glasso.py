@@ -6,14 +6,30 @@ quantized data might be crucial." This module implements that extension:
 
     minimize_Theta  -logdet(Theta) + tr(S Theta) + lambda * ||Theta||_1,off
 
-solved by proximal gradient (ISTA) with backtracking-free fixed step
-(1/L with L estimated from the eigenvalues of S), entirely in JAX
-(`jax.lax` loop, eigendecompositions — d is feature-count-sized, not
-token-sized). The input S may be the sample covariance of ORIGINAL data or
-of PER-SYMBOL QUANTIZED data (eq. 32) — the point of the extension is
-that few-bit S still recovers the sparse support.
+solved by proximal gradient (ISTA) with a monotone step guard: the fixed
+step 1/L estimated from the eigenvalues of S is only an upper-bound guess
+(the true curvature on the iterate path is 1/eigmin(Theta)^2), so each
+iteration evaluates the objective of the candidate and halves the step
+instead of accepting an increase — the objective sequence is
+non-increasing by construction, even on ill-conditioned inputs. The whole
+solve is pure `jax.lax` (fori_loop + eigendecompositions — d is
+feature-count-sized, not token-sized), so :func:`glasso_batch` vmaps it
+over a stacked (b, d, d) batch of Grams: the sparse trial plane
+(``experiments.run_trials``) solves a whole Monte-Carlo sweep point in ONE
+fused launch.
 
-Support recovery = off-diagonal |Theta_jk| > tol.
+The input S may be the sample covariance of ORIGINAL data, of PER-SYMBOL
+QUANTIZED data (eq. 32), or the arcsine-inverted SIGN correlation (eq. 3
+inverted) — the point of the extension is that few-bit S still recovers
+the sparse support. The sign-implied S is an elementwise `sin` transform
+of a sample statistic and is NOT guaranteed PSD at small n;
+:func:`nearest_correlation` eigen-clips it back to a valid correlation
+matrix before the solve (the `-logdet` objective and the `inv` init blow
+up on indefinite inputs otherwise).
+
+Support recovery thresholds the NORMALIZED partial correlations
+|Theta_jk| / sqrt(Theta_jj * Theta_kk) — scale-free, unlike raw
+|Theta_jk| whose magnitude varies with lam and conditioning.
 """
 from __future__ import annotations
 
@@ -23,60 +39,205 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+#: default ISTA iteration budget shared by every glasso entry point (the
+#: trial plane, the wire runtime and the host helpers key their jit caches
+#: on it, so one number keeps them on one compiled solver).
+DEFAULT_STEPS = 500
+
+#: default partial-correlation support threshold, shared by every entry
+#: point that recovers a support (:func:`support`,
+#: :func:`learn_sparse_structure`, the trial plane's
+#: ``TrialPlan.glasso_tol``, ``experiments.learned_adjacency`` and
+#: ``distributed.distributed_learn_structure``) so the same data +
+#: strategy yields the same graph whichever door it enters through. The
+#: eigenvalue-floor PSD projection refills soft-thresholded zeros with
+#: small nonzeros, so the cutoff must sit well above that noise floor.
+SUPPORT_TOL = 0.05
+
 
 def soft_threshold(x: jax.Array, t) -> jax.Array:
     return jnp.sign(x) * jnp.maximum(jnp.abs(x) - t, 0.0)
 
 
-@functools.partial(jax.jit, static_argnames=("n_steps",))
+def nearest_correlation(S: jax.Array, *, eps: float = 1e-4) -> jax.Array:
+    """Project a symmetric matrix to a nearby valid correlation matrix.
+
+    Eigen-clip to eigenvalues >= ``eps`` then renormalize the diagonal to
+    1. Identity (up to f32 round-off) on inputs that are already
+    correlation matrices with eigmin >= eps; the repair path exists for
+    the sign method's arcsine-inverted statistic, whose elementwise `sin`
+    transform can leave the sample matrix indefinite at small n. Batched
+    over leading axes, jit-able.
+    """
+    S = jnp.asarray(S, jnp.float32)
+    S = (S + jnp.swapaxes(S, -1, -2)) / 2.0
+    w, v = jnp.linalg.eigh(S)
+    w = jnp.maximum(w, eps)
+    S = jnp.einsum("...ij,...j,...kj->...ik", v, w, v)
+    dinv = 1.0 / jnp.sqrt(jnp.diagonal(S, axis1=-2, axis2=-1))
+    S = S * dinv[..., :, None] * dinv[..., None, :]
+    return (S + jnp.swapaxes(S, -1, -2)) / 2.0
+
+
+def _objective(w_theta, theta, S, lam, off):
+    """-logdet + tr(S Theta) + lam*||Theta||_1,off from the iterate's
+    eigenvalues (already floored, so the logdet is finite)."""
+    return (-jnp.sum(jnp.log(w_theta))
+            + jnp.sum(S * theta)
+            + lam * jnp.sum(jnp.where(off, jnp.abs(theta), 0.0)))
+
+
+def _glasso_solve(
+    S: jax.Array, lam: jax.Array, n_steps: int, step_scale: float, eps: float
+) -> jax.Array:
+    """One (d, d) monotone ISTA solve (trace body of glasso/glasso_batch)."""
+    d = S.shape[0]
+    S = (S + S.T) / 2.0
+    off = ~jnp.eye(d, dtype=bool)
+
+    # init Theta0 = inv(S + 0.5 I) through the eigendecomposition (floored
+    # so the init is PSD and its logdet finite even on an un-repaired
+    # indefinite S), and a step guess from the initial conditioning: the
+    # gradient of -logdet(Theta) + tr(S Theta) is S - Theta^{-1}, whose
+    # curvature on the iterate path is bounded by 1/eigmin(Theta)^2 — the
+    # guess can overshoot, which is what the halve-on-increase guard below
+    # repairs.
+    ws, v0 = jnp.linalg.eigh(S + 0.5 * jnp.eye(d))
+    w0 = jnp.maximum(1.0 / jnp.maximum(ws, eps), eps)
+    theta0 = (v0 * w0) @ v0.T
+    eta0 = step_scale * (1.0 / jnp.linalg.norm(S + jnp.eye(d), 2)) ** 2
+    obj0 = _objective(w0, theta0, S, lam, off)
+
+    # The iterate travels as (theta, w, v) with theta == (v * w) @ v.T:
+    # the gradient's Theta^{-1} is reconstructed from the carried
+    # eigendecomposition ((v / w) @ v.T) instead of an LU inverse —
+    # cheaper, and bit-stable under batching (jnp.linalg.inv is the one
+    # primitive whose low-order bits vary with the vmapped batch size,
+    # which would break the trial plane's 1-vs-N-device parity gate).
+    def body(_, carry):
+        theta, w, v, eta, obj = carry
+        g = S - (v / w) @ v.T
+        z = theta - eta * g
+        z = jnp.where(off, soft_threshold(z, eta * lam), z)
+        z = (z + z.T) / 2.0
+        # PSD projection with an eigenvalue floor (keeps logdet finite)
+        wz, vz = jnp.linalg.eigh(z)
+        wz = jnp.maximum(wz, eps)
+        z = (vz * wz) @ vz.T
+        obj_z = _objective(wz, z, S, lam, off)
+        # monotone guard: a candidate that increases the objective means
+        # the step overshot the local curvature — reject it and halve eta
+        # (float-noise slack so a converged iterate is not rejected)
+        ok = obj_z <= obj + 1e-6
+        theta = jnp.where(ok, z, theta)
+        w = jnp.where(ok, wz, w)
+        v = jnp.where(ok, vz, v)
+        obj = jnp.where(ok, obj_z, obj)
+        eta = jnp.where(ok, eta, eta / 2.0)
+        return theta, w, v, eta, obj
+
+    theta, _, _, _, _ = jax.lax.fori_loop(
+        0, n_steps, body, (theta0, w0, v0, eta0, obj0))
+    return theta
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_steps", "step_scale", "eps"))
 def glasso(
     S: jax.Array,
     lam: float,
     *,
-    n_steps: int = 500,
+    n_steps: int = DEFAULT_STEPS,
     step_scale: float = 0.9,
     eps: float = 1e-4,
 ) -> jax.Array:
-    """Proximal-gradient graphical lasso.
+    """Monotone proximal-gradient graphical lasso.
 
     Args:
       S: (d, d) sample covariance (unit-diagonal correlation matrices are
         the paper's normalization).
       lam: l1 penalty on off-diagonal entries.
     Returns:
-      (d, d) sparse precision estimate Theta (symmetric PSD).
+      (d, d) sparse precision estimate Theta (symmetric PSD). The
+      objective sequence is non-increasing (each step's candidate is
+      evaluated and the step halved instead of accepting an increase), so
+      the solve cannot diverge on ill-conditioned inputs where the fixed
+      1/L guess overshoots.
     """
-    d = S.shape[0]
-    S = (S + S.T) / 2.0
+    return _glasso_solve(
+        jnp.asarray(S, jnp.float32), jnp.asarray(lam, jnp.float32),
+        n_steps, step_scale, eps)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_steps", "step_scale", "eps"))
+def glasso_batch(
+    S: jax.Array,
+    lam,
+    *,
+    n_steps: int = DEFAULT_STEPS,
+    step_scale: float = 0.9,
+    eps: float = 1e-4,
+) -> jax.Array:
+    """Batched, fully device-resident glasso: (b, d, d) Grams -> (b, d, d)
+    precision estimates in ONE fused launch.
+
+    ``lam`` may be a scalar or a (b,)-broadcastable array (the sparse
+    trial plane stacks strategies with different penalties into one
+    batch). This is the solve stage of ``experiments.run_trials`` for
+    sparse plans: the whole (S*reps, d, d) sweep point runs as one vmapped
+    fori_loop, metric sums stay on device, ``host_syncs == 1``.
+    """
+    S = jnp.asarray(S, jnp.float32)
+    lam = jnp.broadcast_to(
+        jnp.asarray(lam, jnp.float32), S.shape[:-2])
+    return jax.vmap(
+        lambda s, l: _glasso_solve(s, l, n_steps, step_scale, eps))(S, lam)
+
+
+def glasso_objective(theta: jax.Array, S: jax.Array, lam: float) -> jax.Array:
+    """-logdet(Theta) + tr(S Theta) + lam*||Theta||_1,off — the objective
+    the monotone guard enforces (regression-testable from outside)."""
+    theta = jnp.asarray(theta, jnp.float32)
+    S = jnp.asarray(S, jnp.float32)
+    d = theta.shape[-1]
     off = ~jnp.eye(d, dtype=bool)
-
-    # gradient of -logdet(Theta) + tr(S Theta) is S - Theta^{-1}; its
-    # Lipschitz constant on the PSD cone we iterate over is bounded by
-    # 1/eigmin(Theta)^2 — keep Theta well-conditioned via the PSD projection
-    # and use a conservative fixed step from the initial conditioning.
-    theta0 = jnp.linalg.inv(S + 0.5 * jnp.eye(d))
-    eta = step_scale * (1.0 / jnp.linalg.norm(S + jnp.eye(d), 2)) ** 2
-
-    def body(_, theta):
-        theta_inv = jnp.linalg.inv(theta)
-        g = S - theta_inv
-        z = theta - eta * g
-        z = jnp.where(off, soft_threshold(z, eta * lam), z)
-        z = (z + z.T) / 2.0
-        # PSD projection with an eigenvalue floor (keeps logdet finite)
-        w, v = jnp.linalg.eigh(z)
-        w = jnp.maximum(w, eps)
-        return (v * w) @ v.T
-
-    return jax.lax.fori_loop(0, n_steps, body, theta0)
+    sign, logdet = jnp.linalg.slogdet(theta)
+    return (-jnp.where(sign > 0, logdet, -jnp.inf)
+            + jnp.sum(S * theta, axis=(-2, -1))
+            + lam * jnp.sum(jnp.where(off, jnp.abs(theta), 0.0),
+                            axis=(-2, -1)))
 
 
-def support(theta: jax.Array, tol: float = 1e-3) -> np.ndarray:
-    """Off-diagonal support (boolean adjacency) of a precision estimate."""
-    t = np.asarray(theta)
-    adj = np.abs(t) > tol
-    np.fill_diagonal(adj, False)
-    return adj
+def partial_correlations(theta: jax.Array) -> jax.Array:
+    """Normalized partial correlations |Theta_jk| / sqrt(Theta_jj Theta_kk)
+    (diagonal = 1). Scale-free: invariant to D Theta D for any positive
+    diagonal D, unlike raw |Theta_jk|. Batched over leading axes."""
+    theta = jnp.abs(jnp.asarray(theta))
+    dinv = 1.0 / jnp.sqrt(jnp.diagonal(theta, axis1=-2, axis2=-1))
+    return theta * dinv[..., :, None] * dinv[..., None, :]
+
+
+def support_from_theta(theta: jax.Array,
+                       tol: float = SUPPORT_TOL) -> jax.Array:
+    """Device-side off-diagonal support of a precision estimate: the
+    boolean adjacency of partial correlations > ``tol``. Batched over
+    leading axes, jit-able — the support stage of the sparse trial plane.
+    """
+    p = partial_correlations(theta)
+    d = p.shape[-1]
+    return (p > tol) & ~jnp.eye(d, dtype=bool)
+
+
+def support(theta: jax.Array, tol: float = SUPPORT_TOL) -> np.ndarray:
+    """Off-diagonal support (boolean adjacency) of a precision estimate.
+
+    Thresholds the NORMALIZED partial correlations
+    |Theta_jk| / sqrt(Theta_jj * Theta_kk) — scale-free, where the old raw
+    |Theta_jk| > tol rule was scale-dependent (Theta's magnitude varies
+    with lam and conditioning). Host twin of :func:`support_from_theta`.
+    """
+    return np.asarray(support_from_theta(jnp.asarray(theta), tol))
 
 
 def learn_sparse_structure(
@@ -85,26 +246,34 @@ def learn_sparse_structure(
     *,
     method: str = "original",
     rate: int = 4,
-    tol: float = 1e-3,
-    n_steps: int = 500,
+    tol: float = SUPPORT_TOL,
+    n_steps: int = DEFAULT_STEPS,
 ) -> np.ndarray:
     """End-to-end: (n, d) data -> glasso support, optionally through the
-    paper's per-symbol quantizer (the §7 extension)."""
-    from . import estimators, quantizers
+    paper's per-symbol quantizer (the §7 extension).
 
-    if method == "persymbol":
-        x = quantizers.PerSymbolQuantizer(rate).quantize(x)
-    elif method == "sign":
-        # sign data: estimate rho via the arcsine law (eq. 3 inverted),
-        # then feed the implied correlation matrix to glasso
-        u = quantizers.sign_quantize(x)
-        theta_hat = estimators.theta_hat(u)
-        S = estimators.rho_from_theta(theta_hat)
-        S = jnp.where(jnp.eye(x.shape[1], dtype=bool), 1.0, S)
-        return support(glasso(S, lam, n_steps=n_steps), tol)
-    elif method != "original":
+    Runs the SAME encode -> contract -> estimate stage chain as every
+    other pipeline (``estimators.strategy_payload`` -> ``payload_gram`` ->
+    ``corr_from_gram``): the sign path inverts the arcsine law (eq. 3) and
+    eigen-clips the result back to a valid correlation matrix
+    (:func:`nearest_correlation`) before the solve.
+    """
+    from . import estimators
+    from .strategy import Strategy
+
+    if method not in ("original", "sign", "persymbol"):
         raise ValueError(f"unknown method {method!r}")
-    S = estimators.sample_correlation(x)
+    if lam < 0.0:
+        raise ValueError(f"lam must be >= 0 (0 = unpenalized MLE), "
+                         f"got {lam!r}")
+    # the encode/contract/estimate stages only read method/rate/wire, so a
+    # plain (tree) Strategy drives them — which keeps lam = 0 (unpenalized
+    # solve) a valid input here, where Strategy's sparse axis requires a
+    # positive penalty
+    strat = Strategy(method, rate=rate)
+    payload = estimators.strategy_payload(x, strat)
+    gram = estimators.payload_gram(payload, strat)
+    S = estimators.corr_from_gram(gram, x.shape[0], strat)
     return support(glasso(S, lam, n_steps=n_steps), tol)
 
 

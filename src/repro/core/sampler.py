@@ -18,6 +18,10 @@ Three samplers are provided:
     sampling stage of the bucketed sweep engine
     (``experiments.run_trials``), where n is padded up to a shape bucket
     and masked; ``sample_tree_ggm_rows_batch`` is its vmapped trial form.
+  * ``sample_ggm_rows`` / ``sample_ggm_rows_batch`` — the same row-keyed,
+    bucket-stable contract for ARBITRARY covariances via a Cholesky
+    factor: the data plane of the sparse trial plane
+    (``glasso.random_sparse_precision`` ground truths).
 
 All samplers are exact: x = M @ (c * z) with M the unit lower-triangular
 path-product matrix solves the conditional recursion in closed form, so
@@ -114,6 +118,24 @@ def sample_tree_ggm_rows(
         key[None], n, parent[None], rho[None])[0]
 
 
+def _row_normals(keys: jax.Array, n: int, d: int) -> jax.Array:
+    """(t,) trial keys -> (t, n, d) standard normals with row i of trial k
+    drawn from ``fold_in(keys[k], i)`` — the shape-stable driving noise of
+    every bucketed sampler (the first m rows of an (n, d) draw are
+    bit-equal to the (m, d) draw).
+
+    The (t, n) per-row keys are folded in one flat vmap (not a nested
+    per-trial vmap of ``normal(k, (d,))`` — that shape compiles ~3x
+    slower).
+    """
+    t = keys.shape[0]
+    row_keys = jax.vmap(
+        lambda k: jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+            k, jnp.arange(n, dtype=jnp.uint32)))(keys)
+    return jax.vmap(lambda k: jax.random.normal(k, (d,), jnp.float32))(
+        row_keys.reshape(t * n)).reshape(t, n, d)
+
+
 def sample_tree_ggm_rows_batch(
     keys: jax.Array,
     n: int,
@@ -122,23 +144,41 @@ def sample_tree_ggm_rows_batch(
 ) -> jax.Array:
     """Batched :func:`sample_tree_ggm_rows`: (t,) keys + (t, d) stacked
     topological arrays -> (t, n, d) float32. The data plane of the bucketed
-    sweep engine — one call for all trials, rows stable in n.
-
-    The (t, n) per-row keys are folded in one flat vmap (not a nested
-    per-trial vmap of ``normal(k, (d,))`` — that shape compiles ~3x
-    slower) and the per-trial conditional mixing is one batched einsum.
+    sweep engine — one call for all trials, rows stable in n; the
+    per-trial conditional mixing is one batched einsum.
     """
-    t = keys.shape[0]
     d = parents.shape[-1]
     rhos = jnp.asarray(rhos, jnp.float32)
-    row_keys = jax.vmap(
-        lambda k: jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
-            k, jnp.arange(n, dtype=jnp.uint32)))(keys)
-    z = jax.vmap(lambda k: jax.random.normal(k, (d,), jnp.float32))(
-        row_keys.reshape(t * n)).reshape(t, n, d)
+    z = _row_normals(keys, n, d)
     c = jnp.sqrt(jnp.clip(1.0 - jnp.square(rhos), 0.0, None)).at[:, 0].set(1.0)
     M = jax.vmap(trees.path_product_mixer)(parents, rhos)
     return jnp.einsum("tnd,ted->tne", z * c[:, None, :], M)
+
+
+def sample_ggm_rows(key: jax.Array, n: int, chol: jax.Array) -> jax.Array:
+    """Shape-stable generic GGM sampler: row i depends only on (key, i).
+
+    ``chol``: (d, d) lower-triangular Cholesky factor of the target
+    covariance (x = L z). Same bucket-stability contract as
+    :func:`sample_tree_ggm_rows` — the sampling stage of the SPARSE trial
+    plane, where the covariance comes from
+    ``glasso.random_sparse_precision`` instead of a tree.
+    """
+    return sample_ggm_rows_batch(key[None], n, chol[None])[0]
+
+
+def sample_ggm_rows_batch(
+    keys: jax.Array, n: int, chols: jax.Array
+) -> jax.Array:
+    """Batched :func:`sample_ggm_rows`: (t,) keys + (t, d, d) stacked
+    Cholesky factors -> (t, n, d) float32. The data plane of the sparse
+    sweep engine (``experiments.run_trials`` on a sparse plan): one call
+    for all trials, rows bit-stable in n, so bucket padding and trial-axis
+    sharding cannot change any trial's draws.
+    """
+    d = chols.shape[-1]
+    z = _row_normals(keys, n, d)
+    return jnp.einsum("tnd,ted->tne", z, jnp.asarray(chols, jnp.float32))
 
 
 def sample_tree_ggm(

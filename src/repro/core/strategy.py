@@ -23,11 +23,13 @@ Method = Literal["sign", "persymbol", "original"]
 Wire = Literal["int8", "packed", "float32"]
 Placement = Literal["replicated", "rowblock"]
 Mst = Literal["boruvka", "kruskal"]
+Structure = Literal["tree", "sparse"]
 
 _METHODS = ("sign", "persymbol", "original")
 _WIRES = ("int8", "packed", "float32")
 _PLACEMENTS = ("replicated", "rowblock")
 _MSTS = ("boruvka", "kruskal")
+_STRUCTURES = ("tree", "sparse")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,6 +48,14 @@ class Strategy:
         minimal) or 'rowblock' (each rank computes d/M rows).
       mst: central MWST solver — 'boruvka' (on-device, jit/vmap-able) or
         'kruskal' (host reference). Both break ties identically.
+      structure: what the central machine solves for — 'tree' (Chow-Liu
+        MWST, the paper's main line) or 'sparse' (graphical lasso over the
+        quantized statistics, the §7 extension: the central estimate is a
+        sparse precision matrix and recovery is support recovery).
+      lam: l1 penalty of the glasso solve (sparse structures only; must
+        be > 0 there and 0.0 — the default — for trees, so a forgotten
+        ``structure="sparse"`` fails loudly instead of silently running
+        the tree pipeline).
     """
 
     method: Method = "sign"
@@ -53,10 +63,25 @@ class Strategy:
     wire: Wire = "int8"
     placement: Placement = "replicated"
     mst: Mst = "boruvka"
+    structure: Structure = "tree"
+    lam: float = 0.0
 
     def __post_init__(self):
         if self.method not in _METHODS:
             raise ValueError(f"unknown method {self.method!r}")
+        if self.structure not in _STRUCTURES:
+            raise ValueError(f"unknown structure {self.structure!r}")
+        if self.structure == "sparse":
+            if not self.lam > 0.0:
+                raise ValueError(
+                    f"sparse structures need a glasso penalty lam > 0, "
+                    f"got {self.lam!r}")
+            object.__setattr__(self, "lam", float(self.lam))
+        elif self.lam != 0.0:
+            raise ValueError(
+                f"lam is the sparse-structure glasso penalty; got "
+                f"lam={self.lam!r} with structure='tree' (did you mean "
+                f"structure='sparse'?)")
         if self.wire not in _WIRES:
             raise ValueError(f"unknown wire {self.wire!r}")
         if self.placement not in _PLACEMENTS:
@@ -82,12 +107,21 @@ class Strategy:
 
     @property
     def label(self) -> str:
-        """Legend name used across the paper figures and result tables."""
+        """Legend name used across the paper figures and result tables.
+
+        Sparse strategies carry the glasso penalty in the label (e.g.
+        ``"R4+glasso0.06"``), so a lambda-path sweep keys distinct result
+        columns.
+        """
         if self.method == "sign":
-            return "sign"
-        if self.method == "original":
-            return "original"
-        return f"R{self.rate}"
+            base = "sign"
+        elif self.method == "original":
+            base = "original"
+        else:
+            base = f"R{self.rate}"
+        if self.structure == "sparse":
+            return f"{base}+glasso{self.lam:g}"
+        return base
 
     @property
     def bits_per_symbol(self) -> int:

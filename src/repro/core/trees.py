@@ -223,6 +223,30 @@ def structure_error(adj_est: jax.Array, adj_true: jax.Array) -> jax.Array:
                    axis=(-2, -1))
 
 
+def edge_counts(
+    adj_est: jax.Array, adj_true: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Integer edge-count channels of a support comparison: ``(shared,
+    est_edges, true_edges)`` = (|E_hat & E|, |E_hat|, |E|) as int32 scalars
+    (batched over leading axes).
+
+    These are the exact channels precision / recall / F1 are recovered
+    from AFTER any reduction: P = shared/est, R = shared/true,
+    F1 = 2*shared/(est + true). Because each channel is integer-valued,
+    their sums are exact in f32 under any reduction order — the property
+    the trial plane's 1-vs-N-device parity gates rest on. For spanning
+    trees est = true = d-1, so F1 degenerates to the shared/(d-1)
+    identity the tree plane uses; general sparse supports need all three
+    channels.
+    """
+    est, true = jnp.broadcast_arrays(
+        jnp.asarray(adj_est), jnp.asarray(adj_true))
+    shared = jnp.sum(est & true, axis=(-2, -1), dtype=jnp.int32) // 2
+    n_est = jnp.sum(est, axis=(-2, -1), dtype=jnp.int32) // 2
+    n_true = jnp.sum(true, axis=(-2, -1), dtype=jnp.int32) // 2
+    return shared, n_est, n_true
+
+
 def edge_f1(adj_est: jax.Array, adj_true: jax.Array) -> jax.Array:
     """Device edge-level F1 = 2 TP / (2 TP + FP + FN); 1.0 iff identical
     (both inputs symmetric bool). Float32 scalar (batched)."""

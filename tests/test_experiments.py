@@ -533,3 +533,176 @@ def test_mc_engines_run_and_bound():
     e1 = mc_persymbol_corr_error(500, 0.5, 1, reps=200)
     e4 = mc_persymbol_corr_error(500, 0.5, 4, reps=200)
     assert e4 < e1
+
+
+# --------------------------------------------------------------------------
+# Sparse trial plane (the §7 extension: glasso over quantized data)
+# --------------------------------------------------------------------------
+
+SPARSE_STRATS = (Strategy("sign", structure="sparse", lam=0.08),
+                 Strategy("persymbol", rate=4, structure="sparse", lam=0.06))
+
+
+def _sparse_plan(**kw):
+    base = dict(d=10, ns=(300, 900), tree="sparse", density=0.25,
+                strategies=SPARSE_STRATS, reps=6, glasso_steps=150)
+    base.update(kw)
+    return TrialPlan(**base)
+
+
+def test_sparse_strategy_axis():
+    s = Strategy("persymbol", rate=4, structure="sparse", lam=0.06)
+    assert s.label == "R4+glasso0.06"
+    assert Strategy("sign", structure="sparse", lam=0.1).label \
+        == "sign+glasso0.1"
+    # lam is a sparse-only knob: a tree strategy with lam set is almost
+    # certainly a forgotten structure="sparse" — fail loudly
+    with pytest.raises(ValueError):
+        Strategy("sign", lam=0.5)
+    assert Strategy("sign", lam=0.0).lam == 0.0
+    with pytest.raises(ValueError):
+        Strategy("sign", structure="sparse")  # lam missing
+    with pytest.raises(ValueError):
+        Strategy("sign", structure="lattice", lam=0.1)
+    # hashable, distinct per lam (lambda-path sweeps key result columns)
+    assert len({Strategy("sign", structure="sparse", lam=l)
+                for l in (0.05, 0.1, 0.05)}) == 2
+
+
+def test_sparse_plan_validation():
+    # structure homogeneity: tree + sparse strategies cannot share a plan
+    with pytest.raises(ValueError):
+        TrialPlan(d=10, ns=(100,), tree="sparse",
+                  strategies=(Strategy("sign"),) + SPARSE_STRATS[:1])
+    # tree kind and strategy structure must agree, both ways
+    with pytest.raises(ValueError):
+        TrialPlan(d=10, ns=(100,), tree="random", strategies=SPARSE_STRATS)
+    with pytest.raises(ValueError):
+        TrialPlan(d=10, ns=(100,), tree="sparse",
+                  strategies=(Strategy("sign"),))
+    with pytest.raises(ValueError):
+        _sparse_plan(density=0.0)
+    assert _sparse_plan().structure == "sparse"
+    assert TrialPlan(d=10, ns=(100,)).structure == "tree"
+    # the tree-only host-Kruskal hatch rejects sparse plans
+    with pytest.raises(ValueError):
+        run_trials(_sparse_plan(), mst="host_kruskal")
+
+
+def test_sparse_run_trials_telemetry_and_one_sync():
+    plan = _sparse_plan()
+    run_trials(plan)  # cold: compiles
+    with jax.transfer_guard_device_to_host("disallow"):
+        res = run_trials(plan)
+    assert res.host_syncs == 1
+    labels = [s.label for s in SPARSE_STRATS]
+    for table in (res.error_rate, res.edit_distance, res.edge_f1,
+                  res.precision, res.recall):
+        assert sorted(table) == sorted(labels)
+        assert all(len(v) == 2 for v in table.values())
+    for lab in labels:
+        assert all(0.0 <= v <= 1.0 for v in res.edge_f1[lab])
+        assert all(0.0 <= v <= 1.0 for v in res.precision[lab])
+        assert all(0.0 <= v <= 1.0 for v in res.recall[lab])
+        # micro-F1 is exactly the harmonic combination of the P/R channels
+        for f1, p, r in zip(res.edge_f1[lab], res.precision[lab],
+                            res.recall[lab]):
+            assert abs(f1 - 2 * p * r / max(p + r, 1e-9)) < 1e-5
+        assert res.comm[lab][0].logical_bits > 0
+    # support recovery improves with data for the 4-bit method (paper §7)
+    assert res.edge_f1[labels[1]][1] >= res.edge_f1[labels[1]][0] - 0.05
+
+
+def test_sparse_run_trials_matches_reference_loop():
+    """One-launch sparse engine == the per-trial public-API chain
+    (sample_ggm_rows -> strategy_corr -> glasso -> partial-corr support),
+    metric for metric."""
+    from repro.core import glasso
+    from repro.core.experiments import sparse_ground_truth, trial_keys
+
+    plan = _sparse_plan(n_buckets=None)
+    res = run_trials(plan)
+    chols, adj_true = sparse_ground_truth(plan)
+    keys = trial_keys(plan)
+    for s in SPARSE_STRATS:
+        lab = s.label
+        for i_n, n in enumerate(plan.ns):
+            errs, hams, sh, ne, nt = [], [], 0, 0, 0
+            for rep in range(plan.reps):
+                x = sampler.sample_ggm_rows(keys[rep], n, chols[rep])
+                corr = estimators.strategy_corr(x, s)
+                theta = glasso.glasso_batch(
+                    corr[None], s.lam, n_steps=plan.glasso_steps)[0]
+                est = glasso.support(theta, plan.glasso_tol)
+                true = np.asarray(adj_true[rep])
+                errs.append((est != true).any())
+                hams.append((est != true).sum() // 2)
+                sh += (est & true).sum() // 2
+                ne += est.sum() // 2
+                nt += true.sum() // 2
+            assert abs(res.error_rate[lab][i_n] - np.mean(errs)) < 1e-6
+            assert abs(res.edit_distance[lab][i_n] - np.mean(hams)) < 1e-6
+            assert abs(res.precision[lab][i_n] - sh / max(ne, 1)) < 1e-5
+            assert abs(res.recall[lab][i_n] - sh / max(nt, 1)) < 1e-5
+            assert abs(res.edge_f1[lab][i_n]
+                       - 2 * sh / max(ne + nt, 1)) < 1e-5
+
+
+def test_sparse_run_trials_bucketing_parity():
+    """Bucketed sparse sweeps recover identical metrics: the row-keyed
+    generic sampler makes padded draws bit-equal on the valid prefix and
+    the sign Gram is integer-exact through the mask."""
+    exact = run_trials(_sparse_plan(n_buckets=None))
+    bucketed = run_trials(_sparse_plan(n_buckets="pow2"))
+    assert bucketed.buckets == {300: 512, 900: 1024}
+    for lab in exact.error_rate:
+        assert bucketed.error_rate[lab] == exact.error_rate[lab], lab
+        assert bucketed.edit_distance[lab] == exact.edit_distance[lab], lab
+        assert bucketed.edge_f1[lab] == exact.edge_f1[lab], lab
+
+
+def test_sparse_ground_truth_matches_reference_rng():
+    """Trial rep's ground truth == glasso.random_sparse_precision under
+    default_rng(seed0 + rep), Cholesky-factored — the same per-rep rng
+    convention as the tree plane."""
+    from repro.core import glasso
+    from repro.core.experiments import sparse_ground_truth
+
+    plan = _sparse_plan(seed0=7)
+    chols, adj_true = sparse_ground_truth(plan)
+    for rep in (0, plan.reps - 1):
+        rng = np.random.default_rng(7 + rep)
+        theta = glasso.random_sparse_precision(
+            plan.d, plan.density, rng,
+            strength=(plan.rho_min, plan.rho_max))
+        a = np.abs(theta) > 1e-8
+        np.fill_diagonal(a, False)
+        assert (np.asarray(adj_true[rep]) == a).all()
+        cov = np.linalg.inv(theta)
+        np.testing.assert_allclose(
+            np.asarray(chols[rep]), np.linalg.cholesky(cov).astype(
+                np.float32), atol=1e-6)
+
+
+def test_tree_results_fill_precision_recall():
+    """Tree plans populate the new precision/recall channels with the
+    spanning-tree identity precision == recall == F1 (est == true == d-1),
+    leaving every pre-existing metric unchanged."""
+    plan = TrialPlan(d=8, ns=(400,),
+                     strategies=(Strategy("sign"), Strategy("original")),
+                     reps=5)
+    res = run_trials(plan)
+    assert res.precision == res.edge_f1
+    assert res.recall == res.edge_f1
+
+
+def test_edge_counts_channels():
+    est = jnp.zeros((4, 4), bool).at[0, 1].set(True).at[1, 0].set(True) \
+        .at[2, 3].set(True).at[3, 2].set(True)
+    true = jnp.zeros((4, 4), bool).at[0, 1].set(True).at[1, 0].set(True) \
+        .at[1, 2].set(True).at[2, 1].set(True)
+    shared, n_est, n_true = trees.edge_counts(est, true)
+    assert (int(shared), int(n_est), int(n_true)) == (1, 2, 2)
+    # broadcasting over leading axes (the metric stage's (S, r) batch)
+    shared, n_est, n_true = trees.edge_counts(est[None, None], true[None])
+    assert shared.shape == n_est.shape == n_true.shape == (1, 1)

@@ -76,6 +76,108 @@ def test_glasso_output_is_spd(sparse_ggm):
     assert np.allclose(np.asarray(theta), np.asarray(theta).T, atol=1e-6)
 
 
+def test_sign_implied_corr_can_be_indefinite_and_is_repaired():
+    """Regression (small-n sign method): the elementwise arcsine inversion
+    of a sample sign-Gram is NOT PSD in general — feeding it to glasso raw
+    blows up the `inv` init and the `-logdet` objective. The estimator
+    chain must eigen-clip it back to a valid correlation matrix first."""
+    from repro.core import quantizers
+
+    rng = np.random.default_rng(0)
+    d, n = 12, 18
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    u = quantizers.sign_quantize(x)
+    S = estimators.rho_from_theta(estimators.theta_hat(u))
+    S = jnp.where(jnp.eye(d, dtype=bool), 1.0, S)
+    # the premise: this sign-implied correlation really is indefinite
+    assert np.linalg.eigvalsh(np.asarray(S)).min() < -0.05
+
+    fixed = glasso.nearest_correlation(S)
+    w = np.linalg.eigvalsh(np.asarray(fixed))
+    assert w.min() > 0
+    np.testing.assert_allclose(np.diag(np.asarray(fixed)), 1.0, atol=1e-5)
+
+    # the end-to-end sign path routes through the repair: finite,
+    # symmetric support with no NaN poisoning
+    est = glasso.learn_sparse_structure(x, lam=0.1, method="sign")
+    assert est.dtype == bool and (est == est.T).all()
+    assert not np.diag(est).any()
+
+    # corr_from_gram (the shared stage tail) applies the same repair
+    gram = estimators.resolve_engine(None).gram(quantizers.sign_codes(x))
+    corr = estimators.corr_from_gram(gram, n, "sign")
+    assert np.linalg.eigvalsh(np.asarray(corr)).min() > 0
+
+
+def test_glasso_support_thresholds_partial_correlations():
+    """Regression: support must be scale-free — thresholding normalized
+    partial correlations |Theta_jk|/sqrt(Theta_jj Theta_kk), not raw
+    |Theta_jk| (whose magnitude varies with lam and conditioning)."""
+    rng = np.random.default_rng(2)
+    d = 8
+    theta = glasso.random_sparse_precision(d, density=0.3, rng=rng)
+    base = glasso.support(theta, tol=1e-2)
+    # rescaling by any positive diagonal D Theta D must not change the
+    # support (raw-|Theta_jk| thresholding fails this for small scales)
+    for scale in (1e-3, 1e3):
+        scaled = np.diag(np.full(d, scale)) @ theta @ np.diag(
+            np.full(d, scale))
+        assert (glasso.support(scaled, tol=1e-2) == base).all(), scale
+    # heterogeneous rescaling too
+    D = np.diag(rng.uniform(0.1, 10.0, d))
+    assert (glasso.support(D @ theta @ D, tol=1e-2) == base).all()
+    # device twin agrees with the host version
+    assert (np.asarray(glasso.support_from_theta(jnp.asarray(theta), 1e-2))
+            == base).all()
+
+
+def test_glasso_objective_monotone_on_ill_conditioned_input():
+    """Regression: the fixed 1/L step guess from ||S + I||_2 overshoots on
+    ill-conditioned inputs (true curvature is 1/eigmin(Theta)^2); the
+    halve-on-increase guard must keep the objective non-increasing."""
+    rng = np.random.default_rng(1)
+    d = 10
+    A = rng.normal(size=(d, 2)).astype(np.float32)
+    S = A @ A.T  # rank-2: maximally ill-conditioned correlation
+    S = S / np.sqrt(np.outer(np.diag(S), np.diag(S)))
+    lam = 0.05
+    objs = [float(glasso.glasso_objective(
+        glasso.glasso(jnp.asarray(S), lam, n_steps=k), S, lam))
+        for k in (1, 2, 5, 10, 20, 50, 100, 200)]
+    assert all(np.isfinite(objs)), objs
+    # fori_loop iterates are deterministic prefixes, so increasing n_steps
+    # walks the same trajectory: monotone up to float-noise slack
+    assert all(b <= a + 2e-5 for a, b in zip(objs, objs[1:])), objs
+
+
+def test_glasso_batch_matches_single_solves(sparse_ggm):
+    """glasso_batch over a stacked (b, d, d) batch (with per-item lam)
+    equals the per-matrix solves — the sparse trial plane's one-launch
+    contract."""
+    x, _ = sparse_ggm
+    S1 = estimators.sample_correlation(x)
+    S2 = estimators.sample_correlation(x[: x.shape[0] // 2])
+    stacked = jnp.stack([S1, S2])
+    lams = jnp.asarray([0.06, 0.12])
+    batch = glasso.glasso_batch(stacked, lams, n_steps=120)
+    for i, (S, lam) in enumerate(((S1, 0.06), (S2, 0.12))):
+        single = glasso.glasso(S, lam, n_steps=120)
+        # batched and single linalg primitives lower differently, so the
+        # iterates agree to accumulated rounding, not bit-for-bit; the
+        # recovered support must be identical (the trial plane uses the
+        # BATCHED path on every engine route, where it IS bit-stable)
+        np.testing.assert_allclose(
+            np.asarray(batch[i]), np.asarray(single), atol=5e-3)
+        assert (glasso.support(batch[i], 5e-3)
+                == glasso.support(single, 5e-3)).all()
+
+
+def test_learn_sparse_structure_rejects_unknown_method(sparse_ggm):
+    x, _ = sparse_ggm
+    with pytest.raises(ValueError):
+        glasso.learn_sparse_structure(x, lam=0.06, method="nope")
+
+
 # ---------------------------------------------------------------------------
 # forest learning
 # ---------------------------------------------------------------------------
