@@ -13,10 +13,10 @@ import os
 import sys
 import time
 
-from . import (ext_glasso, fig3_structure_error, fig56_crossover, fig7_star,
-               fig8_rel_error, fig9_quality_quantity, fig1011_skeleton,
-               ggm_comm, ggm_roofline, gram_engine, kernel_throughput,
-               roofline, sparse, trials)
+from . import (ext_glasso, faults, fig3_structure_error, fig56_crossover,
+               fig7_star, fig8_rel_error, fig9_quality_quantity,
+               fig1011_skeleton, ggm_comm, ggm_roofline, gram_engine,
+               kernel_throughput, roofline, sparse, trials)
 
 BENCHES = {
     "fig3": fig3_structure_error.run,
@@ -28,6 +28,7 @@ BENCHES = {
     "ggm_comm": ggm_comm.run,
     "ggm_roofline": ggm_roofline.run,
     "ext_glasso": ext_glasso.run,
+    "faults": faults.run,
     "gram": gram_engine.run,
     "kernels": kernel_throughput.run,
     "roofline": roofline.run,
@@ -39,6 +40,7 @@ _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BENCH_GRAM_JSON = os.path.join(_REPO_ROOT, "BENCH_gram.json")
 BENCH_TRIALS_JSON = os.path.join(_REPO_ROOT, "BENCH_trials.json")
 BENCH_SPARSE_JSON = os.path.join(_REPO_ROOT, "BENCH_sparse.json")
+BENCH_FAULTS_JSON = os.path.join(_REPO_ROOT, "BENCH_faults.json")
 
 
 def _write_slim(payload: dict, keys: tuple, path: str) -> str:
@@ -56,6 +58,15 @@ def write_bench_sparse(payload: dict, path: str = BENCH_SPARSE_JSON) -> str:
     return _write_slim(payload, (
         "d", "lam", "density", "ns", "reps", "strategies", "glasso_tol",
         "glasso_steps", "engine", "wire_parity", "rows", "checks"), path)
+
+
+def write_bench_faults(payload: dict, path: str = BENCH_FAULTS_JSON) -> str:
+    """Persist the fault-plane artifact: per-scenario structure error +
+    realized fault telemetry + measured retry accounting, and the
+    zero-fault-identity / one-sync / degradation-gate checks."""
+    return _write_slim(payload, (
+        "d", "machines", "ns", "reps", "strategies", "degradation_margin",
+        "scenarios", "rows", "checks"), path)
 
 
 def write_bench_trials(payload: dict, path: str = BENCH_TRIALS_JSON) -> str:
@@ -109,6 +120,8 @@ def main() -> int:
                 print("wrote", write_bench_trials(result), flush=True)
             if name == "sparse" and args.json:
                 print("wrote", write_bench_sparse(result), flush=True)
+            if name == "faults" and args.json:
+                print("wrote", write_bench_faults(result), flush=True)
             checks = (result or {}).get("checks", {})
             bad = [k for k, v in checks.items() if not v]
             status = "PASS" if not bad else f"CHECKS-FAILED:{bad}"

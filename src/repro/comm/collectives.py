@@ -127,3 +127,39 @@ def error_feedback_apply(grads, residuals, axis_name: str, rate: int):
     outs = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
     news = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
     return outs, news
+
+
+def erasure_all_gather(
+    payload: jax.Array,
+    axis_name: str,
+    keep: jax.Array,
+    *,
+    axis: int,
+    fill: int | float = 0,
+) -> jax.Array:
+    """All-gather with per-feature channel ERASURE — the wire-plane
+    realization of machine dropout (``repro.core.faults.FaultPlan``).
+
+    The collective still runs (SPMD programs cannot skip a participant),
+    but entries of features whose ``keep`` flag is False arrive at the
+    center as ``fill`` — the lost payload never reaches the Gram. ``keep``
+    is this rank's ``(..., d_loc)`` bool flags over its feature block
+    (optional leading batch axes — the trial plane drops machines per
+    trial), aligned to ``axis`` (the payload's feature axis: sample-major
+    int8/f32 payloads gather on the last axis, feature-major packed
+    payloads on the second-to-last). ``fill`` must be the format's masked
+    value: 0 for signs / packed bits / raw values,
+    ``quantizers.MASKED_CODE`` for per-symbol int8 codes — the same
+    sentinels ``estimators``' masked paths use, so an erased machine is
+    indistinguishable from a fault-masked one (bit-identical to masking
+    before the gather).
+
+    For use INSIDE ``jax.shard_map`` bodies, like everything in this
+    module.
+    """
+    lead = keep.ndim - 1  # keep's leading batch axes align with payload's
+    shape = list(keep.shape[:lead]) + [1] * (payload.ndim - lead)
+    shape[axis] = keep.shape[-1]
+    masked = jnp.where(keep.reshape(shape), payload,
+                       jnp.asarray(fill, payload.dtype))
+    return jax.lax.all_gather(masked, axis_name, axis=axis, tiled=True)

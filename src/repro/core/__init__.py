@@ -4,9 +4,10 @@ Faithful implementation of Tavassolipour, Motahari & Manzuri-Shalmani,
 "Learning of Tree-Structured Gaussian Graphical Models on Distributed Data
 under Communication Constraints", IEEE TSP 2018.
 """
-from . import bounds, chow_liu, distributed, estimators, experiments, glasso, gram, quantizers, sampler, strategy, streaming, trees  # noqa: F401
+from . import bounds, chow_liu, distributed, estimators, experiments, faults, glasso, gram, quantizers, sampler, strategy, streaming, trees  # noqa: F401
 from .chow_liu import boruvka_mst, chow_liu as mwst, kruskal_forest, kruskal_mst, learn_structure, learn_structure_jit  # noqa: F401
 from .distributed import CommReport, WirePlan  # noqa: F401
+from .faults import FaultPlan  # noqa: F401
 from .experiments import TrialPlan, TrialResult, evaluate_strategies, run_trials, sparse_ground_truth  # noqa: F401
 from .glasso import glasso as graphical_lasso, learn_sparse_structure  # noqa: F401
 from .gram import GramEngine, default_engine, set_default_engine  # noqa: F401

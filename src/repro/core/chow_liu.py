@@ -44,12 +44,20 @@ def kruskal_forest(weights: np.ndarray, min_weight: float) -> list[tuple[int, in
     Ties are broken by smaller row-major flat index (stable sort), matching
     :func:`boruvka_mst`. ``min_weight=-inf`` yields the spanning tree
     (:func:`kruskal_mst`).
+
+    Non-finite entries (NaN / ±inf) are VOIDED edges — the fault plane's
+    masked weight matrices carry them where no effective samples survive —
+    and are skipped rather than sorted (NaN comparisons would otherwise
+    order them arbitrarily and the threshold test could admit them). With
+    voided edges present the result may be a forest, exactly like a
+    below-threshold cut.
     """
     w = np.asarray(weights, dtype=np.float64)
     d = w.shape[0]
     iu, ju = np.triu_indices(d, k=1)
     vals = w[iu, ju]
-    order = np.argsort(-vals, kind="stable")
+    finite = np.isfinite(vals)
+    order = np.argsort(-np.where(finite, vals, -np.inf), kind="stable")
     parent = np.arange(d)
 
     def find(a: int) -> int:
@@ -60,7 +68,9 @@ def kruskal_forest(weights: np.ndarray, min_weight: float) -> list[tuple[int, in
 
     edges: list[tuple[int, int]] = []
     for idx in order:
-        if vals[idx] < min_weight:
+        # the sort key sends every voided edge to the tail, so the first
+        # non-finite value ends the scan like a below-threshold weight
+        if not finite[idx] or vals[idx] < min_weight:
             break
         j, k = int(iu[idx]), int(ju[idx])
         rj, rk = find(j), find(k)

@@ -96,20 +96,42 @@ class CommReport:
       collectives: collectives one weights evaluation issues in the wire
         runtime (payload all-gather, + the rowblock row gather; the
         classic data-sharded runtime adds its Gram psum).
+      retry_bytes: MEAN bytes per trial re-sent by the fault plane's
+        bounded retry policy (``FaultPlan.retries``) — MEASURED from the
+        realized per-round retransmission counts of the sweep's fault
+        telemetry (machines re-requested x their exact per-machine payload
+        bytes), never estimated from the dropout probability. 0.0 without
+        a retry policy.
+      retry_collectives: mean EXTRA gather rounds per trial that carried
+        at least one retransmission (measured the same way). The total
+        collective count of a faulty evaluation is
+        ``collectives + retry_collectives``.
+      retry_rounds: the configured retry budget (``FaultPlan.retries``);
+        0 = single-round wire, faults or not.
     """
 
     logical_bits: int
     wire_bytes: int
     collectives: int
+    retry_bytes: float = 0.0
+    retry_collectives: float = 0.0
+    retry_rounds: int = 0
 
     @property
     def wire_bits(self) -> int:
         return 8 * self.wire_bytes
 
     @property
+    def retry_bits(self) -> float:
+        """Measured mean retransmitted bits per trial (8 * retry_bytes) —
+        the third column of the logical / wire / retry accounting."""
+        return 8.0 * self.retry_bytes
+
+    @property
     def overhead(self) -> float:
         """wire bits / logical bits — 1.0 means the wire is as dense as
-        the paper's budget (packed, no padding)."""
+        the paper's budget (packed, no padding). Retry bits are excluded
+        (they are a fault-recovery cost, not a framing cost)."""
         return 8.0 * self.wire_bytes / max(self.logical_bits, 1)
 
 
@@ -156,10 +178,16 @@ class WirePlan:
     # ---- stage 1: local encoding, R bits/symbol (paper step 1) ----------
 
     def encode(self, x_loc: jax.Array, *,
-               n_valid: jax.Array | int | None = None) -> jax.Array:
+               n_valid: jax.Array | int | None = None,
+               n_rows: jax.Array | None = None,
+               flip: jax.Array | None = None) -> jax.Array:
         """Per-machine quantization of the rank's (..., n, d_loc) feature
         slice into its wire payload (``estimators.strategy_payload``
-        layouts). ``n_valid`` threads the trial plane's valid-length mask.
+        layouts). ``n_valid`` threads the trial plane's valid-length mask;
+        ``n_rows`` / ``flip`` thread this rank's FEATURE-SLICE of a fault
+        plan's realization (delivered-row counts and sign bit-flips — see
+        ``core.faults``), applied machine-side exactly as the estimator
+        stage chain applies them.
         """
         s = self.strategy
         if s.wire == "packed":
@@ -168,7 +196,8 @@ class WirePlan:
                 f"packed wire needs the sample count to be a multiple of "
                 f"{per} (got {x_loc.shape[-2]}); bucket n (pow2 buckets "
                 f"always qualify) or use the int8 wire")
-        payload = estimators.strategy_payload(x_loc, s, n_valid=n_valid)
+        payload = estimators.strategy_payload(x_loc, s, n_valid=n_valid,
+                                              n_rows=n_rows, flip=flip)
         if s.wire == "packed":
             assert payload.dtype == jnp.uint8, "packed wire must stay packed"
         return payload
@@ -180,14 +209,33 @@ class WirePlan:
         feature-major, everything else sample-major)."""
         return payload.ndim - (2 if payload.dtype == jnp.uint8 else 1)
 
-    def wire(self, payload: jax.Array) -> jax.Array:
+    def wire(self, payload: jax.Array,
+             keep: jax.Array | None = None) -> jax.Array:
         """THE communication the paper counts: tiled all-gather of the
         payload over the model axis, reassembling the full feature
         dimension in rank order (bit-identical to encoding the unsliced
-        data — the trial-plane parity gate)."""
-        return jax.lax.all_gather(
-            payload, self.model_axis, axis=self.feature_axis(payload),
-            tiled=True)
+        data — the trial-plane parity gate).
+
+        ``keep`` — optional (d_loc,) bool per-feature survival flags (a
+        fault plan's ``n_rows > 0``): the gather still runs (SPMD), but a
+        dropped machine's entries arrive at the center as the format's
+        masked value (``comm.collectives.erasure_all_gather``) — the
+        channel itself erases the lost payload. Bit-identical to the
+        encode-stage masking, so either realization satisfies the parity
+        gate.
+        """
+        ax = self.feature_axis(payload)
+        if keep is None:
+            return jax.lax.all_gather(
+                payload, self.model_axis, axis=ax, tiled=True)
+        from repro.comm.collectives import erasure_all_gather
+        from .quantizers import MASKED_CODE
+
+        fill = (MASKED_CODE
+                if (self.strategy.method == "persymbol"
+                    and payload.dtype == jnp.int8) else 0)
+        return erasure_all_gather(payload, self.model_axis, keep,
+                                  axis=ax, fill=fill)
 
     # ---- stage 3: central statistic + weights (paper step 3) ------------
 
@@ -197,6 +245,8 @@ class WirePlan:
         n,
         *,
         n_valid: jax.Array | int | None = None,
+        n_rows: jax.Array | None = None,
+        n_rows_own: jax.Array | None = None,
         own_payload: jax.Array | None = None,
         data_sharded: bool = False,
     ) -> jax.Array:
@@ -214,7 +264,15 @@ class WirePlan:
         Args:
           payload_full: the gathered (full-feature) payload.
           n: total sample count for the weight normalization (python int,
-            or traced f32 under valid-length masking).
+            or traced f32 under valid-length masking). Ignored when
+            ``n_rows`` is given — the fault plane normalizes by the
+            per-entry effective pairwise counts instead.
+          n_rows: the fault plan's (..., d) FULL-feature delivered-row
+            counts (every rank reconstructs them deterministically from
+            the replicated fault keys): selects the masked-Gram path and
+            the ``estimators.effective_counts`` normalization.
+          n_rows_own: this rank's feature-slice of ``n_rows`` (rowblock
+            placement only — masks the pre-gather row operand).
           own_payload: this rank's pre-gather payload — the lhs row block
             under the ``rowblock`` placement (its features ARE the rank's
             rows of the full payload, no slicing needed).
@@ -223,8 +281,11 @@ class WirePlan:
         """
         s = self.strategy
         gram = self._assemble_gram(payload_full, n_valid=n_valid,
+                                   n_rows=n_rows, n_rows_own=n_rows_own,
                                    own_payload=own_payload,
                                    data_sharded=data_sharded)
+        if n_rows is not None:
+            n = estimators.effective_counts(n_rows)
         if s.structure == "sparse":
             corr = estimators.corr_from_gram(gram, n, s)
             solve = glasso.glasso_batch if corr.ndim == 3 else glasso.glasso
@@ -236,17 +297,24 @@ class WirePlan:
         payload_full: jax.Array,
         *,
         n_valid: jax.Array | int | None = None,
+        n_rows: jax.Array | None = None,
+        n_rows_own: jax.Array | None = None,
         own_payload: jax.Array | None = None,
         data_sharded: bool = False,
     ) -> jax.Array:
         """The center's full (d, d) Gram from the gathered payload:
         placement-aware contraction (+ the rowblock row gather / the
         data-axis psum). The one copy both :meth:`central` and
-        :meth:`central_corr` build on."""
+        :meth:`central_corr` build on. ``n_rows`` / ``n_rows_own`` select
+        the fault plane's per-feature masked contraction (under rowblock,
+        different machines' dropouts void different row blocks of the
+        gathered Gram — each block stays honestly masked)."""
         s = self.strategy
         rows = own_payload if s.placement == "rowblock" else None
         gram = estimators.payload_gram(
-            payload_full, s, n_valid=n_valid, payload_rows=rows,
+            payload_full, s, n_valid=n_valid, n_rows=n_rows,
+            payload_rows=rows,
+            n_rows_rows=n_rows_own if rows is not None else None,
             engine=self.engine)
         if data_sharded:
             gram = jax.lax.psum(gram, self.data_axis)
@@ -267,6 +335,8 @@ class WirePlan:
         n,
         *,
         n_valid: jax.Array | int | None = None,
+        n_rows: jax.Array | None = None,
+        n_rows_own: jax.Array | None = None,
         own_payload: jax.Array | None = None,
     ) -> jax.Array:
         """The center's PRE-SOLVE statistic for a sparse strategy: Gram on
@@ -285,7 +355,10 @@ class WirePlan:
         s = self.strategy
         assert s.structure == "sparse", "central_corr is the sparse center"
         gram = self._assemble_gram(payload_full, n_valid=n_valid,
+                                   n_rows=n_rows, n_rows_own=n_rows_own,
                                    own_payload=own_payload)
+        if n_rows is not None:
+            n = estimators.effective_counts(n_rows)
         return estimators.corr_from_gram(gram, n, s)
 
     # ---- composed runtime + accounting ----------------------------------

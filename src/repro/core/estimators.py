@@ -158,6 +158,23 @@ def gaussian_weights(
         resolve_engine(engine).gram(x), x.shape[0], "original")
 
 
+def effective_counts(n_rows) -> jax.Array:
+    """(..., d) per-feature delivered-row counts -> (..., d, d) effective
+    PAIRWISE sample counts: n_eff[j, k] = min(n_rows[j], n_rows[k]).
+
+    Exact (not a bound) because every fault mask is a PREFIX mask per
+    feature column — dropout voids a whole column, straggling truncates it
+    to its first rows — so the row set contributing to Gram entry (j, k)
+    is exactly the first min(n_rows[j], n_rows[k]) rows. This is the ``n``
+    operand :func:`weights_from_gram` / :func:`corr_from_gram` normalize
+    by under a :class:`~repro.core.faults.FaultPlan` (under rowblock
+    placement different machines' dropouts void different Gram blocks, and
+    this matrix is what keeps each surviving block honestly normalized).
+    """
+    counts = jnp.asarray(n_rows, jnp.float32)
+    return jnp.minimum(counts[..., :, None], counts[..., None, :])
+
+
 def weights_from_gram(gram: jax.Array, n, method) -> jax.Array:
     """Central-machine estimate: raw Gram + sample count -> Chow-Liu weights.
 
@@ -165,27 +182,43 @@ def weights_from_gram(gram: jax.Array, n, method) -> jax.Array:
     accumulator, distributed wire runtime, trial plane): ``gram`` is the
     ((..., d, d)) contraction of whatever the wire delivered, ``n`` the
     sample count it sums over (a python int, or a traced f32 scalar under
-    the trial plane's valid-length masking), ``method`` a method string or
-    a :class:`~repro.core.strategy.Strategy`.
+    the trial plane's valid-length masking, or the (..., d, d) per-entry
+    effective-count matrix of :func:`effective_counts` under a fault
+    plan), ``method`` a method string or a
+    :class:`~repro.core.strategy.Strategy`.
 
     * ``'sign'``      — eq. 8 UMVE theta_hat -> MI of signs (eq. 4);
     * ``'persymbol'`` — eq. 32 quantized correlation -> unbiased rho^2
       (eq. 30) -> Gaussian MI (eq. 1);
     * ``'original'``  — sample correlation -> Gaussian MI (eq. 1).
+
+    With a per-entry ``n`` the division uses a safe denominator
+    (max(n_eff, 1)) and entries whose effective count is < 2 — a dropped
+    machine's whole row/column block — are neutralized to weight 0: MI
+    weights are >= 0, so a voided edge can never win the MWST, and the
+    solve stays finite however many machines were lost.
     """
     method = getattr(method, "method", method)
+    n_eff = None
+    if jnp.ndim(n) >= 2:
+        n_eff = jnp.asarray(n, jnp.float32)
+        n = jnp.maximum(n_eff, 1.0)
     if method == "original":
-        return mi_gaussian(gram / n)
-    if method == "sign":
-        return mi_sign(0.5 + gram / (2.0 * n))
-    if method != "persymbol":
+        w = mi_gaussian(gram / n)
+    elif method == "sign":
+        w = mi_sign(0.5 + gram / (2.0 * n))
+    elif method == "persymbol":
+        rho_bar = gram / n
+        # the clip bound must be representable in f32 (1 - 1e-9 rounds to
+        # 1.0 and the MWST-irrelevant diagonal would become inf) — same
+        # guard as mi_gaussian
+        r2 = jnp.clip(rho_squared_unbiased(rho_bar, n), 0.0, 1.0 - 1e-7)
+        w = -0.5 * jnp.log1p(-r2)
+    else:
         raise ValueError(f"unknown method {method!r}")
-    rho_bar = gram / n
-    # the clip bound must be representable in f32 (1 - 1e-9 rounds to 1.0
-    # and the MWST-irrelevant diagonal would become inf) — same guard as
-    # mi_gaussian
-    r2 = jnp.clip(rho_squared_unbiased(rho_bar, n), 0.0, 1.0 - 1e-7)
-    return -0.5 * jnp.log1p(-r2)
+    if n_eff is not None:
+        w = jnp.where(n_eff >= 2.0, w, 0.0)
+    return w
 
 
 def corr_from_gram(gram: jax.Array, n, method) -> jax.Array:
@@ -204,15 +237,35 @@ def corr_from_gram(gram: jax.Array, n, method) -> jax.Array:
       eigen-clipped back to a valid correlation matrix
       (``glasso.nearest_correlation``) before it reaches the `-logdet`
       objective.
+
+    ``n`` may also be the (..., d, d) per-entry effective-count matrix of
+    :func:`effective_counts` (the fault plane's masked Gram): the division
+    then uses a safe denominator (max(n_eff, 1)) and DEGENERATE entries —
+    effective count 0 or 1, e.g. an all-dropped machine's whole block —
+    are neutralized to the identity's entries (0 off-diagonal, 1 on it)
+    instead of propagating 0/0 NaNs: a fully-lost feature enters the
+    solve as an isolated unit-variance variable and the glasso stays
+    finite.
     """
     from .glasso import nearest_correlation
 
     method = getattr(method, "method", method)
+    n_eff = None
+    if jnp.ndim(n) >= 2:
+        n_eff = jnp.asarray(n, jnp.float32)
+        n = jnp.maximum(n_eff, 1.0)
     if method in ("original", "persymbol"):
-        return gram / n
-    if method != "sign":
+        rho = gram / n
+    elif method == "sign":
+        rho = jnp.sin(jnp.pi * gram / (2.0 * n))
+    else:
         raise ValueError(f"unknown method {method!r}")
-    return nearest_correlation(jnp.sin(jnp.pi * gram / (2.0 * n)))
+    if n_eff is not None:
+        rho = jnp.where(n_eff >= 2.0, rho,
+                        jnp.eye(gram.shape[-1], dtype=rho.dtype))
+    if method == "sign":
+        return nearest_correlation(rho)
+    return rho
 
 
 def strategy_corr(
@@ -235,16 +288,25 @@ def strategy_corr_batch(
     strategy: Strategy,
     *,
     n_valid: jax.Array | int | None = None,
+    n_rows: jax.Array | None = None,
+    flip: jax.Array | None = None,
     engine: GramEngine | None = None,
 ) -> jax.Array:
     """(t, n, d) stacked raw samples -> (t, d, d) correlation statistics
     for a sparse Strategy: the batched, valid-length-masked form of
     :func:`strategy_corr` used by the sparse trial plane (same bucketing
-    semantics as :func:`strategy_weights_batch`)."""
+    semantics as :func:`strategy_weights_batch`; ``n_rows``/``flip``
+    thread a fault plan's masks exactly as there, normalizing by the
+    per-entry :func:`effective_counts`)."""
     n_pad = x.shape[-2]
-    payload = strategy_payload(x, strategy, n_valid=n_valid)
-    gram = payload_gram(payload, strategy, n_valid=n_valid, engine=engine)
-    n = n_pad if n_valid is None else jnp.asarray(n_valid, jnp.float32)
+    payload = strategy_payload(x, strategy, n_valid=n_valid, n_rows=n_rows,
+                               flip=flip)
+    gram = payload_gram(payload, strategy, n_valid=n_valid, n_rows=n_rows,
+                        engine=engine)
+    if n_rows is not None:
+        n = effective_counts(n_rows)
+    else:
+        n = n_pad if n_valid is None else jnp.asarray(n_valid, jnp.float32)
     return corr_from_gram(gram, n, strategy)
 
 
@@ -253,6 +315,8 @@ def strategy_payload(
     strategy: Strategy,
     *,
     n_valid: jax.Array | int | None = None,
+    n_rows: jax.Array | None = None,
+    flip: jax.Array | None = None,
 ) -> jax.Array:
     """Encode stage: raw (..., n, d) samples -> the strategy's wire payload.
 
@@ -273,13 +337,26 @@ def strategy_payload(
     ``n_valid`` (may be traced) masks pad rows: values/signs to 0, bin
     codes to ``quantizers.MASKED_CODE`` (packed wires carry pad symbols as
     0 bits — :func:`payload_operand` restores the sentinel at the center).
+
+    ``n_rows`` — the (..., d) per-FEATURE delivered-row counts a
+    :class:`~repro.core.faults.FaultPlan` draws — generalizes ``n_valid``
+    to the fault plane: each feature column is prefix-masked to its own
+    count (0 for a dropped machine's features, a truncated prefix for a
+    straggler's), and wins over ``n_valid`` when both are given (fault
+    counts are already clamped to the valid length). ``flip`` is the
+    (..., n, d) bit-flip corruption mask: sign-method payloads flip the
+    affected sign bits (a flipped bit is still a valid symbol — the 1-bit
+    wire's natural corruption model); per-symbol and float wires carry no
+    single-bit semantics and ignore it.
     """
     from .quantizers import (MASKED_CODE, PerSymbolQuantizer, pack_codes,
-                             sign_codes, valid_sample_mask)
+                             sign_codes, valid_row_mask, valid_sample_mask)
 
     n_pad = x.shape[-2]
     mask = None
-    if n_valid is not None:
+    if n_rows is not None:
+        mask = valid_row_mask(n_pad, n_rows)               # (..., n, d)
+    elif n_valid is not None:
         mask = valid_sample_mask(n_pad, n_valid)[:, None]  # (n, 1)
 
     if strategy.method == "original":
@@ -287,17 +364,21 @@ def strategy_payload(
     if strategy.method == "sign":
         if strategy.packed_gram_ok(n_pad):
             bits = x >= 0
+            if flip is not None:
+                bits ^= flip
             if mask is not None:
                 bits &= mask
             return pack_codes(
                 jnp.swapaxes(bits.astype(jnp.int8), -2, -1), 1)  # (., d, n/8)
         u = sign_codes(x)
+        if flip is not None:
+            u = jnp.where(flip, jnp.negative(u), u)
         return u if mask is None else jnp.where(mask, u, jnp.int8(0))
     q = PerSymbolQuantizer(strategy.rate)
     codes = q.encode(x).astype(jnp.int8)
     if strategy.wire == "packed" and n_pad % (8 // strategy.rate) == 0:
         # dense R-bit wire: pad symbols travel as code 0 (any valid code —
-        # the center re-masks them from n_valid before contracting)
+        # the center re-masks them from n_valid/n_rows before contracting)
         if mask is not None:
             codes = jnp.where(mask, codes, jnp.int8(0))
         return pack_codes(
@@ -312,6 +393,7 @@ def payload_operand(
     strategy: Strategy,
     *,
     n_valid: jax.Array | int | None = None,
+    n_rows: jax.Array | None = None,
 ) -> jax.Array:
     """Wire payload -> the Gram operand the engine kernels ingest.
 
@@ -321,14 +403,35 @@ def payload_operand(
     (feature-major -> sample-major) and restore the ``MASKED_CODE``
     sentinel on pad rows — integer-exact, so the operand equals the
     un-packed codes entry for entry.
-    """
-    from .quantizers import MASKED_CODE, unpack_codes, valid_sample_mask
 
-    if strategy.method != "persymbol" or payload.dtype != jnp.uint8:
+    Under per-feature ``n_rows`` fault counts the 1-bit PACKED sign wire
+    is unpacked too: the popcount identity's uniform shift
+    (``G = n - 2*popcount``) assumes every feature shares one prefix
+    length, which heterogeneous dropout/straggling breaks — so the bytes
+    are expanded to ±1 int8 signs with undelivered rows zeroed, which the
+    integer-exact Gram contracts to the same values the popcount path
+    yields whenever the counts ARE uniform (the zero-fault bit-identity).
+    """
+    from .quantizers import (MASKED_CODE, unpack_codes, valid_row_mask,
+                             valid_sample_mask)
+
+    if payload.dtype != jnp.uint8:
+        return payload
+    if strategy.method == "sign":
+        if n_rows is None:
+            return payload  # the popcount path contracts the bytes directly
+        bits = jnp.swapaxes(unpack_codes(payload, 1), -2, -1)
+        u = jnp.where(bits > 0, jnp.int8(1), jnp.int8(-1))
+        return jnp.where(valid_row_mask(u.shape[-2], n_rows),
+                         u, jnp.int8(0))
+    if strategy.method != "persymbol":
         return payload
     codes = jnp.swapaxes(
         unpack_codes(payload, strategy.rate), -2, -1).astype(jnp.int8)
-    if n_valid is not None:
+    if n_rows is not None:
+        codes = jnp.where(valid_row_mask(codes.shape[-2], n_rows),
+                          codes, jnp.int8(MASKED_CODE))
+    elif n_valid is not None:
         mask = valid_sample_mask(codes.shape[-2], n_valid)[:, None]
         codes = jnp.where(mask, codes, jnp.int8(MASKED_CODE))
     return codes
@@ -339,7 +442,9 @@ def payload_gram(
     strategy: Strategy,
     *,
     n_valid: jax.Array | int | None = None,
+    n_rows: jax.Array | None = None,
     payload_rows: jax.Array | None = None,
+    n_rows_rows: jax.Array | None = None,
     engine: GramEngine | None = None,
 ) -> jax.Array:
     """Central contraction: (gathered) wire payload -> (..., d, d) Gram.
@@ -355,11 +460,20 @@ def payload_gram(
     ``(..., d_rows, d)`` Gram block of those rows against the full
     payload. ``n_valid`` applies the integer-exact masked-count shift to
     the packed sign identity (``G = n_valid - 2*popcount``).
+
+    ``n_rows`` / ``n_rows_rows`` thread the fault plane's per-feature
+    delivered-row counts for the full payload and (under rowblock) for
+    the row-slice payload respectively: the packed sign fast path is
+    bypassed (its uniform shift is invalid under heterogeneous prefixes —
+    see :func:`payload_operand`) and every operand is prefix-masked per
+    feature, so each Gram entry sums exactly its
+    ``effective_counts(n_rows)`` surviving rows.
     """
     eng = resolve_engine(engine)
     batched = payload.ndim == 3
 
-    if strategy.method == "sign" and payload.dtype == jnp.uint8:
+    if (strategy.method == "sign" and payload.dtype == jnp.uint8
+            and n_rows is None):
         n_pad = payload.shape[-1] * 8
         fn = eng.packed_sign_gram_batch if batched else eng.packed_sign_gram
         if payload_rows is not None:
@@ -373,10 +487,11 @@ def payload_gram(
             gram = gram - (n_pad - jnp.asarray(n_valid, jnp.float32))
         return gram
 
-    u = payload_operand(payload, strategy, n_valid=n_valid)
+    u = payload_operand(payload, strategy, n_valid=n_valid, n_rows=n_rows)
     rows = None
     if payload_rows is not None:
-        rows = payload_operand(payload_rows, strategy, n_valid=n_valid)
+        rows = payload_operand(payload_rows, strategy, n_valid=n_valid,
+                               n_rows=n_rows_rows)
     if strategy.method == "persymbol":
         from .quantizers import PerSymbolQuantizer
 
@@ -413,6 +528,8 @@ def strategy_weights_batch(
     strategy: Strategy,
     *,
     n_valid: jax.Array | int | None = None,
+    n_rows: jax.Array | None = None,
+    flip: jax.Array | None = None,
     engine: GramEngine | None = None,
 ) -> jax.Array:
     """(t, n, d) stacked raw samples -> (t, d, d) Chow-Liu weights.
@@ -430,9 +547,22 @@ def strategy_weights_batch(
     packed) the masked statistics are BIT-EQUAL to the unpadded ones;
     float paths agree to accumulation-order rounding, which preserves the
     weight rank order (all Boruvka needs) in every non-adversarial case.
+
+    ``n_rows`` / ``flip`` thread a :class:`~repro.core.faults.FaultPlan`
+    realization (per-feature delivered-row counts + sign bit flips): the
+    Gram is prefix-masked per feature and the weights normalize by the
+    per-entry :func:`effective_counts` with voided entries neutralized to
+    weight 0 — the graceful-degradation path. A zero-fault realization
+    (all counts == n_valid, ``flip=None``) is bit-identical to the
+    faultless call.
     """
     t, n_pad, d = x.shape
-    payload = strategy_payload(x, strategy, n_valid=n_valid)
-    gram = payload_gram(payload, strategy, n_valid=n_valid, engine=engine)
-    n = n_pad if n_valid is None else jnp.asarray(n_valid, jnp.float32)
+    payload = strategy_payload(x, strategy, n_valid=n_valid, n_rows=n_rows,
+                               flip=flip)
+    gram = payload_gram(payload, strategy, n_valid=n_valid, n_rows=n_rows,
+                        engine=engine)
+    if n_rows is not None:
+        n = effective_counts(n_rows)
+    else:
+        n = n_pad if n_valid is None else jnp.asarray(n_valid, jnp.float32)
     return weights_from_gram(gram, n, strategy)

@@ -89,6 +89,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from . import estimators, glasso, sampler, trees
 from .chow_liu import boruvka_mst, kruskal_mst
 from .distributed import CommReport, WirePlan
+from .faults import FaultPlan, fault_trial_keys
 from .gram import GramEngine, resolve_engine
 from .quantizers import PerSymbolQuantizer
 from .strategy import FIG3_STRATEGIES, Strategy
@@ -145,6 +146,13 @@ class TrialPlan:
     glasso_tol: float = glasso.SUPPORT_TOL
     #: ISTA iteration budget of the batched glasso solve
     glasso_steps: int = glasso.DEFAULT_STEPS
+    #: optional fault-injection plan (``core.faults.FaultPlan``):
+    #: deterministic machine dropout / straggler truncation / sign
+    #: bit-flips on the wire, with masked-Gram graceful degradation at the
+    #: center and measured retry accounting on ``TrialResult.comm``.
+    #: ``None`` = pristine wire; a ZERO-fault FaultPlan runs the fault
+    #: path and is bit-identical to ``None`` (pinned by the CI smoke).
+    faults: FaultPlan | None = None
 
     def __post_init__(self):
         if self.tree not in TREE_KINDS + SPARSE_KINDS:
@@ -179,6 +187,11 @@ class TrialPlan:
                 raise ValueError(
                     f"n_buckets {nb} do not cover max(ns)={max(self.ns)}")
             object.__setattr__(self, "n_buckets", nb)
+        if self.faults is not None:
+            if not isinstance(self.faults, FaultPlan):
+                raise TypeError(
+                    f"faults must be a FaultPlan, got {type(self.faults)!r}")
+            self.faults.n_machines(self.d)  # machines must divide d
 
     def bucket_for(self, n: int) -> int:
         """The padded sample count the weights stage compiles for."""
@@ -252,6 +265,14 @@ class TrialResult:
     #: vmap; on a 2-D wire mesh this is data * model — the rep axis
     #: shards over the "data" axis size only)
     mesh_devices: int = 1
+    #: fault plans only: per-n REALIZED fault telemetry means, one dict per
+    #: n in ``plan.ns`` — ``{"n", "dropped_machines", "straggling_machines",
+    #: "retransmissions" (mean machines per retry round),
+    #: "retry_rounds_used" (mean extra collectives per retry round)}`` —
+    #: measured from the sweep's actual fault draws (the integer-exact
+    #: telemetry channels ride the single host sync), never estimated from
+    #: the plan's probabilities. ``None`` when ``plan.faults`` is None.
+    faults: list[dict] | None = None
 
     @property
     def trials_per_s(self) -> float:
@@ -383,7 +404,8 @@ def sparse_ground_truth(plan: TrialPlan) -> tuple[jax.Array, jax.Array]:
 
 @functools.lru_cache(maxsize=None)
 def _weights_stage(
-    strategies: tuple[Strategy, ...], n_pad: int, engine: GramEngine
+    strategies: tuple[Strategy, ...], n_pad: int, engine: GramEngine,
+    faults: FaultPlan | None = None,
 ):
     """jit: (keys, parents, rhos, n_valid) -> (S, reps, d, d) weights.
 
@@ -392,26 +414,55 @@ def _weights_stage(
     traced ``n_valid`` masks the pad rows, so one compile per
     (strategy set, bucket) serves every n in the bucket.
 
+    With a ``faults`` plan the signature is
+    (keys, fault_keys, parents, rhos, n_valid) -> (weights, telemetry
+    sums): the fault realization is drawn inside the launch (trial-keyed,
+    bucket-stable) and the weights run the masked-Gram degradation path.
+
     Callers must pass a RESOLVED engine (never None): the closure is
     cached, so a baked-in None would pin whatever process default was
     live at first trace and silently ignore a later
-    ``set_default_engine``.
+    ``set_default_engine``. Call with ``faults`` POSITIONAL (None for the
+    pristine wire) — lru_cache keys positional and keyword spellings
+    separately.
     """
-    def f(keys, parents, rhos, n_valid):
-        return _stacked_weights(
-            keys, parents, rhos, n_valid, strategies, n_pad, engine)
+    if faults is None:
+        def f(keys, parents, rhos, n_valid):
+            return _stacked_weights(
+                keys, parents, rhos, n_valid, strategies, n_pad, engine)
+    else:
+        def f(keys, fault_keys, parents, rhos, n_valid):
+            return _stacked_weights(
+                keys, parents, rhos, n_valid, strategies, n_pad, engine,
+                faults=faults, fault_keys=fault_keys)
 
     return jax.jit(f)
 
 
-def _stacked_weights(keys, parents, rhos, n_valid, strategies, n_pad, engine):
+def _stacked_weights(keys, parents, rhos, n_valid, strategies, n_pad, engine,
+                     faults=None, fault_keys=None):
     """Shared trace body of the single-device and sharded weights stages:
     sample the bucket-shaped data once, emit every strategy's (r, d, d)
-    weight tensor stacked as (S, r, d, d)."""
+    weight tensor stacked as (S, r, d, d).
+
+    With a fault plan the shared fault realization (one draw per trial,
+    shared by every strategy — methods degrade on the SAME faults, the
+    fault twin of the shared-data convention) masks each strategy's
+    payload and the return is ``(weights, (channels,) telemetry sums)``.
+    """
     x = sampler.sample_tree_ggm_rows_batch(keys, n_pad, parents, rhos)
-    return jnp.stack([
-        estimators.strategy_weights_batch(x, s, n_valid=n_valid, engine=engine)
+    if faults is None:
+        return jnp.stack([
+            estimators.strategy_weights_batch(
+                x, s, n_valid=n_valid, engine=engine)
+            for s in strategies])
+    n_rows, flip, tele = faults.draw_batch(
+        fault_keys, n_pad, n_valid, x.shape[-1])
+    w = jnp.stack([
+        estimators.strategy_weights_batch(
+            x, s, n_valid=n_valid, n_rows=n_rows, flip=flip, engine=engine)
         for s in strategies])
+    return w, tele.sum(axis=0)
 
 
 def _per_trial_metrics(w: jax.Array, adj_true: jax.Array) -> jax.Array:
@@ -465,26 +516,47 @@ _warmed_weight_stages: set = set()
 
 @functools.lru_cache(maxsize=None)
 def _corr_stage(
-    strategies: tuple[Strategy, ...], n_pad: int, engine: GramEngine
+    strategies: tuple[Strategy, ...], n_pad: int, engine: GramEngine,
+    faults: FaultPlan | None = None,
 ):
     """jit: (keys, chols, n_valid) -> (S, reps, d, d) correlation
     statistics — the sparse twin of :func:`_weights_stage` (same bucketing
-    and caching contract; the tail is ``estimators.corr_from_gram``
-    instead of the Chow-Liu weights)."""
-    def f(keys, chols, n_valid):
-        return _stacked_corr(keys, chols, n_valid, strategies, n_pad, engine)
+    and caching contract, including the faulty (keys, fault_keys, ...) ->
+    (corr, telemetry sums) signature; the tail is
+    ``estimators.corr_from_gram`` instead of the Chow-Liu weights)."""
+    if faults is None:
+        def f(keys, chols, n_valid):
+            return _stacked_corr(
+                keys, chols, n_valid, strategies, n_pad, engine)
+    else:
+        def f(keys, fault_keys, chols, n_valid):
+            return _stacked_corr(
+                keys, chols, n_valid, strategies, n_pad, engine,
+                faults=faults, fault_keys=fault_keys)
 
     return jax.jit(f)
 
 
-def _stacked_corr(keys, chols, n_valid, strategies, n_pad, engine):
+def _stacked_corr(keys, chols, n_valid, strategies, n_pad, engine,
+                  faults=None, fault_keys=None):
     """Shared trace body of the single-device and sharded sparse stages:
     sample the bucket-shaped data once through the row-keyed generic
-    sampler, emit every strategy's (r, d, d) correlation statistic."""
+    sampler, emit every strategy's (r, d, d) correlation statistic (with a
+    fault plan: the masked-Gram statistic + telemetry sums, mirroring
+    :func:`_stacked_weights`)."""
     x = sampler.sample_ggm_rows_batch(keys, n_pad, chols)
-    return jnp.stack([
-        estimators.strategy_corr_batch(x, s, n_valid=n_valid, engine=engine)
+    if faults is None:
+        return jnp.stack([
+            estimators.strategy_corr_batch(
+                x, s, n_valid=n_valid, engine=engine)
+            for s in strategies])
+    n_rows, flip, tele = faults.draw_batch(
+        fault_keys, n_pad, n_valid, x.shape[-1])
+    corr = jnp.stack([
+        estimators.strategy_corr_batch(
+            x, s, n_valid=n_valid, n_rows=n_rows, flip=flip, engine=engine)
         for s in strategies])
+    return corr, tele.sum(axis=0)
 
 
 def _support_metric_channels(est: jax.Array, adj_true: jax.Array) -> jax.Array:
@@ -544,10 +616,12 @@ def _sparse_sharded_corr_fn(
     engine: GramEngine,
     mesh: Mesh,
     data_axis: str,
+    faults: FaultPlan | None = None,
 ):
     """jit(shard_map): the SPARSE corr stage with the rep axis sharded
     over ``data_axis`` — emits the (S, reps, d, d) correlation statistics
-    (rep-sharded on the way out).
+    (rep-sharded on the way out; with a fault plan also the psum-reduced
+    telemetry sums, replicated).
 
     The sparse mesh paths deliberately end the shard_map at the
     correlation statistic: it is bit-stable across shardings
@@ -557,15 +631,33 @@ def _sparse_sharded_corr_fn(
     to one device and runs the SAME compiled solve+metric stage as the
     mesh-less engine, making mesh results bit-identical by construction.
     """
-    def body(key_data, chols, n_valid):
-        keys = jax.random.wrap_key_data(key_data)
-        return _stacked_corr(keys, chols, n_valid, strategies, n_pad, engine)
+    if faults is None:
+        def body(key_data, chols, n_valid):
+            keys = jax.random.wrap_key_data(key_data)
+            return _stacked_corr(
+                keys, chols, n_valid, strategies, n_pad, engine)
+
+        in_specs = (P(data_axis), P(data_axis), P())
+        out_specs = P(None, data_axis)
+    else:
+        def body(key_data, fkey_data, chols, n_valid):
+            keys = jax.random.wrap_key_data(key_data)
+            fkeys = jax.random.wrap_key_data(fkey_data)
+            corr, tele = _stacked_corr(
+                keys, chols, n_valid, strategies, n_pad, engine,
+                faults=faults, fault_keys=fkeys)
+            # integer-valued channels: the psum is exact, so telemetry is
+            # shard-count invariant like the metric sums
+            return corr, jax.lax.psum(tele, data_axis)
+
+        in_specs = (P(data_axis), P(data_axis), P(data_axis), P())
+        out_specs = (P(None, data_axis), P())
 
     return jax.jit(jax.shard_map(
         body,
         mesh=mesh,
-        in_specs=(P(data_axis), P(data_axis), P()),
-        out_specs=P(None, data_axis),
+        in_specs=in_specs,
+        out_specs=out_specs,
         check_vma=False,
     ))
 
@@ -578,6 +670,7 @@ def _sparse_wire_corr_fn(
     mesh: Mesh,
     data_axis: str,
     model_axis: str,
+    faults: FaultPlan | None = None,
 ):
     """jit(shard_map): the SPARSE corr stage on the DISTRIBUTED trial
     plane — trials sharded over ``data_axis``, features over
@@ -590,32 +683,69 @@ def _sparse_wire_corr_fn(
     then run through the shared single-device executable (see
     :func:`_sparse_sharded_corr_fn` for why the solve stays outside the
     shard_map) — the sparse extension of the CI parity gate.
+
+    With a fault plan every rank reconstructs the FULL fault realization
+    from the replicated fault keys (deterministic — the ranks agree bit
+    for bit, exactly like the replicated sampling), slices its feature
+    block's faults, masks its payload machine-side, and the dropped
+    features are ERASED on the wire itself
+    (``comm.collectives.erasure_all_gather`` via ``WirePlan.wire(keep=)``).
     """
     n_model = mesh.shape[model_axis]
 
-    def body(key_data, chols, n_valid):
-        keys = jax.random.wrap_key_data(key_data)
-        x = sampler.sample_ggm_rows_batch(keys, n_pad, chols)
-        d = x.shape[-1]
-        d_loc = d // n_model
-        midx = jax.lax.axis_index(model_axis)
-        x_loc = jax.lax.dynamic_slice_in_dim(x, midx * d_loc, d_loc, 2)
-        n = jnp.asarray(n_valid, jnp.float32)
-        corrs = []
-        for s in strategies:
-            plan = WirePlan(s, data_axis=data_axis, model_axis=model_axis,
-                            engine=engine)
-            payload = plan.encode(x_loc, n_valid=n_valid)
-            full = plan.wire(payload)
-            corrs.append(plan.central_corr(full, n, n_valid=n_valid,
-                                           own_payload=payload))
-        return jnp.stack(corrs)  # (S, r_loc, d, d)
+    def make_body(with_faults: bool):
+        def body(key_data, *rest):
+            if with_faults:
+                fkey_data, chols, n_valid = rest
+                fkeys = jax.random.wrap_key_data(fkey_data)
+            else:
+                chols, n_valid = rest
+            keys = jax.random.wrap_key_data(key_data)
+            x = sampler.sample_ggm_rows_batch(keys, n_pad, chols)
+            d = x.shape[-1]
+            d_loc = d // n_model
+            midx = jax.lax.axis_index(model_axis)
+            x_loc = jax.lax.dynamic_slice_in_dim(x, midx * d_loc, d_loc, 2)
+            n = jnp.asarray(n_valid, jnp.float32)
+            n_rows = flip = n_rows_loc = flip_loc = keep_loc = tele = None
+            if with_faults:
+                n_rows, flip, tele = faults.draw_batch(
+                    fkeys, n_pad, n_valid, d)
+                n_rows_loc = jax.lax.dynamic_slice_in_dim(
+                    n_rows, midx * d_loc, d_loc, 1)
+                if flip is not None:
+                    flip_loc = jax.lax.dynamic_slice_in_dim(
+                        flip, midx * d_loc, d_loc, 2)
+                keep_loc = n_rows_loc > 0
+            corrs = []
+            for s in strategies:
+                plan = WirePlan(s, data_axis=data_axis,
+                                model_axis=model_axis, engine=engine)
+                payload = plan.encode(x_loc, n_valid=n_valid,
+                                      n_rows=n_rows_loc, flip=flip_loc)
+                full = plan.wire(payload, keep=keep_loc)
+                corrs.append(plan.central_corr(
+                    full, n, n_valid=n_valid, n_rows=n_rows,
+                    n_rows_own=n_rows_loc, own_payload=payload))
+            out = jnp.stack(corrs)  # (S, r_loc, d, d)
+            if with_faults:
+                return out, jax.lax.psum(tele.sum(axis=0), data_axis)
+            return out
+
+        return body
+
+    if faults is None:
+        in_specs = (P(data_axis), P(data_axis), P())
+        out_specs = P(None, data_axis)
+    else:
+        in_specs = (P(data_axis), P(data_axis), P(data_axis), P())
+        out_specs = (P(None, data_axis), P())
 
     return jax.jit(jax.shard_map(
-        body,
+        make_body(faults is not None),
         mesh=mesh,
-        in_specs=(P(data_axis), P(data_axis), P()),
-        out_specs=P(None, data_axis),
+        in_specs=in_specs,
+        out_specs=out_specs,
         check_vma=False,
     ))
 
@@ -627,22 +757,44 @@ def _sharded_point_fn(
     engine: GramEngine,
     mesh: Mesh,
     data_axis: str,
+    faults: FaultPlan | None = None,
 ):
     """jit(shard_map): one sweep point with the rep axis sharded over
     ``data_axis``; metric sums psum-reduced, so the (S, 3) output is
-    replicated and the host path is identical to the single-device one.
+    replicated and the host path is identical to the single-device one
+    (with a fault plan the psum-reduced telemetry sums ride along — both
+    integer-valued, so shard count cannot perturb either).
 
     Trial keys travel as raw uint32 key data (``jax.random.key_data``) —
     typed key arrays predate stable shard_map support on some jax
     versions — and are re-wrapped per shard (default PRNG impl, matching
     ``jax.random.key`` in :func:`_plan_setup`).
     """
-    def body(key_data, parents, rhos, adj_true, n_valid):
-        keys = jax.random.wrap_key_data(key_data)
-        w = _stacked_weights(
-            keys, parents, rhos, n_valid, strategies, n_pad, engine)
-        sums = _per_trial_metrics(w, adj_true).sum(axis=1)  # (S, 3) local
-        return jax.lax.psum(sums, data_axis)
+    if faults is None:
+        def body(key_data, parents, rhos, adj_true, n_valid):
+            keys = jax.random.wrap_key_data(key_data)
+            w = _stacked_weights(
+                keys, parents, rhos, n_valid, strategies, n_pad, engine)
+            sums = _per_trial_metrics(w, adj_true).sum(axis=1)  # (S, 3)
+            return jax.lax.psum(sums, data_axis)
+
+        in_specs = (P(data_axis), P(data_axis), P(data_axis), P(data_axis),
+                    P())
+        out_specs = P()
+    else:
+        def body(key_data, fkey_data, parents, rhos, adj_true, n_valid):
+            keys = jax.random.wrap_key_data(key_data)
+            fkeys = jax.random.wrap_key_data(fkey_data)
+            w, tele = _stacked_weights(
+                keys, parents, rhos, n_valid, strategies, n_pad, engine,
+                faults=faults, fault_keys=fkeys)
+            sums = _per_trial_metrics(w, adj_true).sum(axis=1)  # (S, 3)
+            return (jax.lax.psum(sums, data_axis),
+                    jax.lax.psum(tele, data_axis))
+
+        in_specs = (P(data_axis), P(data_axis), P(data_axis), P(data_axis),
+                    P(data_axis), P())
+        out_specs = (P(), P())
 
     # check_vma=False: the replication checker has no rule for the while
     # loop inside boruvka_mst (jax 0.4.x); the out spec is still honest —
@@ -650,9 +802,8 @@ def _sharded_point_fn(
     return jax.jit(jax.shard_map(
         body,
         mesh=mesh,
-        in_specs=(P(data_axis), P(data_axis), P(data_axis), P(data_axis),
-                  P()),
-        out_specs=P(),
+        in_specs=in_specs,
+        out_specs=out_specs,
         check_vma=False,
     ))
 
@@ -665,6 +816,7 @@ def _wire_point_fn(
     mesh: Mesh,
     data_axis: str,
     model_axis: str,
+    faults: FaultPlan | None = None,
 ):
     """jit(shard_map): one sweep point on the DISTRIBUTED trial plane —
     trials sharded over ``data_axis``, features over ``model_axis``.
@@ -680,38 +832,78 @@ def _wire_point_fn(
     unsliced data, so weights, Boruvka trees, and the integer-exact
     psum-reduced metric sums all reproduce the single-device engine
     EXACTLY — the parity gate CI enforces on 1 vs 8 forced host devices.
+
+    With a fault plan every rank reconstructs the FULL fault realization
+    from the replicated fault keys, masks its own feature slice
+    machine-side (``encode(n_rows=..., flip=...)``), ERASES dropped
+    features on the wire itself (``wire(keep=...)`` —
+    ``comm.collectives.erasure_all_gather``), and the center degrades
+    through the masked-Gram path (``central(n_rows=...)``) — all
+    deterministic, so fault-enabled metrics keep the 1-vs-N parity.
     """
     n_model = mesh.shape[model_axis]
 
-    def body(key_data, parents, rhos, adj_true, n_valid):
-        keys = jax.random.wrap_key_data(key_data)
-        x = sampler.sample_tree_ggm_rows_batch(keys, n_pad, parents, rhos)
-        d = x.shape[-1]
-        d_loc = d // n_model
-        midx = jax.lax.axis_index(model_axis)
-        x_loc = jax.lax.dynamic_slice_in_dim(x, midx * d_loc, d_loc, 2)
-        n = jnp.asarray(n_valid, jnp.float32)
-        ws = []
-        for s in strategies:
-            plan = WirePlan(s, data_axis=data_axis, model_axis=model_axis,
-                            engine=engine)
-            payload = plan.encode(x_loc, n_valid=n_valid)
-            full = plan.wire(payload)
-            ws.append(plan.central(full, n, n_valid=n_valid,
-                                   own_payload=payload))
-        w = jnp.stack(ws)
-        sums = _per_trial_metrics(w, adj_true).sum(axis=1)  # (S, 3) local
-        # exact: integer-valued f32 sums; replicated over the model axis
-        # by construction (every rank holds the full gathered payload or
-        # the gathered row blocks)
-        return jax.lax.psum(sums, data_axis)
+    def make_body(with_faults: bool):
+        def body(key_data, *rest):
+            if with_faults:
+                fkey_data, parents, rhos, adj_true, n_valid = rest
+                fkeys = jax.random.wrap_key_data(fkey_data)
+            else:
+                parents, rhos, adj_true, n_valid = rest
+            keys = jax.random.wrap_key_data(key_data)
+            x = sampler.sample_tree_ggm_rows_batch(keys, n_pad, parents,
+                                                   rhos)
+            d = x.shape[-1]
+            d_loc = d // n_model
+            midx = jax.lax.axis_index(model_axis)
+            x_loc = jax.lax.dynamic_slice_in_dim(x, midx * d_loc, d_loc, 2)
+            n = jnp.asarray(n_valid, jnp.float32)
+            n_rows = flip = n_rows_loc = flip_loc = keep_loc = tele = None
+            if with_faults:
+                n_rows, flip, tele = faults.draw_batch(
+                    fkeys, n_pad, n_valid, d)
+                n_rows_loc = jax.lax.dynamic_slice_in_dim(
+                    n_rows, midx * d_loc, d_loc, 1)
+                if flip is not None:
+                    flip_loc = jax.lax.dynamic_slice_in_dim(
+                        flip, midx * d_loc, d_loc, 2)
+                keep_loc = n_rows_loc > 0
+            ws = []
+            for s in strategies:
+                plan = WirePlan(s, data_axis=data_axis,
+                                model_axis=model_axis, engine=engine)
+                payload = plan.encode(x_loc, n_valid=n_valid,
+                                      n_rows=n_rows_loc, flip=flip_loc)
+                full = plan.wire(payload, keep=keep_loc)
+                ws.append(plan.central(
+                    full, n, n_valid=n_valid, n_rows=n_rows,
+                    n_rows_own=n_rows_loc, own_payload=payload))
+            w = jnp.stack(ws)
+            sums = _per_trial_metrics(w, adj_true).sum(axis=1)  # (S, 3)
+            # exact: integer-valued f32 sums; replicated over the model
+            # axis by construction (every rank holds the full gathered
+            # payload or the gathered row blocks)
+            if with_faults:
+                return (jax.lax.psum(sums, data_axis),
+                        jax.lax.psum(tele.sum(axis=0), data_axis))
+            return jax.lax.psum(sums, data_axis)
+
+        return body
+
+    if faults is None:
+        in_specs = (P(data_axis), P(data_axis), P(data_axis), P(data_axis),
+                    P())
+        out_specs = P()
+    else:
+        in_specs = (P(data_axis), P(data_axis), P(data_axis), P(data_axis),
+                    P(data_axis), P())
+        out_specs = (P(), P())
 
     return jax.jit(jax.shard_map(
-        body,
+        make_body(faults is not None),
         mesh=mesh,
-        in_specs=(P(data_axis), P(data_axis), P(data_axis), P(data_axis),
-                  P()),
-        out_specs=P(),
+        in_specs=in_specs,
+        out_specs=out_specs,
         check_vma=False,
     ))
 
@@ -756,24 +948,66 @@ def clear_compile_caches() -> int:
 
 def _comm_reports(
     plan: TrialPlan, engine: GramEngine, data_axis: str, model_axis: str,
-    wire_plane: bool,
+    wire_plane: bool, fault_sums: np.ndarray | None = None,
 ) -> dict[str, list[CommReport]]:
     """Per-strategy CommReport per n: logical n*d*R bits (true n) next to
     the wire bytes the encode stage's payload actually occupies at the
     bucket the sweep gathered. Collective counts apply only when the wire
-    runtime really ran (the distributed trial plane)."""
+    runtime really ran (the distributed trial plane).
+
+    ``fault_sums`` — the sweep's (len(ns), channels) realized telemetry
+    sums (fault plans with retries): retry bytes are MEASURED from the
+    realized retransmission counts — mean machines re-requested per retry
+    round times the per-machine wire bytes (machines divide d into equal
+    feature blocks, so every machine's payload is exactly wire_bytes /
+    machines) — never estimated from the dropout probability.
+    """
+    f = plan.faults
     comm: dict[str, list[CommReport]] = {}
     for s in plan.strategies:
         wp = WirePlan(s, data_axis=data_axis, model_axis=model_axis,
                       engine=engine)
         reports = []
-        for n in plan.ns:
+        for i, n in enumerate(plan.ns):
             rep = wp.comm_report(n, plan.d, n_pad=plan.bucket_for(n))
             if not wire_plane:
                 rep = dataclasses.replace(rep, collectives=0)
+            if f is not None and f.retries > 0 and fault_sums is not None:
+                machines = f.n_machines(plan.d)
+                retrans = fault_sums[i, 2:2 + f.retries] / plan.reps
+                used = fault_sums[i, 2 + f.retries:2 + 2 * f.retries] \
+                    / plan.reps
+                rep = dataclasses.replace(
+                    rep,
+                    retry_bytes=float(np.sum(retrans))
+                    * rep.wire_bytes / machines,
+                    retry_collectives=float(np.sum(used)),
+                    retry_rounds=f.retries)
             reports.append(rep)
         comm[s.label] = reports
     return comm
+
+
+def _fault_stats(plan: TrialPlan,
+                 fault_sums: np.ndarray | None) -> list[dict] | None:
+    """(len(ns), channels) realized telemetry sums -> the per-n
+    ``TrialResult.faults`` dicts (means over reps). Measured, not
+    estimated: these are the integer-exact channel sums that rode the
+    sweep's single host sync."""
+    if fault_sums is None:
+        return None
+    r = plan.faults.retries
+    stats = []
+    for i, n in enumerate(plan.ns):
+        row = np.asarray(fault_sums[i], np.float64) / plan.reps
+        stats.append({
+            "n": int(n),
+            "dropped_machines": float(row[0]),
+            "straggling_machines": float(row[1]),
+            "retransmissions": [float(v) for v in row[2:2 + r]],
+            "retry_rounds_used": [float(v) for v in row[2 + r:2 + 2 * r]],
+        })
+    return stats
 
 
 def _package_result(
@@ -784,6 +1018,7 @@ def _package_result(
     host_syncs: int,
     comm: dict[str, list[CommReport]],
     mesh_devices: int,
+    faults: list[dict] | None = None,
 ) -> TrialResult:
     """Mean-metric tensor -> TrialResult; shared by every engine path so
     the f32 arithmetic of the derived metrics is identical everywhere.
@@ -820,7 +1055,7 @@ def _package_result(
         edge_f1=edge_f1, precision=precision, recall=recall,
         seconds=seconds, host_syncs=host_syncs, comm=comm,
         buckets=plan.buckets, compile_cache_size=compile_cache_size(),
-        mesh_devices=mesh_devices)
+        mesh_devices=mesh_devices, faults=faults)
 
 
 def _host_kruskal_trials(
@@ -838,15 +1073,30 @@ def _host_kruskal_trials(
     the hatch exists for future solvers that break that equivalence.
     """
     parents, rhos, adj_true, keys = _plan_setup(*_setup_key(plan))
+    faults = plan.faults
+    fkeys = (fault_trial_keys(faults, plan.reps)
+             if faults is not None else None)
+    lead = () if faults is None else (fkeys,)
     t0 = time.perf_counter()
     ws = []
+    fsums = []
     for n in plan.ns:
         n_pad = plan.bucket_for(n)
-        ws.append(_weights_stage(plan.strategies, n_pad, engine)(
-            keys, parents, rhos, jnp.asarray(n, jnp.int32)))
+        out = _weights_stage(plan.strategies, n_pad, engine, faults)(
+            keys, *lead, parents, rhos, jnp.asarray(n, jnp.int32))
+        if faults is None:
+            ws.append(out)
+        else:
+            ws.append(out[0])
+            fsums.append(out[1])
     stacked = jnp.stack(ws)  # (len(ns), S, reps, d, d)
-    host_w, host_adj = jax.device_get(
-        jax.block_until_ready((stacked, adj_true)))
+    host_f = None
+    if faults is None:
+        host_w, host_adj = jax.device_get(
+            jax.block_until_ready((stacked, adj_true)))
+    else:  # the telemetry rides the SAME single read-back
+        host_w, host_adj, host_f = jax.device_get(
+            jax.block_until_ready((stacked, adj_true, jnp.stack(fsums))))
     syncs = 1
     d = plan.d
     sums = np.zeros((len(plan.strategies), len(plan.ns), 3), np.float32)
@@ -862,9 +1112,11 @@ def _host_kruskal_trials(
                 sums[i_s, i_n, 2] += (est & true).sum() // 2
     m = sums / np.float32(plan.reps)
     seconds = time.perf_counter() - t0
-    comm = _comm_reports(plan, engine, data_axis, model_axis, False)
+    comm = _comm_reports(plan, engine, data_axis, model_axis, False,
+                         fault_sums=host_f)
     return _package_result(plan, m, seconds=seconds, host_syncs=syncs,
-                           comm=comm, mesh_devices=1)
+                           comm=comm, mesh_devices=1,
+                           faults=_fault_stats(plan, host_f))
 
 
 def run_trials(
@@ -925,6 +1177,17 @@ def run_trials(
     engine (bit-identical results, still one host sync — the gather is a
     device_put). ``TrialResult.precision`` / ``recall`` join the metric
     tables (micro-averaged, exact from the integer channels).
+
+    FAULT plans (``plan.faults``, a ``core.faults.FaultPlan``) inject
+    deterministic machine dropout / straggler truncation / sign bit-flips
+    into every mode: draws are trial/machine/round-keyed ``fold_in``
+    streams (bucket- and shard-stable, like the sampler), the center
+    degrades through the masked-Gram path (per-entry effective pairwise
+    counts), and the realized telemetry rides the same single host sync
+    onto ``TrialResult.faults`` (+ measured retry bits on the
+    CommReports). A ZERO-fault plan still runs the fault path and is
+    bit-identical to ``faults=None``; fault-enabled mesh runs keep the
+    1-vs-N device parity (both pinned by CI).
     """
     engine = resolve_engine(engine)
     labels = [s.label for s in plan.strategies]
@@ -964,6 +1227,12 @@ def run_trials(
         parents, rhos, adj_true, keys = _plan_setup(*_setup_key(plan))
         gt_args = (parents, rhos)
     stage_fn = _corr_stage if sparse else _weights_stage
+    faults = plan.faults
+    #: per-trial fault keys — rooted apart from the sampler's trial keys
+    #: (core.faults._FAULT_ROOT), one independent fault stream per rep
+    fkeys = (fault_trial_keys(faults, plan.reps)
+             if faults is not None else None)
+    lead = () if faults is None else (fkeys,)
     #: (bucket, n) -> (thread, [stage output]) from the cross-bucket
     #: compile-overlap threads; the main loop reuses these results
     prewarmed: dict[tuple[int, int], tuple[threading.Thread, list]] = {}
@@ -979,6 +1248,8 @@ def run_trials(
     warm_thread = None
     if mesh is not None:
         key_data = jax.random.key_data(keys)
+        lead_data = (() if faults is None
+                     else (jax.random.key_data(fkeys),))
     else:
         if sparse:
             shape_key = (lams, plan.glasso_tol, plan.glasso_steps,
@@ -1013,20 +1284,22 @@ def run_trials(
         for n in plan.ns:
             first_n.setdefault(plan.bucket_for(n), n)
         for b, n0 in list(first_n.items())[1:]:
-            stage_key = (plan.strategies, b, engine, plan.structure)
+            stage_key = (plan.strategies, b, engine, plan.structure, faults)
             if stage_key in _warmed_weight_stages:
                 continue
             _warmed_weight_stages.add(stage_key)
             out: list = []
             t = threading.Thread(
-                target=lambda st=stage_fn(plan.strategies, b, engine),
-                a=(keys, *gt_args, jnp.asarray(n0, jnp.int32)),
+                target=lambda st=stage_fn(plan.strategies, b, engine,
+                                          faults),
+                a=(keys, *lead, *gt_args, jnp.asarray(n0, jnp.int32)),
                 o=out: o.append(st(*a)),
                 daemon=True)
             t.start()
             prewarmed[(b, n0)] = (t, out)
 
     point_sums = []
+    fault_sums = []
     t0 = time.perf_counter()
     if warm_thread is not None:
         warm_thread.start()
@@ -1038,10 +1311,15 @@ def run_trials(
             if pre is not None:
                 pre[0].join()
             if pre is not None and pre[1]:
-                w = pre[1][0]
+                out = pre[1][0]
             else:  # not prewarmed (or its thread failed): compute inline
-                w = stage_fn(plan.strategies, n_pad, engine)(
-                    keys, *gt_args, n_valid)
+                out = stage_fn(plan.strategies, n_pad, engine, faults)(
+                    keys, *lead, *gt_args, n_valid)
+            if faults is None:
+                w = out
+            else:
+                w, fsum = out
+                fault_sums.append(fsum)
             if warm_thread is not None:
                 warm_thread.join()
                 warm_thread = None
@@ -1050,42 +1328,61 @@ def run_trials(
             corr_fn = (
                 _sparse_wire_corr_fn(
                     plan.strategies, n_pad, engine, mesh, data_axis,
-                    model_axis)
+                    model_axis, faults)
                 if wire_plane else
                 _sparse_sharded_corr_fn(
-                    plan.strategies, n_pad, engine, mesh, data_axis))
-            corr = corr_fn(key_data, *gt_args, n_valid)
+                    plan.strategies, n_pad, engine, mesh, data_axis,
+                    faults))
+            out = corr_fn(key_data, *lead_data, *gt_args, n_valid)
+            if faults is None:
+                corr = out
+            else:
+                corr, fsum = out
+                fault_sums.append(fsum)
             # gather the rep-sharded statistics onto one device (a d2d
             # copy, NOT a host sync) so the solve+metric executable is the
             # single-device one — bit-identical results by construction
             corr = jax.device_put(corr, jax.devices()[0])
             point_sums.append(metrics_fn(corr, adj_true))
-        elif wire_plane:
-            point_sums.append(
+        else:
+            point_fn = (
                 _wire_point_fn(
                     plan.strategies, n_pad, engine, mesh, data_axis,
-                    model_axis)(
-                    key_data, *gt_args, adj_true, n_valid))
-        else:
-            point_sums.append(
+                    model_axis, faults)
+                if wire_plane else
                 _sharded_point_fn(
-                    plan.strategies, n_pad, engine, mesh, data_axis)(
-                    key_data, *gt_args, adj_true, n_valid))
+                    plan.strategies, n_pad, engine, mesh, data_axis,
+                    faults))
+            out = point_fn(key_data, *lead_data, *gt_args, adj_true,
+                           n_valid)
+            if faults is None:
+                point_sums.append(out)
+            else:
+                point_sums.append(out[0])
+                fault_sums.append(out[1])
     # (S, len(ns), 3) metric tensor, still on device; THE host sync.
     # host_syncs counts actual read-backs (the += convention every host
     # touch in this loop must follow), so the one_sync_per_sweep checks in
     # CI and benchmarks/trials.py stay real canaries — a future per-point
-    # device_get sneaking back in shows up as host_syncs > 1.
+    # device_get sneaking back in shows up as host_syncs > 1. The fault
+    # telemetry stacks ride the SAME read-back.
     syncs = 0
     means = jnp.stack(point_sums, axis=1) / plan.reps
-    m = jax.device_get(jax.block_until_ready(means))
+    if faults is None:
+        m = jax.device_get(jax.block_until_ready(means))
+        fsums = None
+    else:
+        m, fsums = jax.device_get(jax.block_until_ready(
+            (means, jnp.stack(fault_sums))))
     syncs += 1
     seconds = time.perf_counter() - t0
 
-    comm = _comm_reports(plan, engine, data_axis, model_axis, wire_plane)
+    comm = _comm_reports(plan, engine, data_axis, model_axis, wire_plane,
+                         fault_sums=fsums)
     return _package_result(
         plan, m, seconds=seconds, host_syncs=syncs, comm=comm,
-        mesh_devices=(mesh.size if mesh is not None else 1))
+        mesh_devices=(mesh.size if mesh is not None else 1),
+        faults=_fault_stats(plan, fsums))
 
 
 # --------------------------------------------------------------------------

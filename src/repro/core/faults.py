@@ -1,0 +1,222 @@
+"""Deterministic fault injection for the distributed wire plane.
+
+The paper assumes every machine's message reaches the center losslessly.
+This module drops that assumption the way a serving-scale system must:
+a :class:`FaultPlan` — frozen and hashable, the third member of the
+declarative plan trio next to :class:`~repro.core.strategy.Strategy` and
+:class:`~repro.core.distributed.WirePlan` — specifies
+
+* **dropout**: each machine's payload is lost with probability ``dropout``
+  per wire round (an optional bounded retry policy re-requests dropped
+  payloads for up to ``retries`` extra rounds; a machine's features are
+  voided only if every round failed);
+* **straggling**: with probability ``straggle`` an arriving machine is a
+  straggler and contributes only the first ``ceil(straggle_frac * n)`` of
+  its n sample rows (prefix truncation — exactly what a deadline cut-off
+  of a streaming transmission produces);
+* **bit flips**: each transmitted sign bit is flipped independently with
+  probability ``bitflip`` (sign-method payloads only — a flipped sign bit
+  is still a valid symbol, which is what makes the 1-bit wire's corruption
+  model clean; per-symbol and float wires treat ``bitflip`` as 0).
+
+Everything is realized as DEVICE-RESIDENT masks drawn with trial/machine/
+round-keyed ``fold_in`` streams, mirroring the row-keyed convention of
+``core.sampler``:
+
+* the per-trial fault key folds a dedicated root (``fold_in(key(seed),
+  _FAULT_ROOT)``) so fault draws never collide with the sampler's per-trial
+  streams even at equal seeds;
+* machine draws fold the machine index, round draws fold the round index,
+  and the bit-flip mask folds the sample ROW index — so bucketed sweeps
+  (padded n) and any mesh sharding see bit-identical fault realizations,
+  the same property that makes the sampler bucket-stable;
+* a zero-fault plan (``is_null``) draws all-true masks, and every consumer
+  applies them with ``where``/mask ops whose all-true case is bitwise the
+  identity — a zero-fault FaultPlan is bit-identical to no plan (pinned by
+  the CI smoke).
+
+The center's graceful degradation lives in ``core.estimators`` (masked
+Gram + per-entry effective pairwise counts, :func:`effective counts
+<repro.core.estimators.effective_counts>`); the retry policy's honest bit
+accounting lives in ``core.distributed.CommReport``. This module only
+draws the faults and reports what happened (integer-valued telemetry
+channels that ride the sweep engine's single host sync).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+#: fold_in tag separating the fault root key from the sampler's trial keys
+#: (ascii "faul") — distinct roots, not distinct folds, so no collision is
+#: possible whatever the rep count.
+_FAULT_ROOT = 0x6661756C
+#: fold_in tag of the per-machine straggler draw (outside the round range).
+_STRAGGLE_TAG = (1 << 31) - 2
+#: fold_in tag of the per-trial bit-flip stream (row keys fold under it).
+_FLIP_TAG = (1 << 31) - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Declarative fault model for one sweep — frozen + hashable, so it
+    keys the trial plane's jit caches exactly like a Strategy.
+
+    Attributes:
+      dropout: per-round probability a machine's payload is lost.
+      straggle: probability an arriving machine is a straggler.
+      straggle_frac: fraction of its rows a straggler delivers (prefix
+        truncation, ``ceil(straggle_frac * n)`` rows).
+      bitflip: per-bit flip probability on sign-method payloads.
+      retries: extra wire rounds re-requesting dropped payloads (0 = the
+        plain single-round wire). Retry bits are measured and reported in
+        :class:`~repro.core.distributed.CommReport`.
+      machines: number of machines the d features are partitioned over
+        (contiguous equal blocks; must divide d). ``None`` = one machine
+        per feature — the paper's topology.
+      seed: root of the fault PRNG stream (independent of the sampler's
+        ``seed0`` even when numerically equal — see ``_FAULT_ROOT``).
+    """
+
+    dropout: float = 0.0
+    straggle: float = 0.0
+    straggle_frac: float = 0.5
+    bitflip: float = 0.0
+    retries: int = 0
+    machines: int | None = None
+    seed: int = 0
+
+    def __post_init__(self):
+        for name in ("dropout", "straggle", "bitflip"):
+            p = getattr(self, name)
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"{name} must be a probability, got {p!r}")
+            object.__setattr__(self, name, float(p))
+        if not 0.0 < self.straggle_frac <= 1.0:
+            raise ValueError(
+                f"straggle_frac must be in (0, 1], got {self.straggle_frac!r}")
+        object.__setattr__(self, "straggle_frac", float(self.straggle_frac))
+        if self.retries < 0:
+            raise ValueError(f"retries must be >= 0, got {self.retries!r}")
+        object.__setattr__(self, "retries", int(self.retries))
+        if self.machines is not None:
+            if self.machines < 1:
+                raise ValueError(
+                    f"machines must be >= 1, got {self.machines!r}")
+            object.__setattr__(self, "machines", int(self.machines))
+        object.__setattr__(self, "seed", int(self.seed))
+
+    @property
+    def is_null(self) -> bool:
+        """True when the plan can inject no fault at all (all probabilities
+        zero). The engine still runs the fault path for a null plan — its
+        masks are all-true and the results are bit-identical to no plan
+        (the CI smoke pins this), so ``is_null`` is informational."""
+        return self.dropout == 0.0 and self.straggle == 0.0 \
+            and self.bitflip == 0.0
+
+    @property
+    def channels(self) -> int:
+        """Telemetry channels per trial: [machines dropped (after retries),
+        machines straggling, retransmissions in retry round 1..R,
+        retry-round-used indicator 1..R]. All integer-valued, so psum /
+        reduction order cannot perturb their sums."""
+        return 2 + 2 * self.retries
+
+    def n_machines(self, d: int) -> int:
+        m = d if self.machines is None else self.machines
+        if d % m != 0:
+            raise ValueError(
+                f"machines={m} must divide d={d} (contiguous equal blocks)")
+        return m
+
+    def feature_machines(self, d: int) -> jax.Array:
+        """(d,) int32 map feature index -> owning machine (contiguous
+        blocks of d / machines features)."""
+        m = self.n_machines(d)
+        return (jnp.arange(d, dtype=jnp.int32) * m) // d
+
+    # ---- device draws (trial/machine/round-keyed fold_in streams) --------
+
+    def _draw_one(self, key: jax.Array, n_valid, d: int):
+        """One trial's fault realization: (n_rows (d,) int32 delivered-row
+        counts, telemetry (channels,) f32)."""
+        m = self.n_machines(d)
+        r = self.retries
+        mkeys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+            key, jnp.arange(m, dtype=jnp.uint32))
+        rounds = jnp.arange(r + 1, dtype=jnp.uint32)
+        drop_u = jax.vmap(lambda k: jax.vmap(
+            lambda rr: jax.random.uniform(jax.random.fold_in(k, rr)))(
+                rounds))(mkeys)                       # (m, r+1)
+        dropped = drop_u < self.dropout
+        # still[j] = machine missing after rounds 0..j (all of them failed)
+        still = jnp.cumprod(dropped.astype(jnp.int32), axis=1)  # (m, r+1)
+        arrived = still[:, -1] == 0
+        strag_u = jax.vmap(lambda k: jax.random.uniform(
+            jax.random.fold_in(k, _STRAGGLE_TAG)))(mkeys)
+        straggling = arrived & (strag_u < self.straggle)
+        nv = jnp.asarray(n_valid, jnp.int32)
+        n_trunc = jnp.minimum(
+            jnp.ceil(self.straggle_frac * nv.astype(jnp.float32))
+            .astype(jnp.int32), nv)
+        n_m = jnp.where(arrived,
+                        jnp.where(straggling, n_trunc, nv),
+                        jnp.int32(0))                 # (m,)
+        n_rows = n_m[self.feature_machines(d)]        # (d,)
+        # retrans[j] = machines re-requested in retry round j+1 (those
+        # still missing after rounds 0..j); used[j] = that round carried
+        # at least one retransmission (an extra collective).
+        retrans = still[:, :r].sum(axis=0).astype(jnp.float32)
+        used = (still[:, :r].sum(axis=0) > 0).astype(jnp.float32)
+        tele = jnp.concatenate([
+            jnp.asarray([jnp.sum(~arrived), jnp.sum(straggling)],
+                        jnp.float32),
+            retrans, used])
+        return n_rows, tele
+
+    def _flip_one(self, key: jax.Array, n_pad: int, d: int) -> jax.Array:
+        """One trial's (n_pad, d) bit-flip mask — ROW-keyed (fold_in per
+        sample row under the trial's flip tag), so padded draws are
+        bit-equal to unpadded ones on the valid prefix: the same
+        bucket-stability convention as ``sampler._row_normals``."""
+        kf = jax.random.fold_in(key, _FLIP_TAG)
+        row_keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+            kf, jnp.arange(n_pad, dtype=jnp.uint32))
+        u = jax.vmap(lambda k: jax.random.uniform(k, (d,)))(row_keys)
+        return u < self.bitflip
+
+    def draw_batch(self, keys: jax.Array, n_pad: int, n_valid, d: int):
+        """Stacked fault realizations for a trial batch.
+
+        Args:
+          keys: (t,) per-trial fault keys (:func:`fault_trial_keys`).
+          n_pad: padded sample count (bucket shape).
+          n_valid: true sample count (may be traced).
+          d: feature count.
+        Returns:
+          ``(n_rows, flip, telemetry)`` — (t, d) int32 delivered-row
+          counts per feature, (t, n_pad, d) bool bit-flip mask (``None``
+          when ``bitflip == 0``: statically no flip ops are traced), and
+          (t, channels) f32 integer-valued telemetry.
+        """
+        n_rows, tele = jax.vmap(
+            lambda k: self._draw_one(k, n_valid, d))(keys)
+        flip = None
+        if self.bitflip > 0.0:
+            flip = jax.vmap(lambda k: self._flip_one(k, n_pad, d))(keys)
+        return n_rows, flip, tele
+
+
+@functools.lru_cache(maxsize=None)
+def fault_trial_keys(plan: FaultPlan, reps: int) -> jax.Array:
+    """(reps,) per-trial fault keys: ``fold_in(fold_in(key(seed),
+    _FAULT_ROOT), rep)`` — one independent fault stream per trial, rooted
+    apart from the sampler's trial keys. Cached per (plan, reps) like the
+    sweep engine's setup bundles."""
+    root = jax.random.fold_in(jax.random.key(plan.seed), _FAULT_ROOT)
+    return jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+        root, jnp.arange(reps, dtype=jnp.uint32))

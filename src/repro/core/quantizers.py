@@ -115,6 +115,23 @@ def valid_sample_mask(n_pad: int, n_valid) -> jax.Array:
     return jnp.arange(n_pad) < n_valid
 
 
+def valid_row_mask(n_pad: int, n_rows) -> jax.Array:
+    """(..., n_pad, d) bool mask of delivered sample rows under PER-FEATURE
+    row counts — the fault plane's generalization of
+    :func:`valid_sample_mask`.
+
+    ``n_rows`` is the (..., d) delivered-row-count vector a
+    :class:`~repro.core.faults.FaultPlan` draws (0 for a dropped machine's
+    features, a truncated prefix for a straggler's, the full count
+    otherwise; may be traced). Row i of feature j is valid iff
+    ``i < n_rows[j]`` — prefix masks per column, so the masked Gram sums
+    each (j, k) entry over the prefix INTERSECTION min(n_rows[j],
+    n_rows[k]) rows (see ``estimators.effective_counts``).
+    """
+    counts = jnp.asarray(n_rows)
+    return jnp.arange(n_pad)[:, None] < counts[..., None, :]
+
+
 def bitpack_signs(u_pm1: jax.Array) -> jax.Array:
     """Pack {-1,+1} sign arrays along the last axis into uint8 (8 symbols/byte).
 

@@ -13,6 +13,14 @@ through each layer separately.
 Being frozen + hashable, a Strategy can key jit caches and result tables
 directly; ``label`` matches the paper-figure legend names ("sign",
 "R1".."R7", "original").
+
+Strategy is one of three frozen plan values the pipelines compose:
+Strategy (WHAT to estimate and how to quantize it),
+``core.distributed.WirePlan`` (WHERE each stage runs and which collective
+carries the payload), and ``core.faults.FaultPlan`` (what can go WRONG on
+that wire — deterministic dropout / straggling / bit-flips with
+masked-Gram degradation). All three are hashable for the same reason: they
+key the sweep engine's jit caches directly.
 """
 from __future__ import annotations
 

@@ -120,7 +120,9 @@ class StreamingGram:
         u = jnp.asarray(codes).astype(jnp.int8)
         return jnp.where(u > 0, jnp.int8(1), jnp.int8(-1))
 
-    def update_codes_batch(self, codes: jax.Array) -> "StreamingGram":
+    def update_codes_batch(
+        self, codes: jax.Array, n_valid=None
+    ) -> "StreamingGram":
         """Fold in a STACK of already-quantized per-machine wire blocks —
         (m, n_b, d) int8 — through ONE batched Gram launch.
 
@@ -129,35 +131,89 @@ class StreamingGram:
         kernel grid (``GramEngine.code_gram_batch`` / ``gram_batch``)
         instead of m sequential launches; the per-machine Grams are summed
         into the accumulator. Exactly equals m :meth:`update_codes` calls.
+
+        ``n_valid`` — optional (m,) per-machine delivered-row counts (the
+        fault plane's straggler truncation / dropout on HORIZONTAL,
+        sample-split machines): machine i contributes only its first
+        ``n_valid[i]`` rows (0 = dropped entirely). Rows past the prefix
+        are masked before the contraction, so the accumulator equals the
+        sequential fold of only the surviving rows, exactly.
         """
         assert codes.ndim == 3 and codes.shape[2] == self.d, codes.shape
         m, n_b, _ = codes.shape
+        n_add = m * n_b
+        mask = None
+        if n_valid is not None:
+            nv = jnp.asarray(n_valid, jnp.int32)
+            assert nv.shape == (m,), (nv.shape, m)
+            mask = jnp.arange(n_b)[None, :, None] < nv[:, None, None]
+            n_add = int(np.sum(np.asarray(n_valid)))
         if self.method == "sign":
-            g = self._eng.gram_batch(self._codes_pm1(codes))
+            u = self._codes_pm1(codes)
+            if mask is not None:
+                u = jnp.where(mask, u, jnp.int8(0))
+            g = self._eng.gram_batch(u)
         elif self.method == "persymbol":
-            g = self._eng.code_gram_batch(
-                jnp.asarray(codes).astype(jnp.int8), self._quant.centroids)
+            u = jnp.asarray(codes).astype(jnp.int8)
+            if mask is not None:
+                from .quantizers import MASKED_CODE
+
+                u = jnp.where(mask, u, jnp.int8(MASKED_CODE))
+            g = self._eng.code_gram_batch(u, self._quant.centroids)
         else:
             raise ValueError("update_codes_batch requires a quantized method")
         self.gram = self.gram + jnp.sum(g, axis=0)
-        self.n += m * n_b
+        self.n += n_add
         return self
 
     def update_packed_batch(
-        self, payloads: jax.Array, n_batch: int
+        self, payloads: jax.Array, n_batch: int, n_valid=None
     ) -> "StreamingGram":
         """Fold in a STACK of 1-bit packed sign payloads — (m, d,
         ceil(n_b/8)) uint8, one per machine, each encoding ``n_batch``
         samples — via ONE ``packed_sign_gram_batch`` launch (the machine
         axis is a native kernel grid dimension on pallas). The wire bytes
         are the compute operand; nothing is unpacked to HBM. Exactly
-        equals m :meth:`update_packed` calls."""
+        equals m :meth:`update_packed` calls.
+
+        ``n_valid`` — optional (m,) per-machine delivered-row counts
+        (prefix truncation; 0 = machine dropped). The truncation is
+        applied ON THE WIRE BYTES: each machine's bytes are masked to its
+        bit prefix, contracted with the shared popcount kernel, and the
+        per-machine Gram corrected by the uniform shift
+        ``G_i = n_valid[i] - 2*popcount`` (valid here because a machine's
+        truncation is uniform across its d features — horizontal
+        placement — unlike the per-feature fault masks of
+        ``estimators.payload_gram``). Exactly equals folding each
+        machine's surviving prefix alone.
+        """
         assert self.method == "sign", "packed wire is the sign method"
         assert payloads.ndim == 3 and payloads.shape[1] == self.d, (
             payloads.shape)
-        g = self._eng.packed_sign_gram_batch(payloads, n_batch)
+        m = payloads.shape[0]
+        if n_valid is None:
+            g = self._eng.packed_sign_gram_batch(payloads, n_batch)
+            self.gram = self.gram + jnp.sum(g, axis=0)
+            self.n += m * n_batch
+            return self
+        nv = jnp.asarray(n_valid, jnp.int32)
+        assert nv.shape == (m,), (nv.shape, m)
+        nb = payloads.shape[-1]
+        # per-byte bit mask of each machine's surviving prefix: byte j of
+        # machine i keeps its low clip(nv[i] - 8j, 0, 8) bits (pack_codes
+        # is little-bit-order along the sample axis)
+        bits_left = jnp.clip(
+            nv[:, None] - 8 * jnp.arange(nb, dtype=jnp.int32)[None, :], 0, 8)
+        byte_mask = ((1 << bits_left) - 1).astype(jnp.uint8)  # (m, nb)
+        masked = payloads & byte_mask[:, None, :]
+        g = self._eng.packed_sign_gram_batch(masked, n_batch)
+        # zeroed tail bits xor to 0 (counted as agreement by the kernel's
+        # n_batch - 2*popcount); the integer-exact uniform shift restores
+        # the true prefix count: G_i = n_valid[i] - 2*popcount
+        g = g - (jnp.float32(n_batch)
+                 - nv.astype(jnp.float32))[:, None, None]
         self.gram = self.gram + jnp.sum(g, axis=0)
-        self.n += payloads.shape[0] * n_batch
+        self.n += int(np.sum(np.asarray(n_valid)))
         return self
 
     def weights(self) -> jax.Array:

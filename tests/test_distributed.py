@@ -456,3 +456,48 @@ def test_shard_map_trial_sweep_parity():
             raise AssertionError('indivisible reps must raise')
         print('shard_map sweep parity OK')
     """, n_devices=4)
+
+
+def test_fault_wire_trial_plane_parity():
+    """ACCEPTANCE GATE (fault plane): a FAULT-ENABLED sweep on the
+    ("data", "model") wire mesh — machine-side masking, erasure
+    all-gather of dropped features, masked-Gram center with per-entry
+    effective counts — reproduces the single-device fault path's metrics
+    AND realized fault telemetry bit-identically on 1 vs 8 forced host
+    devices, with one host sync per sweep under the d2h transfer guard,
+    and the CommReports carry measured (not estimated) retry bits."""
+    run_devices("""
+        import jax
+        from repro.core.experiments import TrialPlan, run_trials
+        from repro.core.faults import FaultPlan
+        from repro.core.strategy import FIG3_STRATEGIES
+        from repro.launch.mesh import make_trial_mesh
+        fp = FaultPlan(dropout=0.25, straggle=0.3, bitflip=0.01, retries=2,
+                       machines=4, seed=7)
+        plan = TrialPlan(d=12, ns=(100, 400), strategies=FIG3_STRATEGIES,
+                         reps=8, faults=fp)
+        with jax.transfer_guard_device_to_host('disallow'):
+            ref = run_trials(plan)                        # single device
+            r24 = run_trials(plan, mesh=make_trial_mesh(2, model=4))
+            r4 = run_trials(plan, mesh=make_trial_mesh(4))
+        assert ref.host_syncs == r24.host_syncs == r4.host_syncs == 1
+        assert r24.mesh_devices == 8
+        for r, name in ((r24, '2x4 wire'), (r4, 'data=4')):
+            for s in FIG3_STRATEGIES:
+                lab = s.label
+                assert r.error_rate[lab] == ref.error_rate[lab], (name, lab)
+                assert r.edit_distance[lab] == ref.edit_distance[lab], (
+                    name, lab)
+                assert r.edge_f1[lab] == ref.edge_f1[lab], (name, lab)
+            # realized telemetry is shard-invariant (integer-exact psum)
+            assert r.faults == ref.faults, name
+        # faults actually fired, and retry accounting is measured
+        stats = ref.faults[0]
+        assert stats['dropped_machines'] > 0 or stats['straggling_machines'] > 0
+        for lab, reports in ref.comm.items():
+            for c in reports:
+                assert c.retry_rounds == 2
+                assert c.retry_bytes > 0.0
+                assert c.retry_bits == 8.0 * c.retry_bytes
+        print('fault wire trial plane parity OK')
+    """)
