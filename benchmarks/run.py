@@ -13,12 +13,14 @@ import os
 import sys
 import time
 
-from . import (ext_glasso, faults, fig3_structure_error, fig56_crossover,
-               fig7_star, fig8_rel_error, fig9_quality_quantity,
-               fig1011_skeleton, ggm_comm, ggm_roofline, gram_engine,
-               kernel_throughput, roofline, sparse, trials)
+from . import (bigd, ext_glasso, faults, fig3_structure_error,
+               fig56_crossover, fig7_star, fig8_rel_error,
+               fig9_quality_quantity, fig1011_skeleton, ggm_comm,
+               ggm_roofline, gram_engine, kernel_throughput, roofline,
+               sparse, trials)
 
 BENCHES = {
+    "bigd": bigd.run,
     "fig3": fig3_structure_error.run,
     "fig56": fig56_crossover.run,
     "fig7": fig7_star.run,
@@ -41,6 +43,8 @@ BENCH_GRAM_JSON = os.path.join(_REPO_ROOT, "BENCH_gram.json")
 BENCH_TRIALS_JSON = os.path.join(_REPO_ROOT, "BENCH_trials.json")
 BENCH_SPARSE_JSON = os.path.join(_REPO_ROOT, "BENCH_sparse.json")
 BENCH_FAULTS_JSON = os.path.join(_REPO_ROOT, "BENCH_faults.json")
+BENCH_BIGD_JSON = os.path.join(_REPO_ROOT, "BENCH_bigd.json")
+BENCH_ROOFLINE_JSON = os.path.join(_REPO_ROOT, "BENCH_roofline.json")
 
 
 def _write_slim(payload: dict, keys: tuple, path: str) -> str:
@@ -77,6 +81,24 @@ def write_bench_trials(payload: dict, path: str = BENCH_TRIALS_JSON) -> str:
         "backend", "d", "ns", "reps", "strategies", "trials", "buckets",
         "engine", "loop", "speedup_warm", "speedup_cold", "cold_vs_pr2",
         "comm", "checks"), path)
+
+
+def write_bench_bigd(payload: dict, path: str = BENCH_BIGD_JSON) -> str:
+    """Persist the large-d engine artifact: tiled-vs-monolithic timing per
+    Gram path, autotuned-vs-default-tile speedups, the d=4096 memory-budget
+    contrast, and the bit-identity / budget / speedup acceptance checks."""
+    return _write_slim(payload, (
+        "backend", "n", "ds", "rows", "autotune", "budget",
+        "bytes_ratio_f32_over_packed", "checks"), path)
+
+
+def write_bench_roofline(payload: dict, path: str = BENCH_ROOFLINE_JSON) -> str:
+    """Persist the distributed-GGM roofline artifact: per-(placement, shape)
+    measured step time vs the analytic collective/compute/HBM bounds, the
+    roofline fraction against the binding term, and the model-sanity checks
+    (no hard fraction gate on CPU hosts — see ggm_roofline.py)."""
+    return _write_slim(payload, (
+        "platform", "d", "n", "rows", "thresholds", "checks"), path)
 
 
 def write_bench_gram(payload: dict, path: str = BENCH_GRAM_JSON) -> str:
@@ -122,6 +144,10 @@ def main() -> int:
                 print("wrote", write_bench_sparse(result), flush=True)
             if name == "faults" and args.json:
                 print("wrote", write_bench_faults(result), flush=True)
+            if name == "bigd" and args.json:
+                print("wrote", write_bench_bigd(result), flush=True)
+            if name == "ggm_roofline" and args.json:
+                print("wrote", write_bench_roofline(result), flush=True)
             checks = (result or {}).get("checks", {})
             bad = [k for k, v in checks.items() if not v]
             status = "PASS" if not bad else f"CHECKS-FAILED:{bad}"

@@ -10,7 +10,9 @@ from .distributed import CommReport, WirePlan  # noqa: F401
 from .faults import FaultPlan  # noqa: F401
 from .experiments import TrialPlan, TrialResult, evaluate_strategies, run_trials, sparse_ground_truth  # noqa: F401
 from .glasso import glasso as graphical_lasso, learn_sparse_structure  # noqa: F401
-from .gram import GramEngine, default_engine, set_default_engine  # noqa: F401
+from .gram import (GramConfig, GramEngine, default_engine,  # noqa: F401
+                   default_memory_budget, gram_working_set_bytes,
+                   set_default_engine)
 from .strategy import FIG3_STRATEGIES, Strategy  # noqa: F401
 from .streaming import StreamingGram  # noqa: F401
 from .quantizers import PerSymbolQuantizer, sign_quantize  # noqa: F401

@@ -24,6 +24,8 @@ step, taken only at the edge-list API surface.
 """
 from __future__ import annotations
 
+import functools
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -167,6 +169,33 @@ def boruvka_mst(weights: jax.Array) -> jax.Array:
     )
     _, sel, _ = jax.lax.while_loop(lambda s: s[2] > 1, round_body, init)
     return sel
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def boruvka_mst_batch(weights: jax.Array, chunk: int | None = None
+                      ) -> jax.Array:
+    """Batched :func:`boruvka_mst`: (b, d, d) weights -> (b, d, d) bools.
+
+    ``chunk=None`` is the plain ``vmap`` (one fused launch for the whole
+    trial stack). With ``chunk`` set, the batch streams through
+    ``lax.map`` in ``chunk``-sized vmapped slabs, so the solver's
+    transient working set (the per-trial rank/component scratch) scales
+    with ``chunk`` instead of b — the memory-budgeted metrics stage of
+    ``experiments.run_trials`` at large d. Trials are independent, so the
+    chunked result is bit-identical per trial to the full vmap; the batch
+    zero-pads to a chunk multiple (an all-zero weight matrix still runs —
+    rank-based, weight values never matter — and is sliced off).
+    """
+    b = weights.shape[0]
+    if chunk is None or chunk >= b:
+        return jax.vmap(boruvka_mst)(weights)
+    chunk = max(1, chunk)
+    pad = (-b) % chunk
+    w = jnp.pad(weights, ((0, pad), (0, 0), (0, 0)))
+    sel = jax.lax.map(
+        jax.vmap(boruvka_mst),
+        w.reshape(-1, chunk, *weights.shape[1:]))
+    return sel.reshape(-1, *weights.shape[1:])[:b]
 
 
 def adjacency_to_edges(adj) -> list[tuple[int, int]]:

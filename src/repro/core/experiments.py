@@ -87,10 +87,11 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from . import estimators, glasso, sampler, trees
-from .chow_liu import boruvka_mst, kruskal_mst
+from .chow_liu import boruvka_mst_batch, kruskal_mst
 from .distributed import CommReport, WirePlan
 from .faults import FaultPlan, fault_trial_keys
-from .gram import GramEngine, resolve_engine
+from .gram import (GramConfig, GramEngine, default_memory_budget,
+                   gram_working_set_bytes, resolve_engine)
 from .quantizers import PerSymbolQuantizer
 from .strategy import FIG3_STRATEGIES, Strategy
 
@@ -104,6 +105,16 @@ SPARSE_KINDS = ("sparse",)
 def next_pow2(n: int) -> int:
     """Smallest power of two >= n (and >= 8, the packed-wire byte floor)."""
     return max(8, 1 << max(int(n) - 1, 1).bit_length())
+
+
+def _gram_path(s: Strategy) -> str:
+    """Which GramEngine path a strategy's payload contracts through
+    (the key of ``gram.gram_working_set_bytes`` / the autotune layer)."""
+    if s.method == "original":
+        return "f32"
+    if s.method == "sign":
+        return "packed" if s.wire == "packed" else "int8"
+    return "code"
 
 
 # --------------------------------------------------------------------------
@@ -153,6 +164,15 @@ class TrialPlan:
     #: ``None`` = pristine wire; a ZERO-fault FaultPlan runs the fault
     #: path and is bit-identical to ``None`` (pinned by the CI smoke).
     faults: FaultPlan | None = None
+    #: per-device memory budget (bytes) the sweep's transient working sets
+    #: must fit: pow2 bucket padding backs off to the minimal 8-multiple,
+    #: the Gram engine picks d_tile/n_chunk streaming
+    #: (:meth:`budget_engine`), and the MWST/glasso solve stage streams the
+    #: (S*reps, d, d) stack in :meth:`metrics_chunk`-sized slabs where the
+    #: monolithic forms would exceed it. ``None`` = the backend's reported
+    #: HBM limit (``gram.default_memory_budget``). Every budget adaptation
+    #: is a deterministic function of the plan, so mesh parity holds.
+    memory_budget_bytes: int | None = None
 
     def __post_init__(self):
         if self.tree not in TREE_KINDS + SPARSE_KINDS:
@@ -192,17 +212,114 @@ class TrialPlan:
                 raise TypeError(
                     f"faults must be a FaultPlan, got {type(self.faults)!r}")
             self.faults.n_machines(self.d)  # machines must divide d
+        if (self.memory_budget_bytes is not None
+                and self.memory_budget_bytes <= 0):
+            raise ValueError(
+                f"memory_budget_bytes must be positive, "
+                f"got {self.memory_budget_bytes}")
+
+    @property
+    def effective_memory_budget(self) -> int:
+        """The budget plan decisions run against (bytes): the explicit
+        ``memory_budget_bytes`` or the backend default."""
+        if self.memory_budget_bytes is not None:
+            return self.memory_budget_bytes
+        return default_memory_budget()
+
+    def stage_bytes(self, n_pad: int, *, backend: str = "xla",
+                    config: GramConfig | None = None) -> int:
+        """Analytic peak transient bytes of one weights/corr stage launch
+        at bucket ``n_pad``: the shared (reps, n_pad, d) f32 sample block,
+        the worst strategy's Gram working set (operands + backend
+        transients, ``gram.gram_working_set_bytes``), and the stacked
+        (S, reps, d, d) f32 stage output."""
+        samples = 4 * self.reps * n_pad * self.d
+        gram_ws = max(
+            gram_working_set_bytes(
+                _gram_path(s), n_pad, self.d, backend=backend,
+                config=config, batch=self.reps)
+            for s in self.strategies)
+        out = 4 * len(self.strategies) * self.reps * self.d * self.d
+        return samples + gram_ws + out
 
     def bucket_for(self, n: int) -> int:
-        """The padded sample count the weights stage compiles for."""
+        """The padded sample count the weights stage compiles for.
+
+        Memory-aware: under the ``"pow2"`` scheme, when the stage's
+        analytic working set at the pow2 bucket exceeds the plan budget,
+        padding backs off to the minimal 8-multiple (the packed-wire byte
+        floor) — blind pow2 padding can nearly double the dominant
+        (reps, n, d) transients exactly where memory is tightest. Explicit
+        bucket tuples and ``None`` are always respected as given.
+        """
         if self.n_buckets is None:
             return n
         if self.n_buckets == "pow2":
-            return next_pow2(n)
+            b = next_pow2(n)
+            floor_b = max(8, -(-n // 8) * 8)
+            if (b > floor_b
+                    and self.stage_bytes(b) > self.effective_memory_budget):
+                return floor_b
+            return b
         for b in self.n_buckets:
             if b >= n:
                 return b
         raise ValueError(f"no bucket >= {n} in {self.n_buckets}")
+
+    def budget_engine(self, engine: GramEngine) -> GramEngine:
+        """Clamp ``engine``'s streaming knobs to the plan's memory budget.
+
+        If the monolithic Gram working set at the largest bucket exceeds
+        half the budget (the other half is the stage's sample block and
+        output), returns a copy with the largest (d_tile, n_chunk) whose
+        tiled working set fits — least streaming that honors the budget.
+        Engines with explicit d_tile/n_chunk are returned unchanged. The
+        choice depends only on (plan, engine), so every mesh rank and the
+        single-device reference agree — the 1-vs-N parity gate is
+        budget-safe.
+        """
+        if (engine.d_tile is not None or engine.n_chunk is not None
+                or not self.ns):
+            return engine
+        backend = engine.resolve()
+        budget = self.effective_memory_budget // 2
+        n_max = max(self.bucket_for(n) for n in self.ns)
+        paths = {_gram_path(s) for s in self.strategies}
+
+        def worst(cfg: GramConfig | None) -> int:
+            return max(
+                gram_working_set_bytes(p, n_max, self.d, backend=backend,
+                                       config=cfg, batch=self.reps)
+                for p in paths)
+
+        if worst(engine._base_config()) <= budget:
+            return engine
+        for t in (1024, 512, 256, 128):
+            if t >= self.d:
+                continue
+            for nc in (None, 8192, 2048):
+                cfg = GramConfig(d_tile=t, n_chunk=nc)
+                if worst(cfg) <= budget:
+                    return dataclasses.replace(
+                        engine, d_tile=t, n_chunk=nc)
+        # nothing fits the declared budget: stream as hard as we can
+        return dataclasses.replace(
+            engine, d_tile=min(128, self.d), n_chunk=1024)
+
+    def metrics_chunk(self) -> int | None:
+        """Batch slab size for the MWST/glasso solve stage (``None`` =
+        one full vmap over all S*reps trials). The per-trial solver
+        transients (~10 (d, d) f32 planes: Boruvka rank/component scratch,
+        glasso eigh workspace + carried iterates) must fit half the plan
+        budget; where the full stack would not, the stage streams through
+        ``lax.map`` in this many trials per slab (bit-identical — trials
+        are independent)."""
+        trials = len(self.strategies) * self.reps
+        per_trial = 40 * self.d * self.d  # ~10 f32 (d, d) planes
+        budget = self.effective_memory_budget // 2
+        if trials * per_trial <= budget:
+            return None
+        return max(1, min(trials, budget // per_trial))
 
     @property
     def buckets(self) -> dict[int, int]:
@@ -273,6 +390,11 @@ class TrialResult:
     #: telemetry channels ride the single host sync), never estimated from
     #: the plan's probabilities. ``None`` when ``plan.faults`` is None.
     faults: list[dict] | None = None
+    #: memory-budget telemetry: ``{"memory_budget_bytes", "d_tile",
+    #: "n_chunk", "metrics_chunk"}`` — the streaming knobs the sweep
+    #: actually ran with (None values = monolithic). Empty for paths that
+    #: predate the budget plumbing.
+    tiling: dict = dataclasses.field(default_factory=dict)
 
     @property
     def trials_per_s(self) -> float:
@@ -465,7 +587,8 @@ def _stacked_weights(keys, parents, rhos, n_valid, strategies, n_pad, engine,
     return w, tele.sum(axis=0)
 
 
-def _per_trial_metrics(w: jax.Array, adj_true: jax.Array) -> jax.Array:
+def _per_trial_metrics(w: jax.Array, adj_true: jax.Array,
+                       chunk: int | None = None) -> jax.Array:
     """(S, r, d, d) weights + (r, d, d) truth -> (S, r, 3) per-trial
     [error, hamming, shared-edge count] via one flattened vmapped Boruvka
     solve.
@@ -476,9 +599,13 @@ def _per_trial_metrics(w: jax.Array, adj_true: jax.Array) -> jax.Array:
     ``run_trials``), so their sums are exact in f32 under any reduction
     order: a psum over a sharded rep axis reproduces the single-device
     sums bit for bit — the distributed trial plane's parity gate.
+
+    ``chunk`` (``TrialPlan.metrics_chunk``) streams the flattened trial
+    stack through the solver in slabs instead of one full vmap — same
+    bits per trial (``chow_liu.boruvka_mst_batch``), bounded working set.
     """
     S, r, d, _ = w.shape
-    est = jax.vmap(boruvka_mst)(w.reshape(S * r, d, d)).reshape(S, r, d, d)
+    est = boruvka_mst_batch(w.reshape(S * r, d, d), chunk).reshape(S, r, d, d)
     err = trees.structure_error(est, adj_true[None]).astype(jnp.float32)
     ham = trees.structure_hamming(est, adj_true[None]).astype(jnp.float32)
     shared = jnp.sum(est & adj_true[None], axis=(-2, -1)).astype(
@@ -487,17 +614,19 @@ def _per_trial_metrics(w: jax.Array, adj_true: jax.Array) -> jax.Array:
 
 
 @functools.lru_cache(maxsize=None)
-def _mst_metrics_fn():
+def _mst_metrics_fn(chunk: int | None = None):
     """jit: (S, reps, d, d) weights + true adjacencies -> (S, 3) metric
     SUMS over the rep axis.
 
     One compile covers every point of every sweep in the process — the
     MWST + metric stage only sees (S, reps, d, d) shapes, which bucketing
     leaves untouched. Sums (not means) so the sharded path can psum the
-    same quantity; the engine divides by reps once at the end.
+    same quantity; the engine divides by reps once at the end. ``chunk``
+    is the plan's memory-budgeted solve slab (``None`` = full vmap).
     """
     return jax.jit(
-        lambda w, adj_true: _per_trial_metrics(w, adj_true).sum(axis=1))
+        lambda w, adj_true: _per_trial_metrics(w, adj_true, chunk)
+        .sum(axis=1))
 
 
 #: (S, reps, d) metric-stage shapes already compiled this process — guards
@@ -582,31 +711,34 @@ def _support_metric_channels(est: jax.Array, adj_true: jax.Array) -> jax.Array:
 
 def _sparse_per_trial_metrics(
     corr: jax.Array, adj_true: jax.Array, lams: tuple, tol: float,
-    n_steps: int,
+    n_steps: int, chunk: int | None = None,
 ) -> jax.Array:
     """(S, r, d, d) correlation statistics + (r, d, d) truths -> (S, r, 5)
     per-trial support channels via ONE fused batched-glasso launch: the
     whole (S*r, d, d) stack solves in a single vmapped ISTA loop
     (per-strategy penalties ride as a batched lam vector), the support is
-    thresholded on normalized partial correlations on device."""
+    thresholded on normalized partial correlations on device. ``chunk``
+    streams the solve in slabs (``glasso_batch(chunk=...)``) where the
+    plan's memory budget demands it — bit-identical per trial."""
     S, r, d, _ = corr.shape
     lam = jnp.repeat(jnp.asarray(lams, jnp.float32), r)
     theta = glasso.glasso_batch(
-        corr.reshape(S * r, d, d), lam, n_steps=n_steps)
+        corr.reshape(S * r, d, d), lam, n_steps=n_steps, chunk=chunk)
     est = glasso.support_from_theta(theta, tol).reshape(S, r, d, d)
     return _support_metric_channels(est, adj_true[None])
 
 
 @functools.lru_cache(maxsize=None)
-def _sparse_metrics_fn(lams: tuple, tol: float, n_steps: int):
+def _sparse_metrics_fn(lams: tuple, tol: float, n_steps: int,
+                       chunk: int | None = None):
     """jit: (S, reps, d, d) correlation statistics + true supports ->
     (S, 5) metric SUMS over the rep axis — the sparse twin of
     :func:`_mst_metrics_fn` (glasso solve + support threshold instead of
-    Boruvka; one compile per (penalty vector, tol, steps) serves every
-    point of every sweep at that shape)."""
+    Boruvka; one compile per (penalty vector, tol, steps, chunk) serves
+    every point of every sweep at that shape)."""
     return jax.jit(
         lambda corr, adj_true: _sparse_per_trial_metrics(
-            corr, adj_true, lams, tol, n_steps).sum(axis=1))
+            corr, adj_true, lams, tol, n_steps, chunk).sum(axis=1))
 
 
 @functools.lru_cache(maxsize=None)
@@ -758,12 +890,16 @@ def _sharded_point_fn(
     mesh: Mesh,
     data_axis: str,
     faults: FaultPlan | None = None,
+    chunk: int | None = None,
 ):
     """jit(shard_map): one sweep point with the rep axis sharded over
     ``data_axis``; metric sums psum-reduced, so the (S, 3) output is
     replicated and the host path is identical to the single-device one
     (with a fault plan the psum-reduced telemetry sums ride along — both
-    integer-valued, so shard count cannot perturb either).
+    integer-valued, so shard count cannot perturb either). ``chunk`` is
+    the plan's memory-budgeted solve slab — per-trial-identical, so it
+    cannot perturb the parity either; pass it (like ``faults``)
+    POSITIONALLY for a consistent lru key.
 
     Trial keys travel as raw uint32 key data (``jax.random.key_data``) —
     typed key arrays predate stable shard_map support on some jax
@@ -775,7 +911,7 @@ def _sharded_point_fn(
             keys = jax.random.wrap_key_data(key_data)
             w = _stacked_weights(
                 keys, parents, rhos, n_valid, strategies, n_pad, engine)
-            sums = _per_trial_metrics(w, adj_true).sum(axis=1)  # (S, 3)
+            sums = _per_trial_metrics(w, adj_true, chunk).sum(axis=1)
             return jax.lax.psum(sums, data_axis)
 
         in_specs = (P(data_axis), P(data_axis), P(data_axis), P(data_axis),
@@ -788,7 +924,7 @@ def _sharded_point_fn(
             w, tele = _stacked_weights(
                 keys, parents, rhos, n_valid, strategies, n_pad, engine,
                 faults=faults, fault_keys=fkeys)
-            sums = _per_trial_metrics(w, adj_true).sum(axis=1)  # (S, 3)
+            sums = _per_trial_metrics(w, adj_true, chunk).sum(axis=1)
             return (jax.lax.psum(sums, data_axis),
                     jax.lax.psum(tele, data_axis))
 
@@ -817,6 +953,7 @@ def _wire_point_fn(
     data_axis: str,
     model_axis: str,
     faults: FaultPlan | None = None,
+    chunk: int | None = None,
 ):
     """jit(shard_map): one sweep point on the DISTRIBUTED trial plane —
     trials sharded over ``data_axis``, features over ``model_axis``.
@@ -879,7 +1016,7 @@ def _wire_point_fn(
                     full, n, n_valid=n_valid, n_rows=n_rows,
                     n_rows_own=n_rows_loc, own_payload=payload))
             w = jnp.stack(ws)
-            sums = _per_trial_metrics(w, adj_true).sum(axis=1)  # (S, 3)
+            sums = _per_trial_metrics(w, adj_true, chunk).sum(axis=1)
             # exact: integer-valued f32 sums; replicated over the model
             # axis by construction (every rank holds the full gathered
             # payload or the gathered row blocks)
@@ -1019,6 +1156,7 @@ def _package_result(
     comm: dict[str, list[CommReport]],
     mesh_devices: int,
     faults: list[dict] | None = None,
+    tiling: dict | None = None,
 ) -> TrialResult:
     """Mean-metric tensor -> TrialResult; shared by every engine path so
     the f32 arithmetic of the derived metrics is identical everywhere.
@@ -1055,7 +1193,7 @@ def _package_result(
         edge_f1=edge_f1, precision=precision, recall=recall,
         seconds=seconds, host_syncs=host_syncs, comm=comm,
         buckets=plan.buckets, compile_cache_size=compile_cache_size(),
-        mesh_devices=mesh_devices, faults=faults)
+        mesh_devices=mesh_devices, faults=faults, tiling=tiling or {})
 
 
 def _host_kruskal_trials(
@@ -1116,7 +1254,12 @@ def _host_kruskal_trials(
                          fault_sums=host_f)
     return _package_result(plan, m, seconds=seconds, host_syncs=syncs,
                            comm=comm, mesh_devices=1,
-                           faults=_fault_stats(plan, host_f))
+                           faults=_fault_stats(plan, host_f),
+                           tiling={"memory_budget_bytes":
+                                   plan.effective_memory_budget,
+                                   "d_tile": engine.d_tile,
+                                   "n_chunk": engine.n_chunk,
+                                   "metrics_chunk": None})
 
 
 def run_trials(
@@ -1195,6 +1338,17 @@ def run_trials(
         raise ValueError(f"duplicate strategy labels: {labels}")
     if mst not in ("device", "host_kruskal"):
         raise ValueError(f"unknown mst mode {mst!r}")
+    # memory budget: clamp the engine's streaming knobs to the plan
+    # (deterministic per (plan, engine) — mesh-parity-safe), pick the
+    # solve-stage slab, and pre-tune autotuning engines EAGERLY (sweeps
+    # cannot run under the jit traces below, only cached winners apply)
+    engine = plan.budget_engine(engine)
+    chunk = plan.metrics_chunk()
+    if engine.autotune:
+        for b in sorted({plan.bucket_for(n) for n in plan.ns}):
+            for path in sorted({_gram_path(s) for s in plan.strategies}):
+                engine.tune(path, b, plan.d,
+                            budget=plan.effective_memory_budget // 2)
     sparse = plan.structure == "sparse"
     if mst == "host_kruskal":
         if mesh is not None:
@@ -1244,7 +1398,7 @@ def run_trials(
         # compiled executable as the mesh-less engine, which is what makes
         # mesh metrics bit-identical)
         metrics_fn = _sparse_metrics_fn(
-            lams, plan.glasso_tol, plan.glasso_steps)
+            lams, plan.glasso_tol, plan.glasso_steps, chunk)
     warm_thread = None
     if mesh is not None:
         key_data = jax.random.key_data(keys)
@@ -1253,14 +1407,14 @@ def run_trials(
     else:
         if sparse:
             shape_key = (lams, plan.glasso_tol, plan.glasso_steps,
-                         plan.reps, plan.d)
+                         plan.reps, plan.d, chunk)
             dummy = (jnp.zeros((len(lams), plan.reps, plan.d, plan.d),
                                jnp.float32),
                      jnp.zeros((plan.reps, plan.d, plan.d), jnp.bool_))
         else:
-            metrics_fn = _mst_metrics_fn()
-            shape_key = (len(plan.strategies), plan.reps, plan.d)
-            S, r, d = shape_key
+            metrics_fn = _mst_metrics_fn(chunk)
+            shape_key = (len(plan.strategies), plan.reps, plan.d, chunk)
+            S, r, d, _ = shape_key
             dummy = (jnp.zeros((S, r, d, d), jnp.float32),
                      jnp.zeros((r, d, d), jnp.bool_))
         # overlap the two cold compiles: warm the (sweep-wide, shape-fixed)
@@ -1348,11 +1502,11 @@ def run_trials(
             point_fn = (
                 _wire_point_fn(
                     plan.strategies, n_pad, engine, mesh, data_axis,
-                    model_axis, faults)
+                    model_axis, faults, chunk)
                 if wire_plane else
                 _sharded_point_fn(
                     plan.strategies, n_pad, engine, mesh, data_axis,
-                    faults))
+                    faults, chunk))
             out = point_fn(key_data, *lead_data, *gt_args, adj_true,
                            n_valid)
             if faults is None:
@@ -1382,7 +1536,10 @@ def run_trials(
     return _package_result(
         plan, m, seconds=seconds, host_syncs=syncs, comm=comm,
         mesh_devices=(mesh.size if mesh is not None else 1),
-        faults=_fault_stats(plan, fsums))
+        faults=_fault_stats(plan, fsums),
+        tiling={"memory_budget_bytes": plan.effective_memory_budget,
+                "d_tile": engine.d_tile, "n_chunk": engine.n_chunk,
+                "metrics_chunk": chunk})
 
 
 # --------------------------------------------------------------------------

@@ -170,7 +170,7 @@ def glasso(
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("n_steps", "step_scale", "eps"))
+                   static_argnames=("n_steps", "step_scale", "eps", "chunk"))
 def glasso_batch(
     S: jax.Array,
     lam,
@@ -178,6 +178,7 @@ def glasso_batch(
     n_steps: int = DEFAULT_STEPS,
     step_scale: float = 0.9,
     eps: float = 1e-4,
+    chunk: int | None = None,
 ) -> jax.Array:
     """Batched, fully device-resident glasso: (b, d, d) Grams -> (b, d, d)
     precision estimates in ONE fused launch.
@@ -187,12 +188,33 @@ def glasso_batch(
     batch). This is the solve stage of ``experiments.run_trials`` for
     sparse plans: the whole (S*reps, d, d) sweep point runs as one vmapped
     fori_loop, metric sums stay on device, ``host_syncs == 1``.
+
+    ``chunk`` streams the batch through ``lax.map`` in ``chunk``-sized
+    vmapped slabs instead of one full vmap: the solver's per-trial
+    transients (eigh workspace + carried iterates, ~8 (d, d) f32 planes)
+    then scale with ``chunk``, not b — the memory-budgeted solve stage at
+    large d. Solves are independent and the iterate path is inv-free
+    (bit-stable across batch sizes, see ``_glasso_solve``), so chunking
+    does not change results; the batch zero-pads to a chunk multiple (a
+    zero S solves fine: init is inv(0.5 I)) and the pad is sliced off.
     """
     S = jnp.asarray(S, jnp.float32)
     lam = jnp.broadcast_to(
         jnp.asarray(lam, jnp.float32), S.shape[:-2])
-    return jax.vmap(
-        lambda s, l: _glasso_solve(s, l, n_steps, step_scale, eps))(S, lam)
+    solve = jax.vmap(
+        lambda s, l: _glasso_solve(s, l, n_steps, step_scale, eps))
+    b = S.shape[0]
+    if chunk is None or chunk >= b:
+        return solve(S, lam)
+    chunk = max(1, chunk)
+    pad = (-b) % chunk
+    Sp = jnp.pad(S, ((0, pad), (0, 0), (0, 0)))
+    lp = jnp.pad(lam, (0, pad), constant_values=1.0)
+    d = S.shape[-1]
+    theta = jax.lax.map(
+        lambda args: solve(*args),
+        (Sp.reshape(-1, chunk, d, d), lp.reshape(-1, chunk)))
+    return theta.reshape(-1, d, d)[:b]
 
 
 def glasso_objective(theta: jax.Array, S: jax.Array, lam: float) -> jax.Array:

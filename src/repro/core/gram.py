@@ -43,11 +43,47 @@ of ``pallas_call``. Two consumers ride it: the trial plane
 single kernel grid, and the streaming accumulator's shard-ingestion path
 (``StreamingGram.update_codes_batch`` / ``update_packed_batch``) folds a
 stack of per-machine wire blocks in one launch.
+
+Large-d engine
+--------------
+
+At d in the thousands the monolithic per-backend intermediates — the xla
+f32 upcast/unpack planes, the numpy XOR cube, the padded kernel operands —
+stop fitting a fixed memory budget even though the output (d, d) does. Two
+orthogonal engine knobs bound them:
+
+* ``d_tile``: stream the OUTPUT product space in (d_tile, d_tile) blocks;
+  each block re-enters the monolithic path on operand slices, so transient
+  working set scales with d_tile, not d. d-tiling never changes what is
+  computed per entry: integer-exact paths (int8 signs, packed bits) are
+  bit-identical to the monolithic result; float paths agree to matmul
+  reduction-order noise.
+* ``n_chunk``: additionally accumulate integer-exact paths over n- (or
+  packed-byte-) chunks. Partial Grams are exact integers (< 2^24 in f32),
+  so chunked accumulation is also bit-identical. Float values are never
+  n-chunked (that would change the reduction order of the baseline).
+
+``autotune=True`` picks (block_n, block_d, block_b, d_tile, n_chunk) per
+(backend, path, shape-bucket, platform) by timing the candidate set in
+:func:`candidate_configs` on first use. Winners persist to a JSON cache
+(``REPRO_GRAM_AUTOTUNE_CACHE``, default ``~/.cache/repro/gram_autotune.json``,
+keyed by platform so one file serves heterogeneous fleets); warm processes
+skip the sweep. ``REPRO_GRAM_AUTOTUNE=0`` disables sweeping entirely.
+Sweeps only ever run eagerly: inside a jit trace the engine falls back to
+the cached winner or the engine's own config — pre-tune with
+:meth:`GramEngine.tune` (``run_trials`` does) before tracing hot loops.
+
+:func:`gram_working_set_bytes` is the shared analytic model of those
+transients; ``TrialPlan`` uses it (via :func:`default_memory_budget`) to
+pick buckets and tiles that fit the device.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
+import json
 import os
+import time
 from typing import Literal
 
 import numpy as np
@@ -57,6 +93,69 @@ import jax.numpy as jnp
 from repro.kernels.sign_corr import code_corr, sign_corr, sign_corr_packed
 
 Backend = Literal["auto", "pallas", "xla", "numpy"]
+
+#: Env var: set to "0" to disable autotune sweeps (cached winners still load).
+AUTOTUNE_ENV = "REPRO_GRAM_AUTOTUNE"
+#: Env var: path of the persistent autotune JSON cache.
+AUTOTUNE_CACHE_ENV = "REPRO_GRAM_AUTOTUNE_CACHE"
+#: Env var: override the backend-derived memory budget (bytes).
+MEMORY_BUDGET_ENV = "REPRO_MEMORY_BUDGET_BYTES"
+
+
+@dataclasses.dataclass(frozen=True)
+class GramConfig:
+    """One resolved tiling configuration for a Gram call.
+
+    ``block_*`` are the pallas kernel tile edges; ``d_tile``/``n_chunk``
+    are the engine-level streaming knobs (see module docstring). ``None``
+    means monolithic along that axis. The all-defaults instance is the
+    engine's historical behaviour.
+    """
+
+    block_n: int = 512
+    block_d: int = 256
+    block_b: int = 128
+    d_tile: int | None = None
+    n_chunk: int | None = None
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _spans(size: int, tile: int) -> list[tuple[int, int]]:
+    return [(i, min(i + tile, size)) for i in range(0, size, tile)]
+
+
+def _assemble_tiles(block_fn, dl: int, dr: int, tile: int, xp):
+    """Assemble a (.., dl, dr) Gram from (d_tile, d_tile) output blocks."""
+    rows = []
+    for i0, i1 in _spans(dl, tile):
+        row = [block_fn(i0, i1, j0, j1) for j0, j1 in _spans(dr, tile)]
+        rows.append(row[0] if len(row) == 1 else xp.concatenate(row, axis=-1))
+    return rows[0] if len(rows) == 1 else xp.concatenate(rows, axis=-2)
+
+
+def _concrete(*arrays) -> bool:
+    return not any(
+        isinstance(a, jax.core.Tracer) for a in arrays if a is not None)
+
+
+def _to_f32(a, xp):
+    if xp is np:
+        return np.asarray(a, dtype=np.float32)
+    return jnp.asarray(a).astype(jnp.float32)
+
+
+def _contract_values(uf, vf, batched: bool, xp):
+    if batched:
+        return xp.einsum("bnd,bne->bde", uf, vf)
+    return uf.T @ vf
+
+
+def _contract_planes(uf, vf, batched: bool):
+    if batched:
+        return jnp.einsum("bdn,ben->bde", uf, vf)
+    return uf @ vf.T
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,6 +172,19 @@ class GramEngine:
         ``block_d`` is clamped to 128 for the code/packed kernels (their
         per-tile VMEM working sets — one-hot decode and XOR intermediate —
         scale with block_d^2).
+      d_tile: stream the (d, d) output in (d_tile, d_tile) blocks when d
+        exceeds it (``None`` = monolithic). Bit-identical for integer-exact
+        paths; bounds every backend's transient working set.
+      n_chunk: accumulate integer-exact paths over n-chunks of this many
+        samples (packed: ``n_chunk/8``-byte chunks). ``None`` = one pass.
+        Never applied to float values (reduction-order stability of the
+        unquantized baseline).
+      autotune: look up / sweep a tuned :class:`GramConfig` per (path,
+        shape bucket) on first eager use, overriding the block/tile fields
+        above. See the module docstring for cache and escape-hatch env vars.
+
+    The dataclass stays frozen/hashable: engine instances key the jitted
+    stage caches in ``core.experiments``.
     """
 
     backend: Backend = "auto"
@@ -80,6 +192,9 @@ class GramEngine:
     block_n: int = 512
     block_d: int = 256
     block_b: int = 128
+    d_tile: int | None = None
+    n_chunk: int | None = None
+    autotune: bool = False
 
     def resolve(self) -> str:
         b = self.backend
@@ -95,6 +210,30 @@ class GramEngine:
             return jax.default_backend() == "cpu"
         return self.interpret
 
+    def _base_config(self) -> GramConfig:
+        return GramConfig(self.block_n, self.block_d, self.block_b,
+                          self.d_tile, self.n_chunk)
+
+    def _xp(self, backend: str):
+        return np if backend == "numpy" else jnp
+
+    def _config(self, path: str, n: int, d: int, *, concrete: bool
+                ) -> GramConfig:
+        base = self._base_config()
+        if not self.autotune:
+            return base
+        # inside a jit trace, never sweep (timing under tracing is
+        # meaningless): cached winners still apply, else the engine config
+        return tuned_config(path, n, d, self, default=base, sweep=concrete)
+
+    def tune(self, path: str, n: int, d: int, *,
+             budget: int | None = None) -> GramConfig:
+        """Eagerly resolve (sweeping on first use) the tuned config for one
+        (path, shape) point; ``budget`` restricts candidates to configs whose
+        :func:`gram_working_set_bytes` fits. path: f32|int8|code|packed."""
+        return tuned_config(path, n, d, self, default=self._base_config(),
+                            budget=budget)
+
     # -- values: f32 / bf16 / int8 ±1 or centroid values --------------------
 
     def gram(self, u: jax.Array, v: jax.Array | None = None) -> jax.Array:
@@ -105,21 +244,7 @@ class GramEngine:
         baseline — always contract in f32 (xla path), so the baseline is
         never silently quantized to bf16 by backend selection.
         """
-        backend = self.resolve()
-        if backend == "numpy":
-            uf = np.asarray(u, dtype=np.float32)
-            vf = uf if v is None else np.asarray(v, dtype=np.float32)
-            return uf.T @ vf
-        exact_in_bf16 = all(
-            jnp.issubdtype(a.dtype, jnp.integer) or a.dtype == jnp.bfloat16
-            for a in ((u,) if v is None else (u, v)))
-        if backend == "pallas" and exact_in_bf16:
-            return sign_corr(
-                u, v, block_n=self.block_n, block_d=self.block_d,
-                interpret=self._interpret())
-        uf = jnp.asarray(u).astype(jnp.float32)
-        vf = uf if v is None else jnp.asarray(v).astype(jnp.float32)
-        return uf.T @ vf
+        return self._value_gram(u, v, batched=False)
 
     def gram_batch(self, u: jax.Array, v: jax.Array | None = None) -> jax.Array:
         """Batched :meth:`gram`: (b, n, d_l) [x (b, n, d_r)] -> (b, d_l, d_r).
@@ -127,21 +252,51 @@ class GramEngine:
         Same dtype dispatch as ``gram``; the pallas path runs the batch as a
         native leading grid dimension of one kernel launch.
         """
+        return self._value_gram(u, v, batched=True)
+
+    def _value_gram(self, u, v, *, batched: bool):
         backend = self.resolve()
-        if backend == "numpy":
-            uf = np.asarray(u, dtype=np.float32)
-            vf = uf if v is None else np.asarray(v, dtype=np.float32)
-            return np.einsum("bnd,bne->bde", uf, vf)
-        exact_in_bf16 = all(
+        ops = (u,) if v is None else (u, v)
+        exact_bf16 = all(
             jnp.issubdtype(a.dtype, jnp.integer) or a.dtype == jnp.bfloat16
-            for a in ((u,) if v is None else (u, v)))
-        if backend == "pallas" and exact_in_bf16:
+            for a in ops)
+        exact_int = all(jnp.issubdtype(a.dtype, jnp.integer) for a in ops)
+        n, dl = u.shape[-2], u.shape[-1]
+        dr = ops[-1].shape[-1]
+        cfg = self._config("int8" if exact_bf16 else "f32", n, max(dl, dr),
+                           concrete=_concrete(*ops))
+        block = functools.partial(
+            self._value_block, cfg=cfg, backend=backend, batched=batched,
+            exact_bf16=exact_bf16, exact_int=exact_int)
+        t = cfg.d_tile
+        if t is not None and t < max(dl, dr):
+            vv = ops[-1]
+            return _assemble_tiles(
+                lambda i0, i1, j0, j1: block(u[..., i0:i1], vv[..., j0:j1]),
+                dl, dr, t, self._xp(backend))
+        return block(u, v)
+
+    def _value_block(self, u, v, *, cfg: GramConfig, backend: str,
+                     batched: bool, exact_bf16: bool, exact_int: bool):
+        if backend == "pallas" and exact_bf16:
             return sign_corr(
-                u, v, block_n=self.block_n, block_d=self.block_d,
+                u, v, block_n=cfg.block_n, block_d=cfg.block_d,
                 interpret=self._interpret())
-        uf = jnp.asarray(u).astype(jnp.float32)
-        vf = uf if v is None else jnp.asarray(v).astype(jnp.float32)
-        return jnp.einsum("bnd,bne->bde", uf, vf)
+        xp = self._xp(backend)
+        n = u.shape[-2]
+        nc = cfg.n_chunk
+        if exact_int and nc is not None and nc < n:
+            # partial Grams are exact integers in f32 -> bit-identical
+            acc = None
+            for k0, k1 in _spans(n, nc):
+                uf = _to_f32(u[..., k0:k1, :], xp)
+                vf = uf if v is None else _to_f32(v[..., k0:k1, :], xp)
+                g = _contract_values(uf, vf, batched, xp)
+                acc = g if acc is None else acc + g
+            return acc
+        uf = _to_f32(u, xp)
+        vf = uf if v is None else _to_f32(v, xp)
+        return _contract_values(uf, vf, batched, xp)
 
     # -- int8 bin codes + centroid codebook ---------------------------------
 
@@ -157,20 +312,7 @@ class GramEngine:
         Out-of-range codes (the -1 valid-length sentinel of the bucketed
         trial plane) decode to 0 on every backend and drop out of the Gram.
         """
-        backend = self.resolve()
-        if backend == "pallas":
-            return code_corr(
-                codes, centroids, codes_rhs,
-                block_n=self.block_n, block_d=min(self.block_d, 128),
-                interpret=self._interpret())
-        if backend == "numpy":
-            uf = self._decode_np(codes, centroids)
-            vf = uf if codes_rhs is None else self._decode_np(
-                codes_rhs, centroids)
-            return uf.T @ vf
-        uf = self._decode_jnp(codes, centroids)
-        vf = uf if codes_rhs is None else self._decode_jnp(codes_rhs, centroids)
-        return uf.T @ vf
+        return self._code_gram(codes, centroids, codes_rhs, batched=False)
 
     def code_gram_batch(
         self,
@@ -184,20 +326,39 @@ class GramEngine:
         batch as a native leading grid dimension of one launch. -1 codes
         decode to 0 (valid-length masking).
         """
+        return self._code_gram(codes, centroids, codes_rhs, batched=True)
+
+    def _code_gram(self, codes, centroids, rhs, *, batched: bool):
         backend = self.resolve()
+        n, dl = codes.shape[-2], codes.shape[-1]
+        dr = dl if rhs is None else rhs.shape[-1]
+        cfg = self._config("code", n, max(dl, dr),
+                           concrete=_concrete(codes, rhs))
+        t = cfg.d_tile
+        if t is not None and t < max(dl, dr):
+            rr = codes if rhs is None else rhs
+            return _assemble_tiles(
+                lambda i0, i1, j0, j1: self._code_block(
+                    codes[..., i0:i1], centroids, rr[..., j0:j1],
+                    cfg, backend, batched),
+                dl, dr, t, self._xp(backend))
+        return self._code_block(codes, centroids, rhs, cfg, backend, batched)
+
+    def _code_block(self, codes, centroids, rhs, cfg: GramConfig,
+                    backend: str, batched: bool):
         if backend == "pallas":
             return code_corr(
-                codes, centroids, codes_rhs,
-                block_n=self.block_n, block_d=min(self.block_d, 128),
+                codes, centroids, rhs,
+                block_n=cfg.block_n, block_d=min(cfg.block_d, 128),
                 interpret=self._interpret())
+        # decode is float-valued: d-tiled only, never n-chunked
         if backend == "numpy":
             uf = self._decode_np(codes, centroids)
-            vf = uf if codes_rhs is None else self._decode_np(
-                codes_rhs, centroids)
-            return np.einsum("bnd,bne->bde", uf, vf)
+            vf = uf if rhs is None else self._decode_np(rhs, centroids)
+            return _contract_values(uf, vf, batched, np)
         uf = self._decode_jnp(codes, centroids)
-        vf = uf if codes_rhs is None else self._decode_jnp(codes_rhs, centroids)
-        return jnp.einsum("bnd,bne->bde", uf, vf)
+        vf = uf if rhs is None else self._decode_jnp(rhs, centroids)
+        return _contract_values(uf, vf, batched, jnp)
 
     @staticmethod
     def _decode_jnp(codes: jax.Array, centroids: jax.Array) -> jax.Array:
@@ -232,27 +393,7 @@ class GramEngine:
         must be zero. Exact (integer) on every backend:
         G = n - 2*popcount(xor) — pad bits xor to zero and drop out.
         """
-        if packed_rhs is not None:
-            assert packed.shape[1] == packed_rhs.shape[1], (
-                f"packed operands disagree on byte width: "
-                f"{packed.shape} vs {packed_rhs.shape}")
-        backend = self.resolve()
-        if backend == "pallas":
-            return sign_corr_packed(
-                packed, n, packed_rhs,
-                block_d=min(self.block_d, 128), block_b=self.block_b,
-                interpret=self._interpret())
-        if backend == "numpy":
-            a = np.asarray(packed)
-            b = a if packed_rhs is None else np.asarray(packed_rhs)
-            pop = np.bitwise_count(a[:, None, :] ^ b[None, :, :]).sum(
-                axis=-1, dtype=np.int64)
-            return (n - 2 * pop).astype(np.float32)
-        # xla: unpack to ±1 in registers (XLA fuses the unpack into the
-        # matmul's operand read); pad bits masked to 0 so they drop out.
-        uf = self._unpack_pm1(packed, n)
-        vf = uf if packed_rhs is None else self._unpack_pm1(packed_rhs, n)
-        return uf @ vf.T
+        return self._packed_gram(packed, n, packed_rhs, batched=False)
 
     def packed_sign_gram_batch(
         self,
@@ -266,33 +407,373 @@ class GramEngine:
         are exactly the unbatched path's; pallas runs the batch as a native
         leading grid dimension of one launch.
         """
-        if packed_rhs is not None:
-            assert packed.shape[-1] == packed_rhs.shape[-1], (
+        return self._packed_gram(packed, n, packed_rhs, batched=True)
+
+    def _packed_gram(self, packed, n: int, rhs, *, batched: bool):
+        if rhs is not None:
+            assert packed.shape[-1] == rhs.shape[-1], (
                 f"packed operands disagree on byte width: "
-                f"{packed.shape} vs {packed_rhs.shape}")
+                f"{packed.shape} vs {rhs.shape}")
         backend = self.resolve()
+        dl = packed.shape[-2]
+        dr = dl if rhs is None else rhs.shape[-2]
+        cfg = self._config("packed", n, max(dl, dr),
+                           concrete=_concrete(packed, rhs))
+        t = cfg.d_tile
+        if t is not None and t < max(dl, dr):
+            rr = packed if rhs is None else rhs
+            return _assemble_tiles(
+                lambda i0, i1, j0, j1: self._packed_block(
+                    packed[..., i0:i1, :], n, rr[..., j0:j1, :],
+                    cfg, backend, batched),
+                dl, dr, t, self._xp(backend))
+        return self._packed_block(packed, n, rhs, cfg, backend, batched)
+
+    def _packed_block(self, packed, n: int, rhs, cfg: GramConfig,
+                      backend: str, batched: bool):
         if backend == "pallas":
             return sign_corr_packed(
-                packed, n, packed_rhs,
-                block_d=min(self.block_d, 128), block_b=self.block_b,
+                packed, n, rhs,
+                block_d=min(cfg.block_d, 128), block_b=cfg.block_b,
                 interpret=self._interpret())
+        nb = packed.shape[-1]
+        chunk_b = nb if cfg.n_chunk is None else max(
+            1, min(-(-cfg.n_chunk // 8), nb))
         if backend == "numpy":
             a = np.asarray(packed)
-            b = a if packed_rhs is None else np.asarray(packed_rhs)
-            pop = np.bitwise_count(a[:, :, None, :] ^ b[:, None, :, :]).sum(
-                axis=-1, dtype=np.int64)
+            b = a if rhs is None else np.asarray(rhs)
+            pop = None  # int64 popcount sums: chunking is bit-identical
+            for b0, b1 in _spans(nb, chunk_b):
+                p = np.bitwise_count(
+                    a[..., :, None, b0:b1] ^ b[..., None, :, b0:b1]).sum(
+                        axis=-1, dtype=np.int64)
+                pop = p if pop is None else pop + p
             return (n - 2 * pop).astype(np.float32)
+        # xla: unpack to ±1 in registers (XLA fuses the unpack into the
+        # matmul's operand read); pad bits masked to 0 so they drop out.
+        # Chunked unpack keeps the f32 ±1 planes bounded; partial products
+        # are exact integers, so the accumulation is bit-identical.
+        if chunk_b < nb:
+            acc = None
+            for b0, b1 in _spans(nb, chunk_b):
+                uf = self._unpack_pm1(packed[..., :, b0:b1], n, bit0=8 * b0)
+                vf = uf if rhs is None else self._unpack_pm1(
+                    rhs[..., :, b0:b1], n, bit0=8 * b0)
+                g = _contract_planes(uf, vf, batched)
+                acc = g if acc is None else acc + g
+            return acc
         uf = self._unpack_pm1(packed, n)
-        vf = uf if packed_rhs is None else self._unpack_pm1(packed_rhs, n)
-        return jnp.einsum("bdn,ben->bde", uf, vf)
+        vf = uf if rhs is None else self._unpack_pm1(rhs, n)
+        return _contract_planes(uf, vf, batched)
 
     @staticmethod
-    def _unpack_pm1(packed: jax.Array, n: int) -> jax.Array:
+    def _unpack_pm1(packed: jax.Array, n: int, bit0: int = 0) -> jax.Array:
         from .quantizers import bitunpack_signs
 
-        u = bitunpack_signs(packed)  # (d, nb*8) ±1 f32
-        mask = jnp.arange(u.shape[-1]) < n  # pad bits -> 0, drop out of G
-        return jnp.where(mask[None, :], u, 0.0)
+        u = bitunpack_signs(packed)  # (..., d, nb*8) ±1 f32
+        # bits at absolute position >= n are padding -> 0, drop out of G
+        mask = (bit0 + jnp.arange(u.shape[-1])) < n
+        return jnp.where(mask, u, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Analytic working-set model + backend memory budget
+# ---------------------------------------------------------------------------
+
+def gram_working_set_bytes(
+    path: str,
+    n: int,
+    d: int,
+    *,
+    backend: str = "xla",
+    config: GramConfig | None = None,
+    batch: int = 1,
+) -> int:
+    """Transient working set (bytes) of one Gram call, operands included,
+    EXCLUDING the (d, d) f32 output every path must materialize anyway.
+
+    Counts the operand payload plus the largest intermediate the backend
+    stages at HBM/RAM level under ``config``: the xla f32 upcast / decode /
+    bit-unpack planes, the numpy XOR-popcount cube. Pallas kernels stage
+    only VMEM tiles, so their model is the (padded) operand payload itself.
+    The model is deliberately coarse — it drives d_tile/n_chunk selection
+    under ``TrialPlan`` memory budgets and the budget tests, not allocator
+    bookkeeping.
+
+    path: ``f32`` | ``int8`` | ``code`` | ``packed``.
+    """
+    if path not in ("f32", "int8", "code", "packed"):
+        raise ValueError(f"unknown gram path {path!r}")
+    cfg = config or GramConfig()
+    t = d if cfg.d_tile is None else min(cfg.d_tile, d)
+    if path == "packed":
+        nb = -(-n // 8)
+        chunk_b = nb if cfg.n_chunk is None else max(
+            1, min(-(-cfg.n_chunk // 8), nb))
+        oper = batch * d * nb
+        if backend == "pallas":
+            work = 0
+        elif backend == "numpy":
+            work = batch * t * t * chunk_b  # uint8 XOR/popcount cube
+        else:  # xla: two unpacked ±1 f32 planes per (tile, byte-chunk)
+            work = 4 * batch * 2 * t * chunk_b * 8
+        return oper + work
+    bytes_per = 4 if path == "f32" else 1
+    nc = n if cfg.n_chunk is None else min(cfg.n_chunk, n)
+    oper = batch * n * d * bytes_per
+    if backend == "pallas" or path == "f32":
+        # f32 contracts its operands directly; pallas casts in VMEM tiles
+        work = 0
+    else:
+        work = 4 * batch * 2 * nc * t  # f32 upcast/decode of both tile slabs
+    return oper + work
+
+
+def default_memory_budget() -> int:
+    """Per-device memory budget in bytes for plan/tile decisions.
+
+    ``REPRO_MEMORY_BUDGET_BYTES`` overrides; else the backend's reported
+    ``bytes_limit`` (HBM on accelerators); else an 8 GiB host heuristic.
+    """
+    env = os.environ.get(MEMORY_BUDGET_ENV)
+    if env:
+        return int(env)
+    try:
+        stats = jax.devices()[0].memory_stats() or {}
+        limit = int(stats.get("bytes_limit") or 0)
+        if limit > 0:
+            return limit
+    except Exception:  # memory_stats is optional per backend
+        pass
+    return 8 << 30
+
+
+# ---------------------------------------------------------------------------
+# Autotune layer: per-(platform, backend, path, shape bucket) tile sweeps
+# ---------------------------------------------------------------------------
+
+_tuned: dict[str, GramConfig] = {}
+_cache_loaded_from: str | None = None
+_sweep_count = 0
+
+
+def autotune_enabled() -> bool:
+    return os.environ.get(AUTOTUNE_ENV, "1") != "0"
+
+
+def autotune_cache_path() -> str:
+    return os.environ.get(AUTOTUNE_CACHE_ENV) or os.path.join(
+        os.path.expanduser("~"), ".cache", "repro", "gram_autotune.json")
+
+
+def autotune_sweep_count() -> int:
+    """Number of timing sweeps run by this process (test/CI hook: a warm
+    cache — in-memory or JSON — must keep this flat across repeat calls)."""
+    return _sweep_count
+
+
+def clear_autotune_cache(*, remove_file: bool = False) -> None:
+    """Drop in-memory tuned configs (and optionally the JSON cache file).
+
+    The sweep counter is NOT reset: tests diff it around calls.
+    """
+    global _cache_loaded_from
+    _tuned.clear()
+    _cache_loaded_from = None
+    if remove_file:
+        try:
+            os.remove(autotune_cache_path())
+        except OSError:
+            pass
+
+
+def _pow2_bucket(x: int) -> int:
+    b = 8
+    while b < x:
+        b <<= 1
+    return b
+
+
+def _tune_key(path: str, n: int, d: int, backend: str) -> str:
+    return (f"{jax.default_backend()}:{backend}:{path}"
+            f":n{_pow2_bucket(n)}:d{_pow2_bucket(d)}")
+
+
+def _load_cache_file() -> None:
+    global _cache_loaded_from
+    path = autotune_cache_path()
+    if _cache_loaded_from == path:
+        return
+    _cache_loaded_from = path
+    try:
+        with open(path) as f:
+            data = json.load(f)
+        for key, fields in data.get("entries", {}).items():
+            _tuned.setdefault(key, GramConfig(**fields))
+    except (OSError, ValueError, TypeError):
+        pass  # absent or corrupt cache: resweep
+
+
+def _store_cache_file() -> None:
+    path = autotune_cache_path()
+    try:
+        entries = {}
+        try:  # merge-on-write: keep other processes' winners
+            with open(path) as f:
+                entries = json.load(f).get("entries", {})
+        except (OSError, ValueError):
+            pass
+        entries.update({k: c.as_dict() for k, c in _tuned.items()})
+        parent = os.path.dirname(path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump({"version": 1, "entries": dict(sorted(entries.items()))},
+                      f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError:
+        pass  # read-only FS: in-memory cache still serves this process
+
+
+def candidate_configs(
+    path: str,
+    n: int,
+    d: int,
+    backend: str = "xla",
+    *,
+    budget: int | None = None,
+) -> list[GramConfig]:
+    """Autotune candidate set for one (path, shape, backend) point.
+
+    The first entry is always the engine-default config (the sweep can only
+    improve on the status quo). Pallas candidates vary kernel tile edges;
+    xla/numpy candidates vary the engine-level d_tile / n_chunk streaming.
+    ``budget`` drops candidates whose :func:`gram_working_set_bytes` exceeds
+    it (keeping the thriftiest one if none fit).
+    """
+    cands = [GramConfig()]
+    if backend == "pallas":
+        if path == "packed":
+            for bd in (64, 128, 256):
+                for bb in (128, 256):
+                    cands.append(GramConfig(block_d=bd, block_b=bb))
+        elif path == "code":
+            for bn in (256, 512, 1024):
+                cands.append(GramConfig(block_n=bn, block_d=128))
+        else:
+            for bn in (256, 512, 1024):
+                for bd in (128, 256):
+                    cands.append(GramConfig(block_n=bn, block_d=bd))
+    else:
+        d_tiles = [t for t in (128, 256, 512, 1024) if t < d]
+        for t in d_tiles:
+            cands.append(GramConfig(d_tile=t))
+        if path in ("int8", "packed") and n > 4096:
+            for t in d_tiles or [d]:
+                cands.append(GramConfig(
+                    d_tile=None if t == d else t, n_chunk=4096))
+    seen, uniq = set(), []
+    for c in cands:
+        if c not in seen:
+            seen.add(c)
+            uniq.append(c)
+    if budget is not None:
+        fits = [c for c in uniq
+                if gram_working_set_bytes(
+                    path, n, d, backend=backend, config=c) <= budget]
+        uniq = fits or [min(uniq, key=lambda c: gram_working_set_bytes(
+            path, n, d, backend=backend, config=c))]
+    return uniq
+
+
+def _sweep_operands(path: str, n: int, d: int, backend: str) -> tuple:
+    if path == "packed":
+        ops = (np.zeros((d, max(1, -(-n // 8))), np.uint8),)
+    elif path == "code":
+        ops = (np.zeros((n, d), np.int8),
+               np.linspace(-1.0, 1.0, 8, dtype=np.float32))
+    elif path == "int8":
+        ops = (np.ones((n, d), np.int8),)
+    else:
+        ops = (np.ones((n, d), np.float32),)
+    if backend == "numpy":
+        return ops
+    return tuple(jnp.asarray(o) for o in ops)
+
+
+def _block_until_ready(x) -> None:
+    if hasattr(x, "block_until_ready"):
+        x.block_until_ready()
+
+
+def _time_config(engine: GramEngine, cfg: GramConfig, path: str,
+                 ops: tuple, n: int) -> float:
+    eng = dataclasses.replace(
+        engine, autotune=False, block_n=cfg.block_n, block_d=cfg.block_d,
+        block_b=cfg.block_b, d_tile=cfg.d_tile, n_chunk=cfg.n_chunk)
+    if path == "packed":
+        fn = lambda: eng.packed_sign_gram(ops[0], n)  # noqa: E731
+    elif path == "code":
+        fn = lambda: eng.code_gram(ops[0], ops[1])  # noqa: E731
+    else:
+        fn = lambda: eng.gram(ops[0])  # noqa: E731
+    _block_until_ready(fn())  # compile + warm
+    best = float("inf")
+    for _ in range(2):
+        t0 = time.perf_counter()
+        _block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def tuned_config(
+    path: str,
+    n: int,
+    d: int,
+    engine: GramEngine,
+    *,
+    default: GramConfig | None = None,
+    sweep: bool = True,
+    budget: int | None = None,
+) -> GramConfig:
+    """Cached tuned config for (platform, backend, path, shape bucket).
+
+    Resolution order: in-memory cache -> JSON cache file -> (if ``sweep``
+    and the ``REPRO_GRAM_AUTOTUNE`` hatch is open) a timing sweep over
+    :func:`candidate_configs` at the bucketed shape, persisted for future
+    processes. With sweeping unavailable, returns ``default`` (the engine's
+    own config).
+    """
+    global _sweep_count
+    default = default or engine._base_config()
+    if not autotune_enabled():
+        return default
+    backend = engine.resolve()
+    key = _tune_key(path, n, d, backend)
+    hit = _tuned.get(key)
+    if hit is None:
+        _load_cache_file()
+        hit = _tuned.get(key)
+    if hit is not None:
+        return hit
+    if not sweep:
+        return default
+    nb, db = _pow2_bucket(n), _pow2_bucket(d)
+    nb = min(nb, 4096)  # cap sweep cost; tiles transfer across n buckets
+    _sweep_count += 1
+    ops = _sweep_operands(path, nb, db, backend)
+    best_cfg, best_t = default, float("inf")
+    for cfg in candidate_configs(path, nb, db, backend, budget=budget):
+        try:
+            t = _time_config(engine, cfg, path, ops, nb)
+        except Exception:
+            continue  # config invalid on this backend/shape: skip
+        if t < best_t:
+            best_cfg, best_t = cfg, t
+    _tuned[key] = best_cfg
+    _store_cache_file()
+    return best_cfg
 
 
 # ---------------------------------------------------------------------------

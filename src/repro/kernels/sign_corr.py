@@ -36,6 +36,20 @@ Block shapes default to (512, 256) for the MXU kernels: per-step VMEM =
 the 128-lane MXU tiling. The packed kernel defaults to (128, 128) byte
 tiles: its (bd, bd, bb) XOR intermediate is 2 MB at that size.
 
+Every kernel is TILED over (d_tile, d_tile) OUTPUT blocks with an n-step
+accumulation loop as the trailing grid dimension, so per-program VMEM is
+bounded by the block shape — never by n or d. What the grid does NOT
+bound is the padded HBM footprint: small d pads up to the output-tile
+edge. The pad target is picked from :data:`PAD_TILES` (the small end of
+the ``core.gram`` autotune candidate set) — the smallest candidate >= d —
+instead of a blind 128-multiple: at d=20 the operands pad to 32 lanes
+(1.6x), not 128 (>6x wasted lanes). Padded results are bit-identical to
+exact shapes (pad rows/lanes contribute exact zeros), pinned by the odd-d
+regression tests. For d in the thousands the engine layer
+(``core.gram.GramEngine``) additionally streams the OUTER (d, d) product
+space tile-by-tile under a memory budget; each streamed tile re-enters
+these kernels as a small rectangular Gram.
+
 All three kernels take either a single (n, d) operand or a batch-stacked
 (b, n, d) one (packed: (d, nb) / (b, d, nb)). The batch axis is a NATIVE
 leading grid dimension — grid (b, i, j, k) with one program per (trial,
@@ -50,6 +64,25 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+
+#: Output-tile pad candidates for the MXU kernels, shared with the
+#: ``core.gram`` autotune layer's d_tile candidate set. Small d pads to the
+#: smallest candidate that covers it instead of a blind 128-multiple.
+PAD_TILES = (32, 64, 128)
+
+
+def _d_block(d_max: int, block_d: int) -> int:
+    """Output-tile edge for a Gram over d_max features.
+
+    Returns the smallest :data:`PAD_TILES` candidate >= d_max when one fits
+    under ``block_d`` (so d=20 pads to 32 lanes, not 128); otherwise the
+    legacy 128-lane-multiple clamp.
+    """
+    for tile in PAD_TILES:
+        if d_max <= tile <= block_d:
+            return tile
+    return min(block_d, _ceil_mult(d_max, 128))
 
 
 def _as_batched(u: jax.Array) -> tuple[jax.Array, bool]:
@@ -106,7 +139,7 @@ def sign_corr(
     bv, nv, dr = v.shape
     assert (b, n) == (bv, nv), (u.shape, v.shape)
     bn = min(block_n, _ceil_mult(n, 8))
-    bd = min(block_d, _ceil_mult(max(dl, dr), 128))
+    bd = _d_block(max(dl, dr), block_d)
     n_p, dl_p, dr_p = _ceil_mult(n, bn), _ceil_mult(dl, bd), _ceil_mult(dr, bd)
     if (n_p, dl_p) != (n, dl):
         u = jnp.pad(u, ((0, 0), (0, n_p - n), (0, dl_p - dl)))
@@ -188,7 +221,7 @@ def code_corr(
     bv, nv, dr = codes_rhs.shape
     assert (b, n) == (bv, nv), (codes.shape, codes_rhs.shape)
     bn = min(block_n, _ceil_mult(n, 8))
-    bd = min(block_d, _ceil_mult(max(dl, dr), 128))
+    bd = _d_block(max(dl, dr), block_d)
     n_p, dl_p, dr_p = _ceil_mult(n, bn), _ceil_mult(dl, bd), _ceil_mult(dr, bd)
     # pad with -1: it matches no one-hot level, so pad samples decode to 0
     # (padding with 0 would decode to centroid c_0 and corrupt the Gram)
