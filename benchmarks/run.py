@@ -17,7 +17,7 @@ from . import (bigd, ext_glasso, faults, fig3_structure_error,
                fig56_crossover, fig7_star, fig8_rel_error,
                fig9_quality_quantity, fig1011_skeleton, ggm_comm,
                ggm_roofline, gram_engine, kernel_throughput, roofline,
-               sparse, trials)
+               serve, sparse, trials)
 
 BENCHES = {
     "bigd": bigd.run,
@@ -34,6 +34,7 @@ BENCHES = {
     "gram": gram_engine.run,
     "kernels": kernel_throughput.run,
     "roofline": roofline.run,
+    "serve": serve.run,
     "sparse": sparse.run,
     "trials": trials.run,
 }
@@ -45,6 +46,7 @@ BENCH_SPARSE_JSON = os.path.join(_REPO_ROOT, "BENCH_sparse.json")
 BENCH_FAULTS_JSON = os.path.join(_REPO_ROOT, "BENCH_faults.json")
 BENCH_BIGD_JSON = os.path.join(_REPO_ROOT, "BENCH_bigd.json")
 BENCH_ROOFLINE_JSON = os.path.join(_REPO_ROOT, "BENCH_roofline.json")
+BENCH_SERVE_JSON = os.path.join(_REPO_ROOT, "BENCH_serve.json")
 
 
 def _write_slim(payload: dict, keys: tuple, path: str) -> str:
@@ -101,6 +103,17 @@ def write_bench_roofline(payload: dict, path: str = BENCH_ROOFLINE_JSON) -> str:
         "platform", "d", "n", "rows", "thresholds", "checks"), path)
 
 
+def write_bench_serve(payload: dict, path: str = BENCH_SERVE_JSON) -> str:
+    """Persist the serving-plane artifact: multi-tenant ingest throughput
+    (ticks/s, rows/s, fold latency p50/p99), wire-pathology telemetry,
+    snapshot+journal recovery timing, and the crash-restore bit-identity /
+    exactly-once acceptance checks."""
+    return _write_slim(payload, (
+        "tenants", "machines", "d", "block_n", "ticks", "ticks_per_s",
+        "rows_per_s", "fold_p50_ms", "fold_p99_ms", "telemetry",
+        "recovery", "checks"), path)
+
+
 def write_bench_gram(payload: dict, path: str = BENCH_GRAM_JSON) -> str:
     """Persist the perf-trajectory artifact tracked across PRs: per-backend
     GB/s and GFLOP/s for every Gram path, plus the bytes-moved check."""
@@ -148,6 +161,8 @@ def main() -> int:
                 print("wrote", write_bench_bigd(result), flush=True)
             if name == "ggm_roofline" and args.json:
                 print("wrote", write_bench_roofline(result), flush=True)
+            if name == "serve" and args.json:
+                print("wrote", write_bench_serve(result), flush=True)
             checks = (result or {}).get("checks", {})
             bad = [k for k, v in checks.items() if not v]
             status = "PASS" if not bad else f"CHECKS-FAILED:{bad}"

@@ -83,13 +83,20 @@ def latest_step(directory: str) -> int | None:
     return max(steps) if steps else None
 
 
-def load_checkpoint(directory: str, step: int, target_tree, shardings=None):
+def load_checkpoint(directory: str, step: int, target_tree, shardings=None,
+                    to_numpy: bool = False):
     """Restore into the structure of ``target_tree``.
 
     Leaves are matched positionally against the target's flatten order and
     verified by key path — a structure mismatch is an error, not a silent
     permutation. ``shardings``: optional matching pytree of NamedSharding
     to place each leaf on restore (cross-mesh resume).
+
+    ``to_numpy=True`` returns host numpy leaves exactly as stored instead
+    of device arrays — the serving plane's durable state is host-resident
+    (int64 ingest cursors / float64 Gram accumulators), and the default
+    ``jnp.asarray`` placement would silently narrow 64-bit leaves under
+    jax's default x32 mode.
     """
     path = os.path.join(directory, f"step_{step:08d}.npz")
     with np.load(path) as z:
@@ -116,7 +123,9 @@ def load_checkpoint(directory: str, step: int, target_tree, shardings=None):
             arr = z[f"leaf_{i}"]
             if rec["dtype"] == "bfloat16":
                 arr = arr.view(_BF16)
-            if shard_leaves is not None:
+            if to_numpy:
+                out.append(np.array(arr))  # npz leaves are lazy: copy out
+            elif shard_leaves is not None:
                 out.append(jax.device_put(arr, shard_leaves[i]))
             else:
                 out.append(jnp.asarray(arr))

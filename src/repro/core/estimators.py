@@ -495,11 +495,14 @@ def payload_gram(
     if strategy.method == "persymbol":
         from .quantizers import PerSymbolQuantizer
 
-        q = PerSymbolQuantizer(strategy.rate)
+        # the CONCRETE codebook: this runs under jit (the trial plane's
+        # stage traces), where the quantizer's jax-array centroids are
+        # tracers and would skip the engine's integer-exact rate-1 dispatch
+        cb = PerSymbolQuantizer(strategy.rate).centroids_np
         fn = eng.code_gram_batch if batched else eng.code_gram
         if rows is not None:
-            return fn(rows, q.centroids, u)
-        return fn(u, q.centroids)
+            return fn(rows, cb, u)
+        return fn(u, cb)
     fn = eng.gram_batch if batched else eng.gram
     return fn(u if rows is None else rows, u if rows is not None else None)
 

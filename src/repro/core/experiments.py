@@ -587,18 +587,35 @@ def _stacked_weights(keys, parents, rhos, n_valid, strategies, n_pad, engine,
     return w, tele.sum(axis=0)
 
 
+def structure_metric_channels(
+    adj_est: jax.Array, adj_ref: jax.Array
+) -> jax.Array:
+    """(..., d, d) estimated vs reference adjacencies -> (..., 3)
+    [error, hamming, shared-edge] channels.
+
+    All three channels are INTEGER-VALUED f32 (the error indicator, the
+    edge symmetric difference, and |E_hat & E_ref| — for spanning trees
+    edge F1 is exactly shared/(d-1)), so their sums are exact in f32
+    under any reduction order: a psum over a sharded rep axis reproduces
+    the single-device sums bit for bit — the distributed trial plane's
+    parity gate. The serving plane reuses the same channels against the
+    PREVIOUS solve: the hamming channel is the per-tenant structure-drift
+    counter, shared is the stable-edge count.
+    """
+    adj_est = jnp.asarray(adj_est)
+    adj_ref = jnp.asarray(adj_ref)
+    err = trees.structure_error(adj_est, adj_ref).astype(jnp.float32)
+    ham = trees.structure_hamming(adj_est, adj_ref).astype(jnp.float32)
+    shared = jnp.sum(adj_est & adj_ref, axis=(-2, -1)).astype(
+        jnp.float32) / 2  # symmetric adjacencies: exact integer halves
+    return jnp.stack([err, ham, shared], axis=-1)
+
+
 def _per_trial_metrics(w: jax.Array, adj_true: jax.Array,
                        chunk: int | None = None) -> jax.Array:
     """(S, r, d, d) weights + (r, d, d) truth -> (S, r, 3) per-trial
     [error, hamming, shared-edge count] via one flattened vmapped Boruvka
-    solve.
-
-    All three channels are INTEGER-VALUED f32 (the error indicator, the
-    edge symmetric difference, and |E_hat & E_true| — for spanning trees
-    edge F1 is exactly shared/(d-1), recovered once at the end of
-    ``run_trials``), so their sums are exact in f32 under any reduction
-    order: a psum over a sharded rep axis reproduces the single-device
-    sums bit for bit — the distributed trial plane's parity gate.
+    solve; channels are :func:`structure_metric_channels` against truth.
 
     ``chunk`` (``TrialPlan.metrics_chunk``) streams the flattened trial
     stack through the solver in slabs instead of one full vmap — same
@@ -606,11 +623,7 @@ def _per_trial_metrics(w: jax.Array, adj_true: jax.Array,
     """
     S, r, d, _ = w.shape
     est = boruvka_mst_batch(w.reshape(S * r, d, d), chunk).reshape(S, r, d, d)
-    err = trees.structure_error(est, adj_true[None]).astype(jnp.float32)
-    ham = trees.structure_hamming(est, adj_true[None]).astype(jnp.float32)
-    shared = jnp.sum(est & adj_true[None], axis=(-2, -1)).astype(
-        jnp.float32) / 2  # symmetric adjacencies: exact integer halves
-    return jnp.stack([err, ham, shared], axis=-1)
+    return structure_metric_channels(est, adj_true[None])
 
 
 @functools.lru_cache(maxsize=None)

@@ -140,6 +140,30 @@ def _concrete(*arrays) -> bool:
         isinstance(a, jax.core.Tracer) for a in arrays if a is not None)
 
 
+def _binary_antisymmetric_centroid(centroids) -> float | None:
+    """c > 0 when ``centroids`` is a concrete 2-level codebook [-c, +c].
+
+    The rate-1 per-symbol codebook is exactly this shape (equiprobable
+    standard-normal bins are symmetric), so its decoded Gram factors as
+    c^2 * (sign Gram of the +-1 mapped codes) — an INTEGER contraction.
+    ``None`` for traced, non-binary, or asymmetric codebooks.
+    """
+    if centroids is None or isinstance(centroids, jax.core.Tracer):
+        return None
+    cb = np.asarray(centroids, dtype=np.float32)
+    if cb.shape != (2,) or not (cb[1] > 0.0 and cb[0] == -cb[1]):
+        return None
+    return float(cb[1])
+
+
+def _binary_codes_to_signs(codes, xp):
+    """{0 -> -1, 1 -> +1, anything else (MASKED_CODE, OOB) -> 0} as int8 —
+    the sign-Gram operand of a 2-level codebook, with the same
+    masked-code-drops-out semantics as the centroid decode."""
+    c = xp.asarray(codes)
+    return (c == 1).astype(xp.int8) - (c == 0).astype(xp.int8)
+
+
 def _to_f32(a, xp):
     if xp is np:
         return np.asarray(a, dtype=np.float32)
@@ -330,6 +354,20 @@ class GramEngine:
 
     def _code_gram(self, codes, centroids, rhs, *, batched: bool):
         backend = self.resolve()
+        c = _binary_antisymmetric_centroid(centroids)
+        if c is not None:
+            # 2-level antisymmetric codebook (the rate-1 per-symbol path):
+            # decode(u) = c * sign(u), so G = c^2 * (integer sign Gram).
+            # The sign contraction is integer-exact on every backend, so
+            # the R1 code Gram becomes bit-stable under row padding, shape
+            # bucketing and batch grouping — the float near-tie that used
+            # to flip bucketed-vs-exact MWST metrics at 32x padding came
+            # from reduction-order drift of the centroid-decoded f32 sum.
+            xp = np if backend == "numpy" else jnp
+            u = _binary_codes_to_signs(codes, xp)
+            v = None if rhs is None else _binary_codes_to_signs(rhs, xp)
+            scale = np.float32(c) * np.float32(c)  # one f32 rounding
+            return self._value_gram(u, v, batched=batched) * scale
         n, dl = codes.shape[-2], codes.shape[-1]
         dr = dl if rhs is None else rhs.shape[-1]
         cfg = self._config("code", n, max(dl, dr),

@@ -60,6 +60,14 @@ class PerSymbolQuantizer:
         a, c = _codebook_np(self.rate)
         self.boundaries = jnp.asarray(a[1:-1], dtype=jnp.float32)  # interior only
         self.centroids = jnp.asarray(c, dtype=jnp.float32)
+        #: concrete host copy of the codebook. Gram call sites must pass
+        #: THIS to the engine: a quantizer constructed inside a jit trace
+        #: gets traced ``centroids`` (array creation lifts to tracers
+        #: under tracing), and a traced codebook is invisible to
+        #: ``GramEngine``'s concrete 2-level-antisymmetric (rate-1)
+        #: dispatch — the integer-exact path that keeps R1 Grams
+        #: bit-stable under shape bucketing.
+        self.centroids_np = np.asarray(c, dtype=np.float32)
 
     @property
     def num_levels(self) -> int:

@@ -216,6 +216,33 @@ class StreamingGram:
         self.n += int(np.sum(np.asarray(n_valid)))
         return self
 
+    def merge(self, other: "StreamingGram") -> "StreamingGram":
+        """Fold ANOTHER accumulator in: G += other.G, n += other.n.
+
+        The distributed-ingest / journal-replay primitive: a shard (or a
+        replayed journal segment) accumulates its own ``StreamingGram``
+        and the center merges the finished accumulator instead of
+        re-folding its blocks. On the integer-exact paths (sign codes and
+        packed signs — Gram entries are exact integers in f32 up to 2^24)
+        the merge is EXACTLY the fold of the union of both accumulators'
+        blocks, in any order. On float-valued paths (per-symbol R >= 2,
+        'original') it is the same sum with ``other``'s contribution
+        associated as one block — deterministic, and bit-equal to the
+        sequential fold whenever ``other`` holds a single block.
+        """
+        if not isinstance(other, StreamingGram):
+            raise TypeError(f"can only merge StreamingGram, got {type(other)}")
+        if (self.d, self.method) != (other.d, other.method):
+            raise ValueError(
+                f"incompatible accumulators: d/method "
+                f"{(self.d, self.method)} vs {(other.d, other.method)}")
+        if self.method == "persymbol" and self.rate != other.rate:
+            raise ValueError(
+                f"incompatible per-symbol rates: {self.rate} vs {other.rate}")
+        self.gram = self.gram + other.gram
+        self.n += other.n
+        return self
+
     def weights(self) -> jax.Array:
         """Chow-Liu weight matrix — identical to the batch estimator on the
         concatenation of every batch seen so far (the shared

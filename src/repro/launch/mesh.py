@@ -58,6 +58,25 @@ def make_trial_mesh(data: int | None = None, model: int | None = None):
     return jax.make_mesh((data,), ("data",), axis_types=(AxisType.Auto,))
 
 
+def make_tenant_mesh(tenants: int | None = None):
+    """1-D ("tenant",) mesh for the serving plane's batched stages.
+
+    ``repro.serve`` stacks per-tenant accumulators on a leading axis and
+    runs fold / weights / Boruvka as batched launches; with this mesh the
+    server shards those launches over local devices (tenants are
+    independent, so sharding the batch axis cannot change per-tenant
+    bits — same property as the trial plane's rep sharding). ``tenants``
+    caps the axis at a divisor-friendly device count; default all local
+    devices. The serve plane slot-buckets to powers of two, so any
+    power-of-two device count divides every launch.
+    """
+    n = len(jax.devices())
+    size = n if tenants is None else min(tenants, n)
+    while size > 1 and (size & (size - 1)):  # largest pow2 <= size
+        size &= size - 1
+    return jax.make_mesh((size,), ("tenant",), axis_types=(AxisType.Auto,))
+
+
 def make_host_mesh(data: int = 1, model: int = 1):
     """Mesh over whatever devices exist locally (CPU smoke / examples).
 

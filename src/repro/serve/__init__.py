@@ -1,0 +1,27 @@
+"""Crash-safe multi-tenant structure-estimation service (the serving
+plane).
+
+The paper's center only ever needs each machine's quantized sufficient
+statistics — which makes a long-lived serving process natural: many
+tenants' Gram accumulators stack on a leading batch axis
+(:class:`~repro.serve.table.TenantTable`), every ingest tick folds
+through one batched launch, and the durable state is tiny (d^2 floats +
+a handful of int64 counters per tenant). This package wraps that core in
+the machinery a service actually needs: exactly-once ingest cursors
+(:mod:`~repro.serve.ingest`), a write-ahead fold journal
+(:mod:`~repro.serve.journal`), atomic snapshots + replay recovery,
+watchdogs and incremental re-solves
+(:class:`~repro.serve.server.StructureServer`), and a deterministic
+pathological-traffic generator (:mod:`~repro.serve.traffic`).
+"""
+from .ingest import BoundedQueue, IngestLog, Payload, split_kinds
+from .journal import FoldJournal, iter_records, read_journal
+from .server import ServeConfig, StructureServer
+from .table import TenantTable
+from .traffic import TrafficConfig, make_trace, unique_payloads
+
+__all__ = [
+    "BoundedQueue", "FoldJournal", "IngestLog", "Payload", "ServeConfig",
+    "StructureServer", "TenantTable", "TrafficConfig", "iter_records",
+    "make_trace", "read_journal", "split_kinds", "unique_payloads",
+]

@@ -1,0 +1,110 @@
+"""Deterministic synthetic traffic for the serving plane.
+
+Machines sample a chain-structured Gaussian (corr(i, j) = rho^|i-j| —
+the paper's running example, drawn via the AR(1) recursion), quantize
+per the serve method, and stamp per-(tenant, machine) sequence numbers.
+On top of the clean trace the generator injects the three wire
+pathologies the ingest log is built for — duplicates (a payload
+delivered again later), reordering (a payload delayed past its
+successor) and drops (a sequence number that never arrives) — all from
+one seeded ``numpy`` Generator, so a trace is a pure function of its
+config: tests and the crash-recovery bench replay the identical byte
+stream into independent server processes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core.quantizers import _codebook_np, pack_codes
+from .ingest import Payload
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficConfig:
+    tenants: int
+    machines: int
+    ticks: int
+    n: int                     # rows per payload
+    d: int
+    rho: float = 0.6
+    method: str = "sign"
+    rate: int = 1
+    packed_fraction: float = 0.5   # sign payloads sent 1-bit packed
+    p_duplicate: float = 0.0
+    p_reorder: float = 0.0
+    p_drop: float = 0.0
+    seed: int = 0
+
+
+def _chain_samples(rng: np.random.Generator, n: int, d: int,
+                   rho: float) -> np.ndarray:
+    """(n, d) samples with corr(i, j) = rho^|i-j| (stationary AR(1))."""
+    z = rng.standard_normal((n, d))
+    x = np.empty_like(z)
+    x[:, 0] = z[:, 0]
+    s = np.sqrt(1.0 - rho * rho)
+    for j in range(1, d):
+        x[:, j] = rho * x[:, j - 1] + s * z[:, j]
+    return x
+
+
+def _encode(cfg: TrafficConfig, rng: np.random.Generator,
+            x: np.ndarray) -> dict:
+    """Quantize one block into Payload kwargs (codes= or packed=+n=)."""
+    if cfg.method == "sign":
+        if rng.random() < cfg.packed_fraction:
+            bits = (x >= 0).astype(np.int8)            # (n, d) {0, 1}
+            pad = (-cfg.n) % 8
+            if pad:
+                bits = np.concatenate(
+                    [bits, np.zeros((pad, cfg.d), np.int8)])
+            packed = np.asarray(pack_codes(bits.T, 1))  # (d, ceil(n/8))
+            return {"packed": packed, "n": cfg.n}
+        return {"codes": np.where(x >= 0, 1, -1).astype(np.int8)}
+    boundaries, _ = _codebook_np(cfg.rate)
+    # count of interior boundaries strictly below x = the encoder's bin
+    codes = np.searchsorted(boundaries[1:-1], x, side="left")
+    return {"codes": codes.astype(np.int8)}
+
+
+def make_trace(cfg: TrafficConfig) -> list[list[Payload]]:
+    """The full delivery schedule: ``trace[t]`` is the (ordered) list of
+    payloads ARRIVING at tick t, pathologies already applied."""
+    rng = np.random.default_rng(cfg.seed)
+    arrivals: list[list[Payload]] = [[] for _ in range(cfg.ticks)]
+    for tenant in range(cfg.tenants):
+        for machine in range(cfg.machines):
+            seq = 0
+            for tick in range(cfg.ticks):
+                seq += 1
+                x = _chain_samples(rng, cfg.n, cfg.d, cfg.rho)
+                p = Payload(tenant, machine, seq, **_encode(cfg, rng, x))
+                r = rng.random(3)
+                if r[0] < cfg.p_drop:
+                    continue                       # the seq never arrives
+                at = tick
+                if r[1] < cfg.p_reorder and tick + 1 < cfg.ticks:
+                    at = tick + 1                  # delayed past successor
+                arrivals[at].append(p)
+                if r[2] < cfg.p_duplicate:
+                    again = min(tick + int(rng.integers(0, 3)),
+                                cfg.ticks - 1)
+                    arrivals[again].append(p)      # replayed verbatim
+    return arrivals
+
+
+def unique_payloads(trace: list[list[Payload]]) -> list[Payload]:
+    """Each delivered (tenant, machine, seq) once, first arrival wins —
+    the exactly-once ground truth a server folding this trace (with
+    buffers large enough to absorb its reordering) must reproduce."""
+    seen: set[tuple[int, int, int]] = set()
+    out: list[Payload] = []
+    for batch in trace:
+        for p in batch:
+            key = (p.tenant, p.machine, p.seq)
+            if key not in seen:
+                seen.add(key)
+                out.append(p)
+    return out

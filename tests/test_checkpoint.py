@@ -73,3 +73,38 @@ def test_optimizer_state_roundtrip(tmp_path):
     p2a, s2a = opt.update(g, state, params, 1e-2)
     p2b, s2b = opt.update(g, restored, back["params"], 1e-2)
     assert bool(jnp.all(p2a["w"] == p2b["w"]))
+
+
+def test_interrupted_save_keeps_previous_snapshot(tmp_path):
+    """A save that died mid-write (stray .tmp, no rename) must leave the
+    previous snapshot as the discoverable, intact latest."""
+    t = _tree()
+    save_checkpoint(str(tmp_path), 3, t)
+    (tmp_path / "tmpabc123.tmp").write_bytes(b"\x00" * 100)  # torn write
+    assert latest_step(str(tmp_path)) == 3
+    back = load_checkpoint(str(tmp_path), 3, t)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype and bool(jnp.all(a == b))
+
+
+def test_load_to_numpy_preserves_64bit_host_state(tmp_path):
+    """to_numpy=True restores host leaves exactly as stored — float64
+    Gram accumulators and int64 cursors survive even under jax x32
+    (the serving plane's durable state), and bf16 still round-trips."""
+    t = {
+        "gram": np.arange(8, dtype=np.float64).reshape(2, 2, 2) + 2.0 ** 53,
+        "cursors": np.asarray([[2 ** 40 + 1, 3]], np.int64),
+        "bf": jnp.ones((2, 2), jnp.bfloat16) * 1.5,
+        "i32": jnp.asarray([4, 5], jnp.int32),
+    }
+    save_checkpoint(str(tmp_path), 1, t)
+    back = load_checkpoint(str(tmp_path), 1, t, to_numpy=True)
+    assert isinstance(back["gram"], np.ndarray)
+    assert back["gram"].dtype == np.float64
+    assert np.array_equal(back["gram"], t["gram"])       # no f32 rounding
+    assert back["cursors"].dtype == np.int64
+    assert np.array_equal(back["cursors"], t["cursors"])  # no i32 truncation
+    assert back["bf"].dtype == jnp.bfloat16.dtype
+    assert np.array_equal(np.asarray(back["bf"], np.float32),
+                          np.asarray(t["bf"], np.float32))
+    assert np.array_equal(back["i32"], np.asarray(t["i32"]))

@@ -706,3 +706,49 @@ def test_edge_counts_channels():
     # broadcasting over leading axes (the metric stage's (S, r) batch)
     shared, n_est, n_true = trees.edge_counts(est[None, None], true[None])
     assert shared.shape == n_est.shape == n_true.shape == (1, 1)
+
+
+def test_r1_bucketing_parity_at_32x_padding():
+    """Regression for the full-mode trials bench flake: R1 metrics under
+    EXTREME (32x) shape bucketing must equal the exact-shape run bit for
+    bit — the R1 code Gram now rides the integer sign contraction, so
+    padded shapes cannot reorder its reduction and flip MWST near-ties."""
+    kw = dict(d=20, ns=(125,),
+              strategies=(Strategy("persymbol", rate=1),), reps=24)
+    exact = run_trials(TrialPlan(**kw, n_buckets=None))
+    padded = run_trials(TrialPlan(**kw, n_buckets=(4096,)))
+    assert padded.buckets == {125: 4096}
+    assert exact.error_rate["R1"] == padded.error_rate["R1"]
+    assert exact.edit_distance["R1"] == padded.edit_distance["R1"]
+    assert exact.edge_f1["R1"] == padded.edge_f1["R1"]
+
+
+def test_r1_weights_stage_bitwise_stable_under_bucketing():
+    """The property UNDER the metric parity above, asserted where the
+    flake actually lived: the jitted weights stage must produce
+    bit-identical R1 weight tensors at the exact shape and under 8x
+    padding. This is only true when the engine's integer-exact rate-1
+    dispatch engages INSIDE the trace — the quantizer codebook handed to
+    the Gram must be concrete (``centroids_np``), because a
+    traced-codebook fallback to the f32 centroid decode reintroduces
+    reduction-order drift (the n=500 near-tie the full trials bench
+    caught)."""
+    import jax.numpy as jnp
+
+    from repro.core.experiments import _weights_stage, stacked_trees, trial_keys
+    from repro.core.gram import GramEngine
+
+    strategies = (Strategy("persymbol", rate=1),)
+    plan = TrialPlan(d=20, ns=(500,), strategies=strategies, reps=60,
+                     n_buckets=None)
+    keys = trial_keys(plan)
+    parents, rhos, _ = stacked_trees(plan)
+    eng = plan.budget_engine(GramEngine())
+    n_valid = jnp.asarray(500)
+    w_exact = np.asarray(
+        _weights_stage(strategies, 500, eng, None)(
+            keys, parents, rhos, n_valid))
+    w_padded = np.asarray(
+        _weights_stage(strategies, 4096, eng, None)(
+            keys, parents, rhos, n_valid))
+    assert np.array_equal(w_exact, w_padded)

@@ -299,3 +299,74 @@ def test_packed_sign_gram_batch_matches():
         for i in range(b):
             want = u[i].T.astype(np.float32) @ u[i].astype(np.float32)
             np.testing.assert_array_equal(got[i], want), (eng.backend, i)
+
+
+def test_r1_code_gram_bit_stable_under_padding():
+    """Regression (trials bench flake): the rate-1 2-level codebook must
+    dispatch to the integer sign contraction, so the code Gram is
+    BIT-IDENTICAL under 32x row padding with the -1 mask sentinel — the
+    float decode path used to change reduction order with the padded
+    shape and flip near-tie MWST comparisons."""
+    q = PerSymbolQuantizer(1)
+    rng = np.random.default_rng(11)
+    n, pad, d = 125, 4096, 20
+    codes = rng.integers(0, 2, size=(n, d)).astype(np.int8)
+    padded = np.full((pad, d), -1, np.int8)
+    padded[:n] = codes
+    for eng in (PALLAS, XLA, NUMPY):
+        a = np.asarray(eng.code_gram(jnp.asarray(codes), q.centroids))
+        b = np.asarray(eng.code_gram(jnp.asarray(padded), q.centroids))
+        np.testing.assert_array_equal(a, b, err_msg=eng.backend)
+        # batching must not change the bits either
+        c = np.asarray(eng.code_gram_batch(
+            jnp.asarray(padded)[None].repeat(2, 0), q.centroids))
+        np.testing.assert_array_equal(a, c[0], err_msg=eng.backend)
+        np.testing.assert_array_equal(a, c[1], err_msg=eng.backend)
+    # and the dispatch is exact w.r.t. the decode-matmul oracle
+    dec = np.where(codes >= 0,
+                   np.asarray(q.centroids)[np.clip(codes, 0, 1)], 0.0)
+    want = dec.T.astype(np.float64) @ dec.astype(np.float64)
+    np.testing.assert_allclose(
+        np.asarray(XLA.code_gram(jnp.asarray(codes), q.centroids)),
+        want, rtol=1e-6, atol=1e-6)
+
+
+def test_streaming_merge_exact():
+    """StreamingGram.merge: exact union-fold on the integer paths,
+    including empty and heterogeneous-ingestion accumulators."""
+    rng = np.random.default_rng(12)
+    d = 9
+    a = StreamingGram(d=d, method="sign", engine=XLA)
+    b = StreamingGram(d=d, method="sign", engine=XLA)
+    ref = StreamingGram(d=d, method="sign", engine=XLA)
+    u1 = rng.choice([-1, 1], size=(40, d)).astype(np.int8)
+    u2 = rng.choice([-1, 1], size=(24, d)).astype(np.int8)
+    a.update_codes(jnp.asarray(u1))
+    b.update_packed(_pack(u2), 24)       # heterogeneous ingestion formats
+    ref.update_codes(jnp.asarray(u1))
+    ref.update_packed(_pack(u2), 24)
+    out = a.merge(b)
+    assert out is a and a.n == ref.n == 64
+    np.testing.assert_array_equal(np.asarray(a.gram), np.asarray(ref.gram))
+    # merging an EMPTY accumulator is the identity, both ways
+    before = np.asarray(a.gram).copy()
+    a.merge(StreamingGram(d=d, method="sign", engine=XLA))
+    np.testing.assert_array_equal(np.asarray(a.gram), before)
+    assert a.n == 64
+    empty = StreamingGram(d=d, method="sign", engine=XLA)
+    empty.merge(ref)
+    np.testing.assert_array_equal(np.asarray(empty.gram), before)
+    assert empty.n == 64
+
+
+def test_streaming_merge_validates():
+    a = StreamingGram(d=4, method="sign")
+    with pytest.raises(TypeError):
+        a.merge(np.zeros((4, 4)))
+    with pytest.raises(ValueError):
+        a.merge(StreamingGram(d=5, method="sign"))
+    with pytest.raises(ValueError):
+        a.merge(StreamingGram(d=4, method="persymbol", rate=2))
+    b = StreamingGram(d=4, method="persymbol", rate=2)
+    with pytest.raises(ValueError):
+        b.merge(StreamingGram(d=4, method="persymbol", rate=3))
