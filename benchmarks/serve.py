@@ -129,7 +129,8 @@ def run(quick: bool = False) -> dict:
         **tp,
         "recovery": {k: cr[k] for k in (
             "crash_after_records", "recovered_records",
-            "recovery_seconds", "snapshot_step")},
+            "recovery_seconds", "snapshot_step", "torn_segments",
+            "torn_bytes_dropped")},
         "checks": {
             "crash_restore_bit_identical": cr["bit_identical"],
             "folds_exactly_once": tp["folds_exactly_once"],
@@ -169,7 +170,9 @@ def _crash(quick: bool, workdir: str) -> dict:
     srv = StructureServer(ServeConfig(**scfg), crash_dir)  # replays the WAL
     recovered = {"records": srv.recovered_records,
                  "seconds": srv.recovery_seconds,
-                 "step": srv.snapshot_step}
+                 "step": srv.snapshot_step,
+                 "torn_segments": srv.torn_segments,
+                 "torn_bytes_dropped": srv.torn_bytes_dropped}
     _drive(srv, trace)            # producers re-send everything unacked
     a, b = clean.comparable_state(), srv.comparable_state()
     bit_identical = all(np.array_equal(a[k], b[k]) for k in a)
@@ -180,6 +183,8 @@ def _crash(quick: bool, workdir: str) -> dict:
         "recovered_records": recovered["records"],
         "recovery_seconds": recovered["seconds"],
         "snapshot_step": recovered["step"],
+        "torn_segments": recovered["torn_segments"],
+        "torn_bytes_dropped": recovered["torn_bytes_dropped"],
         "bit_identical": bit_identical,
     }
 

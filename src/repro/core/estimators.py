@@ -175,7 +175,8 @@ def effective_counts(n_rows) -> jax.Array:
     return jnp.minimum(counts[..., :, None], counts[..., None, :])
 
 
-def weights_from_gram(gram: jax.Array, n, method) -> jax.Array:
+def weights_from_gram(gram: jax.Array, n, method, *,
+                      normalized: bool = False) -> jax.Array:
     """Central-machine estimate: raw Gram + sample count -> Chow-Liu weights.
 
     THE shared tail of every pipeline (batch estimators, streaming
@@ -197,6 +198,13 @@ def weights_from_gram(gram: jax.Array, n, method) -> jax.Array:
     machine's whole row/column block — are neutralized to weight 0: MI
     weights are >= 0, so a voided edge can never win the MWST, and the
     solve stays finite however many machines were lost.
+
+    ``normalized=True`` declares that ``gram`` is ALREADY the
+    per-sample statistic gram / max(n, 1) — the caller divided on the
+    host (e.g. the serving plane's int64 counts normalized in float64,
+    which f32 arithmetic would round past 2^24 samples). ``n`` is then
+    used only for the persymbol bias correction and the n_eff < 2
+    neutralization, both insensitive to f32 rounding of huge counts.
     """
     method = getattr(method, "method", method)
     n_eff = None
@@ -204,11 +212,12 @@ def weights_from_gram(gram: jax.Array, n, method) -> jax.Array:
         n_eff = jnp.asarray(n, jnp.float32)
         n = jnp.maximum(n_eff, 1.0)
     if method == "original":
-        w = mi_gaussian(gram / n)
+        w = mi_gaussian(gram if normalized else gram / n)
     elif method == "sign":
-        w = mi_sign(0.5 + gram / (2.0 * n))
+        w = mi_sign((0.5 + gram / 2.0) if normalized
+                    else (0.5 + gram / (2.0 * n)))
     elif method == "persymbol":
-        rho_bar = gram / n
+        rho_bar = gram if normalized else gram / n
         # the clip bound must be representable in f32 (1 - 1e-9 rounds to
         # 1.0 and the MWST-irrelevant diagonal would become inf) — same
         # guard as mi_gaussian

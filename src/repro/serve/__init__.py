@@ -15,13 +15,15 @@ watchdogs and incremental re-solves
 pathological-traffic generator (:mod:`~repro.serve.traffic`).
 """
 from .ingest import BoundedQueue, IngestLog, Payload, split_kinds
-from .journal import FoldJournal, iter_records, read_journal
+from .journal import (FoldJournal, JournalCorruptionError, iter_records,
+                      read_journal, scan_segments)
 from .server import ServeConfig, StructureServer
 from .table import TenantTable
 from .traffic import TrafficConfig, make_trace, unique_payloads
 
 __all__ = [
-    "BoundedQueue", "FoldJournal", "IngestLog", "Payload", "ServeConfig",
-    "StructureServer", "TenantTable", "TrafficConfig", "iter_records",
-    "make_trace", "read_journal", "split_kinds", "unique_payloads",
+    "BoundedQueue", "FoldJournal", "IngestLog", "JournalCorruptionError",
+    "Payload", "ServeConfig", "StructureServer", "TenantTable",
+    "TrafficConfig", "iter_records", "make_trace", "read_journal",
+    "scan_segments", "split_kinds", "unique_payloads",
 ]

@@ -41,8 +41,11 @@ class Payload:
 
     Exactly one of ``codes`` / ``packed`` is set:
 
-    * ``codes`` — (n, d) int8: sign codes ({-1,+1} or {0,1} bits) or
-      R-bit per-symbol bin indices;
+    * ``codes`` — (n, d) int8: sign values {-1, 0, +1} (0 = masked
+      entry, e.g. a faulted wire symbol — it drops out of the
+      contraction), {0, 1} wire bits when ``bits=True`` (mapped to ±1 at
+      fold time; 0 here is a legitimate -1, never a mask), or R-bit
+      per-symbol bin indices;
     * ``packed`` — (d, ceil(n/8)) uint8: 1-bit packed signs in the
       ``quantizers.pack_codes`` layout (feature-major, little bit order,
       zero tail bits) with ``n`` giving the sample count.
@@ -56,10 +59,13 @@ class Payload:
     codes: np.ndarray | None = None
     packed: np.ndarray | None = None
     n: int = 0
+    bits: bool = False
 
     def __post_init__(self):
         if (self.codes is None) == (self.packed is None):
             raise ValueError("exactly one of codes/packed must be set")
+        if self.bits and self.codes is None:
+            raise ValueError("bits=True describes unpacked sign codes")
         if self.seq < 1:
             raise ValueError(f"seq is 1-based, got {self.seq}")
         if self.codes is not None:

@@ -38,7 +38,7 @@ import numpy as np
 from ..checkpoint import ckpt
 from ..core.gram import GramEngine
 from .ingest import BoundedQueue, IngestLog, Payload
-from .journal import (FoldJournal, iter_records, prune_segments,
+from .journal import (FoldJournal, prune_segments, scan_segments,
                       segment_path)
 from .table import TenantTable
 
@@ -98,6 +98,8 @@ class StructureServer:
         self._journaled = 0
         self.recovered_records = 0
         self.recovery_seconds = 0.0
+        self.torn_segments = 0
+        self.torn_bytes_dropped = 0
         self._recover()
         self.journal = FoldJournal(
             segment_path(directory, self.snapshot_step))
@@ -197,7 +199,16 @@ class StructureServer:
         return path
 
     def _recover(self) -> None:
-        """Latest snapshot + journal replay -> bit-identical state."""
+        """Latest snapshot + journal replay -> bit-identical state.
+
+        A torn tail on the newest segment (crash mid-append) is
+        TRUNCATED to its last intact frame before the segment is
+        reopened for append: without the repair, records appended after
+        the torn garbage would be invisible to the next recovery's scan
+        — acked and folded payloads silently lost on a second crash. A
+        torn frame in any older segment raises
+        ``JournalCorruptionError`` (see ``journal.scan_segments``).
+        """
         t0 = time.perf_counter()
         step = ckpt.latest_step(self.directory)
         if step is not None:
@@ -215,8 +226,16 @@ class StructureServer:
         # Replay every surviving journal record through the cursors,
         # grouped by the tick it originally folded in — the fold batches
         # (and so the accumulation order) match the live run exactly.
+        scans = scan_segments(self.directory)
+        for scan in scans:
+            if scan.torn:      # scan_segments: only the newest can be
+                self.torn_segments += 1
+                self.torn_bytes_dropped += (
+                    scan.total_bytes - scan.valid_bytes)
+                os.truncate(scan.path, scan.valid_bytes)
         for tick, group in itertools.groupby(
-                iter_records(self.directory), key=lambda r: r[0]):
+                (r for scan in scans for r in scan.records),
+                key=lambda r: r[0]):
             replayed = [
                 p for _, p in group
                 if self.log.replay(p.tenant, p.machine, p.seq)]

@@ -59,10 +59,12 @@ def _codes_fold_stage(slots: int, block_n: int, d: int, method: str,
                       rate: int, engine: GramEngine):
     """jit: (slots, block_n, d) int8 -> (slots, d, d) f32 per-slot Grams.
 
-    Sign codes arrive as {-1, 0, +1} (0 = padded row, drops out of the
-    integer contraction); per-symbol codes as bin indices with
-    MASKED_CODE padding (decodes to 0 on every backend). One compile per
-    (kind, slot bucket) serves every tick at that bucket.
+    Sign codes arrive as {-1, 0, +1} (0 — a padded row or a masked wire
+    entry — drops out of the integer contraction; ``bits=True`` {0,1}
+    wires were already mapped to ±1 on the host); per-symbol codes as
+    bin indices with MASKED_CODE padding (decodes to 0 on every
+    backend). One compile per (kind, slot bucket) serves every tick at
+    that bucket.
     """
     if method == "sign":
         fn = engine.gram_batch
@@ -94,17 +96,23 @@ def _packed_fold_stage(slots: int, block_n: int, d: int,
 
 @functools.lru_cache(maxsize=None)
 def _solve_stage(slots: int, d: int, method: str):
-    """jit: (slots, d, d) f32 Grams + (slots,) counts + previous
-    adjacencies -> (new adjacencies, [changed, drift, shared] channels).
+    """jit: (slots, d, d) f32 NORMALIZED Grams (gram / max(n, 1),
+    divided on the host in float64 — int64 counts round in f32 past 2^24
+    samples, a real horizon for accumulators designed to grow forever) +
+    (slots,) counts + previous adjacencies -> (new adjacencies,
+    [changed, drift, shared] channels).
 
-    ``n`` enters ``weights_from_gram`` as a (slots, 1, 1) effective-count
-    operand, so tenants with fewer than 2 folded samples neutralize to
-    zero weights instead of NaN — the degraded-tenant solve stays finite.
-    The drift channels are the trial plane's integer-exact
+    ``n`` enters ``weights_from_gram(..., normalized=True)`` as a
+    (slots, 1, 1) effective-count operand used only for the persymbol
+    bias correction and the n_eff < 2 neutralization (both f32-rounding
+    insensitive), so tenants with fewer than 2 folded samples neutralize
+    to zero weights instead of NaN — the degraded-tenant solve stays
+    finite. The drift channels are the trial plane's integer-exact
     ``structure_metric_channels`` against the PREVIOUS solve.
     """
-    def f(gram, n, prev_adj):
-        w = estimators.weights_from_gram(gram, n[:, None, None], method)
+    def f(stat, n, prev_adj):
+        w = estimators.weights_from_gram(stat, n[:, None, None], method,
+                                         normalized=True)
         adj = boruvka_mst_batch(w)
         return adj, experiments.structure_metric_channels(adj, prev_adj)
 
@@ -165,9 +173,11 @@ class TenantTable:
         for i, p in enumerate(chunk):
             self._check(p)
             c = p.codes
-            if self.method == "sign":
-                # wire bits {0,1} or signs {-1,+1} -> ±1; padding stays 0
-                c = np.where(c > 0, 1, -1).astype(np.int8)
+            if p.bits:
+                # {0,1} wire bits -> ±1 (0 is a true -1 on a bit wire)
+                c = (2 * c.astype(np.int8) - 1).astype(np.int8)
+            # sign values {-1,0,+1} pass through: 0 = masked entry,
+            # drops out of the contraction exactly like padding rows
             batch[i, :p.n] = c
         stage = _codes_fold_stage(S, self.block_n, self.d, self.method,
                                   self.rate, self._eng)
@@ -206,6 +216,17 @@ class TenantTable:
                 f"payload rows {p.n} exceed block_n={self.block_n}")
         if not 0 <= p.tenant < self.tenants:
             raise ValueError(f"unknown tenant {p.tenant}")
+        if p.kind != "codes":
+            return
+        if self.method == "sign":
+            lo, hi = (0, 1) if p.bits else (-1, 1)
+            if p.codes.min() < lo or p.codes.max() > hi:
+                raise ValueError(
+                    f"sign payload codes must lie in [{lo}, {hi}] "
+                    f"({'wire bits' if p.bits else 'signs, 0 = masked'}), "
+                    f"got [{p.codes.min()}, {p.codes.max()}]")
+        elif p.bits:
+            raise ValueError("bits payloads are the sign method")
 
     # -- incremental solve --------------------------------------------------
 
@@ -228,14 +249,18 @@ class TenantTable:
         for lo in range(0, len(idx), self.max_slots):
             part = idx[lo:lo + self.max_slots]
             S = _next_pow2(len(part))
-            gram = np.zeros((S, self.d, self.d), np.float32)
+            stat = np.zeros((S, self.d, self.d), np.float32)
             n = np.zeros(S, np.float32)
             prev = np.zeros((S, self.d, self.d), bool)
-            gram[:len(part)] = self.gram[part].astype(np.float32)
+            # normalize in float64 on the host: int64 counts round in
+            # f32 beyond 2^24 folded samples, skewing every weight
+            safe_n = np.maximum(self.n[part], 1).astype(np.float64)
+            stat[:len(part)] = (
+                self.gram[part] / safe_n[:, None, None]).astype(np.float32)
             n[:len(part)] = self.n[part]
             prev[:len(part)] = self.adj[part]
             stage = _solve_stage(S, self.d, self.method)
-            adj, ch = stage(self._place(gram), jnp.asarray(n),
+            adj, ch = stage(self._place(stat), jnp.asarray(n),
                             self._place(prev))
             adj = np.asarray(adj)[:len(part)]
             ch = np.asarray(ch)[:len(part)]

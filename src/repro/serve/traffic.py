@@ -32,6 +32,8 @@ class TrafficConfig:
     method: str = "sign"
     rate: int = 1
     packed_fraction: float = 0.5   # sign payloads sent 1-bit packed
+    bit_fraction: float = 0.0      # unpacked sign payloads sent as
+                                   # {0,1} wire bits (Payload.bits=True)
     p_duplicate: float = 0.0
     p_reorder: float = 0.0
     p_drop: float = 0.0
@@ -54,7 +56,10 @@ def _encode(cfg: TrafficConfig, rng: np.random.Generator,
             x: np.ndarray) -> dict:
     """Quantize one block into Payload kwargs (codes= or packed=+n=)."""
     if cfg.method == "sign":
-        if rng.random() < cfg.packed_fraction:
+        # one draw picks among packed / bit-codes / sign-codes so a
+        # bit_fraction of 0 reproduces pre-bit_fraction traces exactly
+        u = rng.random()
+        if u < cfg.packed_fraction:
             bits = (x >= 0).astype(np.int8)            # (n, d) {0, 1}
             pad = (-cfg.n) % 8
             if pad:
@@ -62,6 +67,9 @@ def _encode(cfg: TrafficConfig, rng: np.random.Generator,
                     [bits, np.zeros((pad, cfg.d), np.int8)])
             packed = np.asarray(pack_codes(bits.T, 1))  # (d, ceil(n/8))
             return {"packed": packed, "n": cfg.n}
+        if (u - cfg.packed_fraction
+                < cfg.bit_fraction * (1.0 - cfg.packed_fraction)):
+            return {"codes": (x >= 0).astype(np.int8), "bits": True}
         return {"codes": np.where(x >= 0, 1, -1).astype(np.int8)}
     boundaries, _ = _codebook_np(cfg.rate)
     # count of interior boundaries strictly below x = the encoder's bin

@@ -183,6 +183,29 @@ def test_weights_from_gram_neutral_when_starved(method):
     assert w[0, 2] == 0.0 and w[2, 3] == 0.0 and w[0, 3] == 0.0
 
 
+@pytest.mark.parametrize("method", ["sign", "persymbol", "original"])
+def test_weights_from_gram_normalized_matches_raw(method):
+    """normalized=True ingests the pre-divided statistic (the serving
+    plane's host float64 normalization); at a pow2 count the division is
+    exact, so the two forms must agree bit for bit — including the
+    n_eff < 2 neutralization."""
+    rng = np.random.default_rng(0)
+    d, n = 5, 64.0
+    x = rng.standard_normal((int(n), d)).astype(np.float32)
+    base = np.where(x >= 0, 1, -1).astype(np.float32) \
+        if method == "sign" else x
+    gram = jnp.asarray(base.T @ base)
+    n_op = jnp.full((1, 1), n, jnp.float32)      # ndim >= 2: n_eff branch
+    a = estimators.weights_from_gram(gram, n_op, method)
+    b = estimators.weights_from_gram(gram / n, n_op, method,
+                                     normalized=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    starved = jnp.full((1, 1), 1.0, jnp.float32)
+    w = np.asarray(estimators.weights_from_gram(
+        gram / n, starved, method, normalized=True))
+    assert (w == 0.0).all()
+
+
 def test_all_dropped_sweep_degrades_gracefully():
     """Satellite 1 end-to-end: dropout=1.0 voids every machine; the sweep
     still completes with finite metrics and error rate exactly 1."""

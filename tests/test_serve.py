@@ -9,12 +9,14 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core.streaming import StreamingGram
-from repro.serve import (BoundedQueue, FoldJournal, IngestLog, Payload,
-                         ServeConfig, StructureServer, TenantTable,
-                         TrafficConfig, make_trace, read_journal,
-                         split_kinds, unique_payloads)
+from repro.serve import (BoundedQueue, FoldJournal, IngestLog,
+                         JournalCorruptionError, Payload, ServeConfig,
+                         StructureServer, TenantTable, TrafficConfig,
+                         make_trace, read_journal, split_kinds,
+                         unique_payloads)
 from repro.serve.journal import (iter_records, list_segments,
-                                 prune_segments, segment_path)
+                                 prune_segments, scan_segments,
+                                 segment_path)
 
 SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -125,15 +127,19 @@ def test_journal_roundtrip_both_kinds(tmp_path, rng):
     path = str(tmp_path / "j.log")
     sent = [Payload(1, 0, 1, codes=_codes(rng)),
             _packed_payload(rng, 2, 1, 7)]
+    sent.append(Payload(3, 2, 4, codes=(_codes(rng) > 0).astype(np.int8),
+                        bits=True))
     j = FoldJournal(path)
     for i, p in enumerate(sent):
         j.append(p, tick=10 + i)
     j.close()
-    records, torn = read_journal(path)
-    assert not torn and [t for t, _ in records] == [10, 11]
+    records, torn, valid = read_journal(path)
+    assert not torn and valid == os.path.getsize(path)
+    assert [t for t, _ in records] == [10, 11, 12]
     for (_, got), p in zip(records, sent):
-        assert (got.tenant, got.machine, got.seq, got.kind, got.n) == \
-            (p.tenant, p.machine, p.seq, p.kind, p.n)
+        assert (got.tenant, got.machine, got.seq, got.kind, got.n,
+                got.bits) == \
+            (p.tenant, p.machine, p.seq, p.kind, p.n, p.bits)
         ref = p.codes if p.kind == "codes" else p.packed
         other = got.codes if p.kind == "codes" else got.packed
         assert np.array_equal(ref, other)
@@ -146,15 +152,22 @@ def test_journal_torn_tail_truncates(tmp_path, rng):
         j.append(Payload(0, 0, s, codes=_codes(rng)), tick=s)
     j.close()
     raw = open(path, "rb").read()
-    two, _ = read_journal(path)
+    two, _, intact_valid = read_journal(path)
     # torn mid-record: the durable prefix survives, the tail vanishes
     open(path, "wb").write(raw[:len(raw) - 11])
-    records, torn = read_journal(path)
+    records, torn, valid = read_journal(path)
     assert torn and [p.seq for _, p in records] == [1, 2]
-    # corrupt one payload byte of the last frame: CRC rejects it
+    # valid_bytes = end of frame 2: truncating there restores a clean
+    # segment (the repair recovery applies before reopening for append)
+    os.truncate(path, valid)
+    records, torn, _ = read_journal(path)
+    assert not torn and [p.seq for _, p in records] == [1, 2]
+    # corrupt one payload byte of the last frame: CRC rejects it, and
+    # the valid prefix ends where the corrupt frame starts
     open(path, "wb").write(raw[:-1] + bytes([raw[-1] ^ 0xFF]))
-    records, torn = read_journal(path)
+    records, torn, valid = read_journal(path)
     assert torn and [p.seq for _, p in records] == [1, 2]
+    assert valid < intact_valid == os.path.getsize(path)
     assert len(two) == 3  # sanity: intact file had all three
 
 
@@ -170,6 +183,68 @@ def test_journal_segments_rotate_and_prune(tmp_path, rng):
     assert [s for s, _ in list_segments(d)] == [4, 8]
 
 
+def test_scan_segments_rejects_torn_middle_segment(tmp_path, rng):
+    """Rotated segments were closed + fsynced — a torn frame there is
+    disk corruption, never crash residue, and must raise instead of
+    silently under-replaying while newer segments still fold."""
+    d = str(tmp_path)
+    for step, seq in ((0, 1), (8, 2)):
+        j = FoldJournal(segment_path(d, step))
+        j.append(Payload(0, 0, seq, codes=_codes(rng)), tick=step + 1)
+        j.close()
+    with open(segment_path(d, 0), "ab") as f:
+        f.write(b"torn")
+    with pytest.raises(JournalCorruptionError):
+        scan_segments(d)
+    with pytest.raises(JournalCorruptionError):
+        list(iter_records(d))
+    # ... but the NEWEST segment may be torn: that is the legal
+    # crash-mid-append state, reported per segment for the repair
+    os.truncate(segment_path(d, 0),
+                os.path.getsize(segment_path(d, 0)) - 4)
+    with open(segment_path(d, 8), "ab") as f:
+        f.write(b"torn")
+    scans = scan_segments(d)
+    assert [s.torn for s in scans] == [False, True]
+    assert scans[1].total_bytes - scans[1].valid_bytes == 4
+    assert [p.seq for _, p in iter_records(d)] == [1, 2]
+
+
+def test_recovery_truncates_torn_tail_so_later_appends_survive(
+        tmp_path, rng):
+    """THE torn-tail regression: a crash can tear a frame mid-write;
+    recovery must truncate the garbage before reopening the segment for
+    append, or every record journaled AFTER it is invisible to the NEXT
+    recovery — acked + folded payloads silently lost on a second crash."""
+    cfg = ServeConfig(tenants=1, machines=1, d=6, block_n=16,
+                      snapshot_every=0)
+    d = str(tmp_path)
+    payloads = [Payload(0, 0, s + 1, codes=_codes(rng)) for s in range(6)]
+    srv = StructureServer(cfg, d)
+    for p in payloads[:3]:
+        srv.submit(p)
+    srv.run_tick()
+    srv.close()
+    seg = segment_path(d, 0)
+    with open(seg, "ab") as f:
+        f.write(b"GJ" + b"\xee")    # torn in-flight frame (partial header)
+    srv = StructureServer(cfg, d)   # recovery repairs the tail
+    assert srv.torn_segments == 1 and srv.torn_bytes_dropped == 3
+    assert srv.recovered_records == 3
+    for p in payloads[3:]:          # journaled + acked AFTER the repair
+        srv.submit(p)
+    srv.run_tick()
+    srv.close()
+    srv = StructureServer(cfg, d)   # second recovery must see all six
+    assert srv.torn_segments == 0 and srv.recovered_records == 6
+    ref = _fold_reference(payloads, d=6)[0]
+    assert np.array_equal(np.asarray(ref.gram, np.float64),
+                          srv.table.gram[0])
+    assert int(srv.table.n[0]) == ref.n
+    assert int(srv.log.cursors[0, 0]) == 6
+    srv.close()
+
+
 # -- TenantTable batched folds ----------------------------------------------
 
 def _fold_reference(payloads, d, method="sign", rate=1):
@@ -178,7 +253,9 @@ def _fold_reference(payloads, d, method="sign", rate=1):
         sg = refs.setdefault(
             p.tenant, StreamingGram(d=d, method=method, rate=rate))
         if p.kind == "codes":
-            sg.update_codes(jnp.asarray(p.codes))
+            c = ((2 * p.codes.astype(np.int8) - 1).astype(np.int8)
+                 if p.bits else p.codes)
+            sg.update_codes(jnp.asarray(c))
         else:
             sg.update_packed(jnp.asarray(p.packed), p.n)
     return refs
@@ -247,6 +324,29 @@ def test_table_fold_persymbol(rng, rate):
         assert np.array_equal(t.gram, t3.gram)
 
 
+def test_table_sign_masked_zero_codes_drop_out(rng):
+    """A 0 inside a ±1 sign payload is a MASKED entry (e.g. a faulted
+    wire symbol): it must contribute nothing to the contraction — not
+    silently fold as -1."""
+    c = _codes(rng, n=12, d=6)
+    c[np.asarray(rng.random(c.shape) < 0.3)] = 0
+    assert (c == 0).any()
+    t = TenantTable(tenants=1, d=6, block_n=16)
+    t.fold([Payload(0, 0, 1, codes=c)])
+    want = c.astype(np.int64).T @ c.astype(np.int64)
+    assert np.array_equal(t.gram[0], want.astype(np.float64))
+    assert int(t.n[0]) == 12
+
+
+def test_table_bit_codes_fold_as_signs(rng):
+    """bits=True marks a {0,1} wire: 0 is a true -1, never a mask."""
+    bits = rng.integers(0, 2, size=(10, 6)).astype(np.int8)
+    t = TenantTable(tenants=1, d=6, block_n=16)
+    t.fold([Payload(0, 0, 1, codes=bits, bits=True)])
+    pm1 = 2 * bits.astype(np.int64) - 1
+    assert np.array_equal(t.gram[0], (pm1.T @ pm1).astype(np.float64))
+
+
 def test_table_rejects_bad_payloads(rng):
     t = TenantTable(tenants=2, d=6, block_n=16)
     with pytest.raises(ValueError):
@@ -255,6 +355,17 @@ def test_table_rejects_bad_payloads(rng):
         t.fold([Payload(5, 0, 1, codes=_codes(rng))])        # unknown tenant
     with pytest.raises(ValueError):
         t.fold([Payload(0, 0, 1, codes=_codes(rng, d=4))])   # wrong d
+    with pytest.raises(ValueError):                          # not a sign
+        t.fold([Payload(0, 0, 1, codes=np.full((4, 6), 2, np.int8))])
+    with pytest.raises(ValueError):                          # not a bit
+        t.fold([Payload(0, 0, 1, codes=-np.ones((4, 6), np.int8),
+                        bits=True)])
+    with pytest.raises(ValueError):                          # bits ∉ persymbol
+        TenantTable(tenants=1, d=6, method="persymbol", rate=2,
+                    block_n=16).fold(
+            [Payload(0, 0, 1, codes=np.ones((4, 6), np.int8), bits=True)])
+    with pytest.raises(ValueError):                          # bits ∉ packed
+        Payload(0, 0, 1, packed=np.zeros((6, 2), np.uint8), n=3, bits=True)
 
 
 def _corr_gram(corr, n):
@@ -299,6 +410,25 @@ def test_table_resolve_cadence():
     assert not t.needs_resolve().any()              # solved_n caught up
 
 
+def test_table_resolve_counts_exact_past_f32(rng):
+    """The solve normalizes Grams by the int64 counts in float64 on the
+    host: counts beyond 2^24 (where f32 rounds) must still solve to the
+    right structure, and two tenants encoding the IDENTICAL correlation
+    at counts that collide in f32 (2^24, 2^24 + 1) must agree — the
+    accumulators are designed to grow forever."""
+    d = 8
+    corr = _chain_corr(d)
+    t = TenantTable(tenants=2, d=d)
+    for slot, n in enumerate(((1 << 24), (1 << 24) + 1)):
+        t.gram[slot] = _corr_gram(corr, n)
+        t.n[slot] = n
+    t.resolve(np.arange(2))
+    i = np.arange(d)
+    chain = np.abs(i[:, None] - i[None, :]) == 1
+    assert np.array_equal(t.adj[0], chain)
+    assert np.array_equal(t.adj[1], chain)
+
+
 def test_table_degraded_tenant_solves_finite():
     t = TenantTable(tenants=1, d=4)
     t.n[0] = 1                                      # n_eff < 2: neutralized
@@ -327,6 +457,7 @@ def test_table_state_roundtrip_and_streaming_export(rng):
 # -- StructureServer end-to-end ----------------------------------------------
 
 _TCFG = TrafficConfig(tenants=5, machines=3, ticks=10, n=24, d=8,
+                      bit_fraction=0.25,   # exercise the {0,1} bits wire
                       p_duplicate=0.25, p_reorder=0.25, p_drop=0.1, seed=7)
 _SCFG = dict(tenants=5, machines=3, d=8, block_n=24, snapshot_every=3,
              reorder_ticks=2, keep_segments=2)
