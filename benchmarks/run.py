@@ -16,8 +16,8 @@ import time
 from . import (bigd, ext_glasso, faults, fig3_structure_error,
                fig56_crossover, fig7_star, fig8_rel_error,
                fig9_quality_quantity, fig1011_skeleton, ggm_comm,
-               ggm_roofline, gram_engine, kernel_throughput, roofline,
-               serve, sparse, trials)
+               ggm_roofline, gram_engine, kernel_throughput, path,
+               roofline, serve, sparse, trials)
 
 BENCHES = {
     "bigd": bigd.run,
@@ -33,6 +33,7 @@ BENCHES = {
     "faults": faults.run,
     "gram": gram_engine.run,
     "kernels": kernel_throughput.run,
+    "path": path.run,
     "roofline": roofline.run,
     "serve": serve.run,
     "sparse": sparse.run,
@@ -47,6 +48,7 @@ BENCH_FAULTS_JSON = os.path.join(_REPO_ROOT, "BENCH_faults.json")
 BENCH_BIGD_JSON = os.path.join(_REPO_ROOT, "BENCH_bigd.json")
 BENCH_ROOFLINE_JSON = os.path.join(_REPO_ROOT, "BENCH_roofline.json")
 BENCH_SERVE_JSON = os.path.join(_REPO_ROOT, "BENCH_serve.json")
+BENCH_PATH_JSON = os.path.join(_REPO_ROOT, "BENCH_path.json")
 
 
 def _write_slim(payload: dict, keys: tuple, path: str) -> str:
@@ -63,7 +65,8 @@ def write_bench_sparse(payload: dict, path: str = BENCH_SPARSE_JSON) -> str:
     and the parity / one-sync acceptance checks."""
     return _write_slim(payload, (
         "d", "lam", "density", "ns", "reps", "strategies", "glasso_tol",
-        "glasso_steps", "engine", "wire_parity", "rows", "checks"), path)
+        "glasso_steps", "engine", "wire_parity", "rows", "path",
+        "checks"), path)
 
 
 def write_bench_faults(payload: dict, path: str = BENCH_FAULTS_JSON) -> str:
@@ -112,6 +115,17 @@ def write_bench_serve(payload: dict, path: str = BENCH_SERVE_JSON) -> str:
         "tenants", "machines", "d", "block_n", "ticks", "ticks_per_s",
         "rows_per_s", "fold_p50_ms", "fold_p99_ms", "telemetry",
         "recovery", "checks"), path)
+
+
+def write_bench_path(payload: dict, path: str = BENCH_PATH_JSON) -> str:
+    """Persist the regularization-path artifact: fused-vs-per-lam sweep
+    timing, selected-support quality, per-lam early-exit iteration
+    telemetry, and the speedup / one-sync / oracle-selection checks."""
+    return _write_slim(payload, (
+        "d", "n", "batch", "lams", "n_steps", "conv_tol",
+        "baseline_seconds", "fused_seconds", "speedup", "host_syncs",
+        "f1_fused", "f1_baseline", "iters_total_fused",
+        "iters_total_baseline", "rows", "checks"), path)
 
 
 def write_bench_gram(payload: dict, path: str = BENCH_GRAM_JSON) -> str:
@@ -163,6 +177,8 @@ def main() -> int:
                 print("wrote", write_bench_roofline(result), flush=True)
             if name == "serve" and args.json:
                 print("wrote", write_bench_serve(result), flush=True)
+            if name == "path" and args.json:
+                print("wrote", write_bench_path(result), flush=True)
             checks = (result or {}).get("checks", {})
             bad = [k for k, v in checks.items() if not v]
             status = "PASS" if not bad else f"CHECKS-FAILED:{bad}"

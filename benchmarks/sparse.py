@@ -10,13 +10,23 @@ distributed wire mesh (``make_trial_mesh(2, model=4)``) and asserts the
 support metrics are BIT-IDENTICAL to the single-device engine — the
 sparse twin of the tree plane's parity gate.
 
-Checks: one host sync per sweep; wire-plane parity; 4-bit per-symbol
-F1 close to the unquantized baseline at the largest n (the §7
-conjecture); F1 monotone in rate; recovery improving with n.
+A PATH MODE rides along: the same plan re-runs with
+``path=PathPlan(...)`` — the fused warm-started lambda-grid engine with
+on-device EBIC selection — replacing the retired PR-5 pattern of sweeping
+lambda as S distinct strategy labels (each a cold full-budget re-solve).
+The per-lam ``Strategy(lam=...)`` labels keep working for fixed-penalty
+plans; the path block reports the SELECTED support's recovery next to
+the hand-tuned-lam rows.
+
+Checks: one host sync per sweep (fixed-lam AND path mode); wire-plane
+parity; 4-bit per-symbol F1 close to the unquantized baseline at the
+largest n (the §7 conjecture); F1 monotone in rate; recovery improving
+with n; path-selected F1 competitive with the hand-tuned penalty.
 Artifact: ``BENCH_sparse.json`` via ``benchmarks.run --only sparse --json``.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import subprocess
@@ -25,6 +35,7 @@ import sys
 import jax
 
 from repro.core.experiments import TrialPlan, clear_compile_caches, run_trials
+from repro.core.path import PathPlan
 from repro.core.strategy import Strategy
 
 from .common import save_artifact
@@ -35,6 +46,7 @@ STRATEGIES = (
     Strategy("persymbol", rate=4, structure="sparse", lam=LAM),
     Strategy("original", structure="sparse", lam=LAM),
 )
+PATH_PLAN = PathPlan(n_lams=6, lam_min_ratio=0.08)
 
 
 def _plan(ns: tuple[int, ...], reps: int) -> TrialPlan:
@@ -124,6 +136,28 @@ def run(quick: bool = False) -> dict:
           f"warm {warm.trials_per_s:7.1f}/s ({warm.seconds:.2f}s)  "
           f"syncs/sweep={warm.host_syncs}", flush=True)
 
+    # ---- path mode: the fused lambda-grid engine replaces hand-tuned
+    # per-label lam sweeps — EBIC-selected support, same one-sync contract
+    pplan = dataclasses.replace(plan, path=PATH_PLAN)
+    run_trials(pplan)  # cold: compiles
+    with jax.transfer_guard_device_to_host("disallow"):
+        pres = run_trials(pplan)
+    path_rows = []
+    for i, n in enumerate(ns):
+        row = {"n": n}
+        for s in STRATEGIES:
+            lab = s.label
+            row[lab] = {"f1": pres.edge_f1[lab][i],
+                        "iters": pres.path["iters"][lab][i],
+                        "selected_hist": pres.path["selected_hist"][lab][i]}
+        path_rows.append(row)
+        print(f"path   n={n:<6} " + "  ".join(
+            f"{s.label}: sel-f1={row[s.label]['f1']:.3f}"
+            for s in STRATEGIES), flush=True)
+    print(f"path engine: k={pres.path['k']} grid  "
+          f"{pres.trials_per_s:7.1f} trials/s  "
+          f"syncs/sweep={pres.host_syncs}", flush=True)
+
     parity = None
     if jax.default_backend() == "cpu":
         parity = _wire_parity_subprocess(ns[:2], reps)
@@ -146,6 +180,11 @@ def run(quick: bool = False) -> dict:
         "f1_improves_with_n": rows[-1][r4_lab]["f1"]
         >= rows[0][r4_lab]["f1"] - 0.05,
         "original_good": last[orig_lab]["f1"] > 0.85,
+        # the path engine keeps the engine contract and its EBIC-selected
+        # support competes with the hand-tuned penalty at the largest n
+        "path_one_sync_per_sweep": pres.host_syncs == 1,
+        "path_selected_competitive": path_rows[-1][orig_lab]["f1"]
+        >= last[orig_lab]["f1"] - 0.10,
     }
     if jax.default_backend() == "cpu":
         # on CPU the parity subprocess is EXPECTED to run: a crashed or
@@ -163,7 +202,10 @@ def run(quick: bool = False) -> dict:
             "warm_trials_per_s": warm.trials_per_s,
             "host_syncs": warm.host_syncs,
         },
-        "wire_parity": parity, "rows": rows, "checks": checks,
+        "wire_parity": parity, "rows": rows,
+        "path": {"k": pres.path["k"], "select": pres.path["select"],
+                 "rows": path_rows},
+        "checks": checks,
     }
     save_artifact("sparse_trials", payload)
     return payload

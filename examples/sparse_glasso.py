@@ -14,6 +14,14 @@ first-class Monte-Carlo scenario:
   * support recovery is scored by integer-exact channels — precision,
     recall and micro-F1 come out exactly — with ONE host sync per sweep.
 
+No hand-tuned penalty is needed: the plan declares a ``PathPlan`` and the
+fused regularization-path engine solves a warm-started decreasing lambda
+grid in ONE launch (carrying theta + its eigendecomposition between lams,
+early-exiting each lam on convergence) and EBIC-selects the support on
+device. The fixed-``lam`` strategy labels from earlier revisions keep
+working for fixed-penalty plans — this example runs both and prints the
+selected-lam telemetry next to the hand-tuned rows.
+
 With >= 2 local devices the same plan runs on the distributed wire mesh
 (features sharded over "model": each rank quantizes its slice and the
 payload crosses the paper's actual all-gather), with metrics bit-identical
@@ -22,12 +30,15 @@ to the single-device engine:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
       PYTHONPATH=src python examples/sparse_glasso.py
 """
+import dataclasses
+
 import jax
 
 from repro.core.experiments import TrialPlan, run_trials
+from repro.core.path import PathPlan
 from repro.core.strategy import Strategy
 
-LAM = 0.06
+LAM = 0.06  # the hand-tuned baseline the path engine competes with
 
 
 def main():
@@ -74,6 +85,28 @@ def main():
     print("\nFew-bit glasso tracks the unquantized baseline (the §7 "
           "conjecture): R4 within a few F1 points of 'original' at the "
           "largest n, at 1/8 the float32 wire bytes.")
+
+    # ---- the regularization-path engine: no hand-tuned lam ------------
+    pplan = dataclasses.replace(plan, path=PathPlan(n_lams=6,
+                                                    lam_min_ratio=0.08))
+    pres = run_trials(pplan, mesh=mesh)
+    print(f"\npath engine (k={pres.path['k']} warm-started lams, "
+          f"{pres.path['select']}-selected, {pres.host_syncs} host sync):")
+    print(f"{'strategy':<22} " + " ".join(f"{'selF1@' + str(n):>10}"
+                                          for n in plan.ns))
+    for s in plan.strategies:
+        lab = s.label
+        print(f"{lab:<22} " + " ".join(
+            f"{v:10.3f}" for v in pres.edge_f1[lab]))
+    lab = plan.strategies[-1].label
+    iters = pres.path["iters"][lab][-1]
+    grid = pres.path["lams"][lab][-1]
+    print(f"\nwarm-start telemetry ({lab}, n={plan.ns[-1]}): mean solver "
+          "iterations per lam")
+    for lam, it in zip(grid, iters):
+        print(f"  lam={lam:6.3f}  iters={it:6.1f} / {pplan.glasso_steps}")
+    print("\nThe EBIC-selected support matches the hand-tuned penalty "
+          "without choosing lam — one fused launch, one host sync.")
 
 
 if __name__ == "__main__":

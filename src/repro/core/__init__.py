@@ -4,12 +4,13 @@ Faithful implementation of Tavassolipour, Motahari & Manzuri-Shalmani,
 "Learning of Tree-Structured Gaussian Graphical Models on Distributed Data
 under Communication Constraints", IEEE TSP 2018.
 """
-from . import bounds, chow_liu, distributed, estimators, experiments, faults, glasso, gram, quantizers, sampler, strategy, streaming, trees  # noqa: F401
+from . import bounds, chow_liu, distributed, estimators, experiments, faults, glasso, gram, path, quantizers, sampler, strategy, streaming, trees  # noqa: F401
 from .chow_liu import boruvka_mst, chow_liu as mwst, kruskal_forest, kruskal_mst, learn_structure, learn_structure_jit  # noqa: F401
 from .distributed import CommReport, WirePlan  # noqa: F401
 from .faults import FaultPlan  # noqa: F401
 from .experiments import TrialPlan, TrialResult, evaluate_strategies, run_trials, sparse_ground_truth  # noqa: F401
 from .glasso import glasso as graphical_lasso, learn_sparse_structure  # noqa: F401
+from .path import PathPlan, glasso_path_batch, glasso_path_select  # noqa: F401
 from .gram import (GramConfig, GramEngine, default_engine,  # noqa: F401
                    default_memory_budget, gram_working_set_bytes,
                    set_default_engine)

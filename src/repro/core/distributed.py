@@ -68,6 +68,7 @@ from . import estimators, glasso
 from .chow_liu import boruvka_mst
 from .glasso import DEFAULT_STEPS as GLASSO_STEPS
 from .gram import GramEngine
+from .path import PathPlan, glasso_path_select
 from .strategy import Strategy
 
 
@@ -174,6 +175,13 @@ class WirePlan:
     #: ISTA iteration budget of the central glasso solve (sparse
     #: structures only; tree strategies never read it)
     glasso_steps: int = GLASSO_STEPS
+    #: optional regularization-path plan (``core.path.PathPlan``, sparse
+    #: strategies only): :meth:`central` solves the warm-started lambda
+    #: grid in one fused launch after the gather and returns the
+    #: MODEL-SELECTED precision matrix (EBIC per trial; StARS treats a
+    #: leading batch axis as the subsample batch) instead of solving the
+    #: strategy's fixed ``lam``. ``None`` = the fixed-penalty solve.
+    path: PathPlan | None = None
 
     # ---- stage 1: local encoding, R bits/symbol (paper step 1) ----------
 
@@ -288,6 +296,16 @@ class WirePlan:
             n = estimators.effective_counts(n_rows)
         if s.structure == "sparse":
             corr = estimators.corr_from_gram(gram, n, s)
+            if self.path is not None:
+                # path mode: one fused warm-started grid scan + on-device
+                # selection — the center returns the SELECTED precision.
+                # EBIC's likelihood scale is the sample count; under the
+                # fault plane's per-entry effective counts, its mean is
+                # the honest scalar stand-in.
+                n_eff = jnp.mean(jnp.asarray(n, jnp.float32))
+                theta, _, _ = glasso_path_select(
+                    corr, self.path, n_eff, n_steps=self.glasso_steps)
+                return theta
             solve = glasso.glasso_batch if corr.ndim == 3 else glasso.glasso
             return solve(corr, s.lam, n_steps=self.glasso_steps)
         return estimators.weights_from_gram(gram, n, s)
@@ -338,6 +356,7 @@ class WirePlan:
         n_rows: jax.Array | None = None,
         n_rows_own: jax.Array | None = None,
         own_payload: jax.Array | None = None,
+        data_sharded: bool = False,
     ) -> jax.Array:
         """The center's PRE-SOLVE statistic for a sparse strategy: Gram on
         the gathered payload + ``estimators.corr_from_gram`` (arcsine
@@ -350,13 +369,17 @@ class WirePlan:
         are compilation-context-sensitive — so ``run_trials`` gathers
         these statistics and runs the solve+metric stage through the SAME
         single-device executable as the mesh-less engine, which is what
-        makes the sparse parity gate bit-exact.
+        makes the sparse parity gate bit-exact. The path-mode wire
+        runtime (:meth:`local_corr`) ends here too, for the same reason
+        — plus the path engine's masked ``while_loop`` has no shard_map
+        replication rule, so the fused grid scan must run outside.
         """
         s = self.strategy
         assert s.structure == "sparse", "central_corr is the sparse center"
         gram = self._assemble_gram(payload_full, n_valid=n_valid,
                                    n_rows=n_rows, n_rows_own=n_rows_own,
-                                   own_payload=own_payload)
+                                   own_payload=own_payload,
+                                   data_sharded=data_sharded)
         if n_rows is not None:
             n = estimators.effective_counts(n_rows)
         return estimators.corr_from_gram(gram, n, s)
@@ -371,6 +394,19 @@ class WirePlan:
         payload = self.encode(x_loc)
         full = self.wire(payload)
         return self.central(full, n, own_payload=payload, data_sharded=True)
+
+    def local_corr(self, x_loc: jax.Array) -> jax.Array:
+        """The path-mode shard_map body: the same stage chain as
+        :meth:`local_weights` but ending at the replicated correlation
+        statistic (:meth:`central_corr`). :func:`build_weights_fn` runs
+        the warm-started path solve OUTSIDE the shard_map on this output
+        — the statistic is bit-stable across shardings, so the selected
+        structure is automatically mesh-parity-exact."""
+        n = x_loc.shape[0] * jax.lax.axis_size(self.data_axis)
+        payload = self.encode(x_loc)
+        full = self.wire(payload)
+        return self.central_corr(full, n, own_payload=payload,
+                                 data_sharded=True)
 
     def comm_report(self, n: int, d: int, *,
                     n_pad: int | None = None) -> CommReport:
@@ -404,10 +440,13 @@ def build_weights_fn(
     wire: Literal["int8", "packed", "float32"] = "int8",
     engine: GramEngine | None = None,
     glasso_steps: int = GLASSO_STEPS,
+    path: PathPlan | None = None,
 ):
     """shard_map pipeline (n, d) samples -> (d, d) central estimate
     (Chow-Liu weights, or the glasso precision for a sparse strategy —
-    ``glasso_steps`` sets that solve's ISTA budget).
+    ``glasso_steps`` sets that solve's ISTA budget; ``path`` swaps the
+    fixed-penalty solve for the warm-started regularization-path engine
+    with on-device EBIC selection, returning the selected precision).
 
     ``strategy`` (a :class:`~repro.core.strategy.Strategy`) is the
     declarative form of the loose ``method``/``rate``/``compute``/``wire``
@@ -433,16 +472,34 @@ def build_weights_fn(
     default, which auto-selects per platform).
     """
     strat = _as_wire_strategy(strategy, method, rate, compute, wire)
+    if path is not None and strat.structure != "sparse":
+        raise ValueError(
+            "path= is the sparse plane's regularization-path engine; "
+            "tree strategies have no penalty to select")
     plan = WirePlan(strat, data_axis=data_axis, model_axis=model_axis,
-                    engine=engine, glasso_steps=glasso_steps)
+                    engine=engine, glasso_steps=glasso_steps, path=path)
     in_spec = P(data_axis, model_axis)
-    return jax.shard_map(
-        plan.local_weights,
+    inner = jax.shard_map(
+        plan.local_corr if path is not None else plan.local_weights,
         mesh=mesh,
         in_specs=(in_spec,),
         out_specs=P(),
         check_vma=(strat.placement != "rowblock"),
-    ), NamedSharding(mesh, in_spec)
+    )
+    if path is not None:
+        # the path engine's masked while_loop has no shard_map replication
+        # rule; the shard_map ends at the (replicated, sharding-bit-stable)
+        # correlation statistic and the fused grid scan + EBIC selection
+        # run on top — selected structure is mesh-parity-exact for free.
+        def fused_path(x):
+            corr = inner(x)
+            theta, _, _ = glasso_path_select(
+                corr, path, jnp.asarray(x.shape[0], jnp.float32),
+                n_steps=glasso_steps)
+            return theta
+
+        return fused_path, NamedSharding(mesh, in_spec)
+    return inner, NamedSharding(mesh, in_spec)
 
 
 def distributed_weights(
@@ -458,9 +515,11 @@ def distributed_weights(
     wire: Literal["int8", "packed", "float32"] = "int8",
     engine: GramEngine | None = None,
     glasso_steps: int = GLASSO_STEPS,
+    path: PathPlan | None = None,
 ) -> jax.Array:
     """Central estimate from vertically-sharded data: the Chow-Liu weight
-    matrix, or the glasso precision matrix for a sparse strategy.
+    matrix, or the glasso precision matrix for a sparse strategy (the
+    path-selected one under ``path=``).
 
     Args:
       x: (n, d) samples; will be placed as P(data_axis, model_axis) — each
@@ -472,7 +531,7 @@ def distributed_weights(
     fn, sharding = build_weights_fn(
         mesh, strategy=strategy, method=method, rate=rate,
         data_axis=data_axis, model_axis=model_axis, compute=compute,
-        wire=wire, engine=engine, glasso_steps=glasso_steps)
+        wire=wire, engine=engine, glasso_steps=glasso_steps, path=path)
     x = jax.device_put(x, sharding)
     return jax.jit(fn)(x)
 
@@ -492,7 +551,10 @@ def distributed_learn_structure(
     Tree strategies return the Chow-Liu MWST edges; sparse strategies
     (``strategy.structure == 'sparse'``) return the glasso support edges
     (``glasso.support`` with ``kw['tol']`` if given — the central estimate
-    from the wire runtime is the precision matrix itself).
+    from the wire runtime is the precision matrix itself). Passing
+    ``path=PathPlan(...)`` in ``kw`` routes the central solve through the
+    warm-started regularization-path engine, so the returned edges are
+    the EBIC-SELECTED structure — no caller-chosen penalty needed.
 
     The MWST solver comes from ``backend`` if given, else
     ``strategy.mst``, else the on-device Boruvka default.

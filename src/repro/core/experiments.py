@@ -87,6 +87,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from . import estimators, glasso, sampler, trees
+from . import path as path_engine
+from .path import PathPlan
 from .chow_liu import boruvka_mst_batch, kruskal_mst
 from .distributed import CommReport, WirePlan
 from .faults import FaultPlan, fault_trial_keys
@@ -173,6 +175,15 @@ class TrialPlan:
     #: HBM limit (``gram.default_memory_budget``). Every budget adaptation
     #: is a deterministic function of the plan, so mesh parity holds.
     memory_budget_bytes: int | None = None
+    #: optional regularization-path plan (``core.path.PathPlan``, sparse
+    #: plans only): the solve stage becomes ONE warm-started fused grid
+    #: scan per sweep point (``path.glasso_path_batch``) with on-device
+    #: EBIC/StARS model selection — the headline metrics score the
+    #: SELECTED support per trial, the full path's per-lam channels ride
+    #: the same single host sync onto ``TrialResult.path``, and the
+    #: strategies' per-label ``lam`` values are ignored (the grid comes
+    #: from the plan). ``None`` = the fixed-penalty solve stage.
+    path: PathPlan | None = None
 
     def __post_init__(self):
         if self.tree not in TREE_KINDS + SPARSE_KINDS:
@@ -217,6 +228,14 @@ class TrialPlan:
             raise ValueError(
                 f"memory_budget_bytes must be positive, "
                 f"got {self.memory_budget_bytes}")
+        if self.path is not None:
+            if not isinstance(self.path, PathPlan):
+                raise TypeError(
+                    f"path must be a PathPlan, got {type(self.path)!r}")
+            if self.tree not in SPARSE_KINDS:
+                raise ValueError(
+                    "path plans ride the sparse plane: TrialPlan(path=...) "
+                    "requires tree='sparse' + sparse strategies")
 
     @property
     def effective_memory_budget(self) -> int:
@@ -316,6 +335,10 @@ class TrialPlan:
         are independent)."""
         trials = len(self.strategies) * self.reps
         per_trial = 40 * self.d * self.d  # ~10 f32 (d, d) planes
+        if self.path is not None:
+            # a path solve additionally materializes K per-lam (d, d)
+            # bool supports per trial on top of the solver transients
+            per_trial = (40 + self.path.k) * self.d * self.d
         budget = self.effective_memory_budget // 2
         if trials * per_trial <= budget:
             return None
@@ -395,6 +418,16 @@ class TrialResult:
     #: actually ran with (None values = monolithic). Empty for paths that
     #: predate the budget plumbing.
     tiling: dict = dataclasses.field(default_factory=dict)
+    #: path plans only (``plan.path``): full-grid telemetry that rode the
+    #: same single host sync as the selected-support metrics —
+    #: ``{"select", "k", "lams" (label -> per-n mean grids),
+    #: "error_rate" / "edge_f1" (label -> per-n per-lam curves),
+    #: "iters" (label -> per-n mean solver iterations per lam — the
+    #: warm-start early-exit savings made visible),
+    #: "selected_hist" (label -> per-n selection counts per lam)}``.
+    #: The headline ``error_rate``/``edge_f1``/... score the SELECTED
+    #: support per trial. ``None`` for fixed-penalty plans.
+    path: dict | None = None
 
     @property
     def trials_per_s(self) -> float:
@@ -755,6 +788,68 @@ def _sparse_metrics_fn(lams: tuple, tol: float, n_steps: int,
 
 
 @functools.lru_cache(maxsize=None)
+def _sparse_path_metrics_fn(path: PathPlan, tol: float, n_steps: int,
+                            chunk: int | None = None):
+    """jit: (S, reps, d, d) correlation statistics + true supports +
+    ``n_valid`` -> the path plane's device-resident metric bundle.
+
+    The solve stage is ONE warm-started fused grid scan over the whole
+    (S*reps, d, d) stack (``path.glasso_path_batch`` — same ``chunk``
+    slab streaming as ``glasso_batch``), followed by on-device model
+    selection (EBIC per trial, or StARS per strategy with the rep axis as
+    the subsample batch). Everything returned is a SUM of integer-valued
+    f32 channels over the rep axis — exact under any reduction order, so
+    mesh-gathered statistics reproduce single-device results bit for bit
+    (the sparse parity contract) — and the whole bundle rides the sweep's
+    single host sync:
+
+      * selected  (S, 5)    selected-support channel sums (the headline)
+      * per_lam   (S, K, 5) full-path channel sums per lam
+      * iters     (S, K)    solver-iteration sums (early-exit telemetry)
+      * hist      (S, K)    selected-lam counts
+      * lam_sums  (S, K)    grid sums (mean grid after /reps — derived
+                            grids vary per trial statistic)
+    """
+
+    def f(corr, adj_true, n_valid):
+        S_, r, d, _ = corr.shape
+        flat = corr.reshape(S_ * r, d, d)
+        lams = path_engine.path_lambdas(path, flat)          # (S*r, K)
+        K = lams.shape[-1]
+        solve = path_engine.glasso_path_batch(
+            flat, lams, n_steps=n_steps, conv_tol=path.conv_tol,
+            support_tol=tol, chunk=chunk)
+        sup = solve.support.reshape(K, S_, r, d, d)
+        ch = _support_metric_channels(sup, adj_true[None, None])  # (K,S,r,5)
+        per_lam = jnp.swapaxes(ch.sum(axis=2), 0, 1)         # (S, K, 5)
+        if path.select == "ebic":
+            scores = path_engine.ebic_scores(
+                solve.logdet, solve.tr_s_theta, solve.edges,
+                n_valid, d, path.ebic_gamma)                 # (K, S*r)
+            idx = path_engine.select_ebic(scores)            # (S*r,)
+        else:
+            # strategies select independently; their reps are the
+            # StARS subsample batch
+            xi = jax.vmap(path_engine.stars_instability,
+                          in_axes=1, out_axes=1)(sup)        # (K, S)
+            idx = jnp.repeat(
+                path_engine.select_stars(xi, path.stars_beta), r)
+        chf = ch.reshape(K, S_ * r, 5)
+        sel = jnp.take_along_axis(
+            chf, idx[None, :, None], axis=0)[0]              # (S*r, 5)
+        selected = sel.reshape(S_, r, 5).sum(axis=1)         # (S, 5)
+        hist = jax.nn.one_hot(idx, K, dtype=jnp.float32).reshape(
+            S_, r, K).sum(axis=1)                            # (S, K)
+        iters = jnp.swapaxes(
+            solve.iters.reshape(K, S_, r).sum(axis=2), 0, 1) # (S, K)
+        lam_sums = lams.reshape(S_, r, K).sum(axis=1)        # (S, K)
+        return (selected, per_lam, iters.astype(jnp.float32), hist,
+                lam_sums)
+
+    return jax.jit(f)
+
+
+@functools.lru_cache(maxsize=None)
 def _sparse_sharded_corr_fn(
     strategies: tuple[Strategy, ...],
     n_pad: int,
@@ -1065,8 +1160,9 @@ def _wire_point_fn(
 def _compile_caches():
     return (_plan_setup, _weights_stage, _mst_metrics_fn, _sharded_point_fn,
             _wire_point_fn, _sparse_plan_setup, _corr_stage,
-            _sparse_metrics_fn, _sparse_sharded_corr_fn,
-            _sparse_wire_corr_fn, _crossover_fn, _corr_err_fn)
+            _sparse_metrics_fn, _sparse_path_metrics_fn,
+            _sparse_sharded_corr_fn, _sparse_wire_corr_fn, _crossover_fn,
+            _corr_err_fn)
 
 
 def compile_cache_size() -> int:
@@ -1160,6 +1256,36 @@ def _fault_stats(plan: TrialPlan,
     return stats
 
 
+def _path_stats(plan: TrialPlan, extras: tuple | None) -> dict | None:
+    """Host packaging of the path plane's full-grid telemetry sums
+    (per_lam, iters, hist, lam_sums — each (S, len(ns), K, ...)) into the
+    ``TrialResult.path`` dict. Ratios of integer-exact channel sums, same
+    arithmetic as the headline metrics."""
+    if extras is None:
+        return None
+    per_lam, iters, hist, lam_sums = (np.asarray(e) for e in extras)
+    reps = np.float32(plan.reps)
+    labels = [s.label for s in plan.strategies]
+
+    def _grid_cols(a: np.ndarray) -> dict[str, list[list[float]]]:
+        # a: (S, len(ns), K) -> label -> per-n list of per-lam values
+        return {lab: [[float(v) for v in row] for row in a[i]]
+                for i, lab in enumerate(labels)}
+
+    shared, n_est, n_true = (per_lam[:, :, :, 2], per_lam[:, :, :, 3],
+                             per_lam[:, :, :, 4])
+    return {
+        "select": plan.path.select,
+        "k": plan.path.k,
+        "lams": _grid_cols(lam_sums / reps),
+        "error_rate": _grid_cols(per_lam[:, :, :, 0] / reps),
+        "edge_f1": _grid_cols(
+            2.0 * shared / np.maximum(n_est + n_true, np.float32(1e-9))),
+        "iters": _grid_cols(iters / reps),
+        "selected_hist": _grid_cols(hist),
+    }
+
+
 def _package_result(
     plan: TrialPlan,
     m: np.ndarray,
@@ -1170,6 +1296,7 @@ def _package_result(
     mesh_devices: int,
     faults: list[dict] | None = None,
     tiling: dict | None = None,
+    path_telemetry: dict | None = None,
 ) -> TrialResult:
     """Mean-metric tensor -> TrialResult; shared by every engine path so
     the f32 arithmetic of the derived metrics is identical everywhere.
@@ -1206,7 +1333,8 @@ def _package_result(
         edge_f1=edge_f1, precision=precision, recall=recall,
         seconds=seconds, host_syncs=host_syncs, comm=comm,
         buckets=plan.buckets, compile_cache_size=compile_cache_size(),
-        mesh_devices=mesh_devices, faults=faults, tiling=tiling or {})
+        mesh_devices=mesh_devices, faults=faults, tiling=tiling or {},
+        path=path_telemetry)
 
 
 def _host_kruskal_trials(
@@ -1403,15 +1531,22 @@ def run_trials(
     #: (bucket, n) -> (thread, [stage output]) from the cross-bucket
     #: compile-overlap threads; the main loop reuses these results
     prewarmed: dict[tuple[int, int], tuple[threading.Thread, list]] = {}
+    path_mode = sparse and plan.path is not None
     if sparse:
         # the glasso solve + support metric stage runs on ONE device even
         # under a mesh (the mesh parallelizes sampling, quantization, Gram
         # and the wire collectives; the statistics are gathered with a
         # device_put — not a host sync — and solved through the same
         # compiled executable as the mesh-less engine, which is what makes
-        # mesh metrics bit-identical)
-        metrics_fn = _sparse_metrics_fn(
-            lams, plan.glasso_tol, plan.glasso_steps, chunk)
+        # mesh metrics bit-identical). Path plans swap in the warm-started
+        # fused grid scan + on-device model selection; the corr stages are
+        # untouched, so the mesh parity contract carries over unchanged.
+        if path_mode:
+            metrics_fn = _sparse_path_metrics_fn(
+                plan.path, plan.glasso_tol, plan.glasso_steps, chunk)
+        else:
+            metrics_fn = _sparse_metrics_fn(
+                lams, plan.glasso_tol, plan.glasso_steps, chunk)
     warm_thread = None
     if mesh is not None:
         key_data = jax.random.key_data(keys)
@@ -1419,11 +1554,14 @@ def run_trials(
                      else (jax.random.key_data(fkeys),))
     else:
         if sparse:
-            shape_key = (lams, plan.glasso_tol, plan.glasso_steps,
+            shape_key = (plan.path if path_mode else lams,
+                         plan.glasso_tol, plan.glasso_steps,
                          plan.reps, plan.d, chunk)
             dummy = (jnp.zeros((len(lams), plan.reps, plan.d, plan.d),
                                jnp.float32),
                      jnp.zeros((plan.reps, plan.d, plan.d), jnp.bool_))
+            if path_mode:
+                dummy = dummy + (jnp.asarray(plan.ns[0], jnp.int32),)
         else:
             metrics_fn = _mst_metrics_fn(chunk)
             shape_key = (len(plan.strategies), plan.reps, plan.d, chunk)
@@ -1490,7 +1628,9 @@ def run_trials(
             if warm_thread is not None:
                 warm_thread.join()
                 warm_thread = None
-            point_sums.append(metrics_fn(w, adj_true))
+            point_sums.append(
+                metrics_fn(w, adj_true, n_valid) if path_mode
+                else metrics_fn(w, adj_true))
         elif sparse:
             corr_fn = (
                 _sparse_wire_corr_fn(
@@ -1510,7 +1650,9 @@ def run_trials(
             # copy, NOT a host sync) so the solve+metric executable is the
             # single-device one — bit-identical results by construction
             corr = jax.device_put(corr, jax.devices()[0])
-            point_sums.append(metrics_fn(corr, adj_true))
+            point_sums.append(
+                metrics_fn(corr, adj_true, n_valid) if path_mode
+                else metrics_fn(corr, adj_true))
         else:
             point_fn = (
                 _wire_point_fn(
@@ -1534,13 +1676,24 @@ def run_trials(
     # device_get sneaking back in shows up as host_syncs > 1. The fault
     # telemetry stacks ride the SAME read-back.
     syncs = 0
-    means = jnp.stack(point_sums, axis=1) / plan.reps
+    if path_mode:
+        # the selected-support sums are the headline channels; the full
+        # path's per-lam channel / iteration / selection-histogram / grid
+        # sums ride the SAME single read-back as extra leaves
+        means = jnp.stack([p[0] for p in point_sums], axis=1) / plan.reps
+        extras = tuple(
+            jnp.stack([p[i] for p in point_sums], axis=1)
+            for i in range(1, 5))
+    else:
+        means = jnp.stack(point_sums, axis=1) / plan.reps
+        extras = None
+    bundle = (means, extras)
     if faults is None:
-        m = jax.device_get(jax.block_until_ready(means))
+        m, host_extras = jax.device_get(jax.block_until_ready(bundle))
         fsums = None
     else:
-        m, fsums = jax.device_get(jax.block_until_ready(
-            (means, jnp.stack(fault_sums))))
+        (m, host_extras), fsums = jax.device_get(jax.block_until_ready(
+            (bundle, jnp.stack(fault_sums))))
     syncs += 1
     seconds = time.perf_counter() - t0
 
@@ -1552,7 +1705,8 @@ def run_trials(
         faults=_fault_stats(plan, fsums),
         tiling={"memory_budget_bytes": plan.effective_memory_budget,
                 "d_tile": engine.d_tile, "n_chunk": engine.n_chunk,
-                "metrics_chunk": chunk})
+                "metrics_chunk": chunk},
+        path_telemetry=_path_stats(plan, host_extras))
 
 
 # --------------------------------------------------------------------------

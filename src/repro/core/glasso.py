@@ -87,35 +87,65 @@ def _objective(w_theta, theta, S, lam, off):
             + lam * jnp.sum(jnp.where(off, jnp.abs(theta), 0.0)))
 
 
-def _glasso_solve(
-    S: jax.Array, lam: jax.Array, n_steps: int, step_scale: float, eps: float
-) -> jax.Array:
-    """One (d, d) monotone ISTA solve (trace body of glasso/glasso_batch)."""
-    d = S.shape[0]
-    S = (S + S.T) / 2.0
-    off = ~jnp.eye(d, dtype=bool)
+def _carry_init(S: jax.Array, lam: jax.Array, step_scale: float, eps: float):
+    """Shared ISTA start point for :func:`_glasso_run`.
 
-    # init Theta0 = inv(S + 0.5 I) through the eigendecomposition (floored
-    # so the init is PSD and its logdet finite even on an un-repaired
-    # indefinite S), and a step guess from the initial conditioning: the
-    # gradient of -logdet(Theta) + tr(S Theta) is S - Theta^{-1}, whose
-    # curvature on the iterate path is bounded by 1/eigmin(Theta)^2 — the
-    # guess can overshoot, which is what the halve-on-increase guard below
-    # repairs.
+    Init Theta0 = inv(S + 0.5 I) through the eigendecomposition (floored
+    so the init is PSD and its logdet finite even on an un-repaired
+    indefinite S), and a step guess from the initial conditioning: the
+    gradient of -logdet(Theta) + tr(S Theta) is S - Theta^{-1}, whose
+    curvature on the iterate path is bounded by 1/eigmin(Theta)^2 — the
+    guess can overshoot, which is what the halve-on-increase guard in the
+    run loop repairs. ``eta0`` depends only on S, so the path engine
+    reuses it across every lam of a grid.
+    """
+    d = S.shape[0]
+    off = ~jnp.eye(d, dtype=bool)
     ws, v0 = jnp.linalg.eigh(S + 0.5 * jnp.eye(d))
     w0 = jnp.maximum(1.0 / jnp.maximum(ws, eps), eps)
     theta0 = (v0 * w0) @ v0.T
     eta0 = step_scale * (1.0 / jnp.linalg.norm(S + jnp.eye(d), 2)) ** 2
     obj0 = _objective(w0, theta0, S, lam, off)
+    return theta0, w0, v0, eta0, obj0
 
-    # The iterate travels as (theta, w, v) with theta == (v * w) @ v.T:
-    # the gradient's Theta^{-1} is reconstructed from the carried
-    # eigendecomposition ((v / w) @ v.T) instead of an LU inverse —
-    # cheaper, and bit-stable under batching (jnp.linalg.inv is the one
-    # primitive whose low-order bits vary with the vmapped batch size,
-    # which would break the trial plane's 1-vs-N-device parity gate).
-    def body(_, carry):
-        theta, w, v, eta, obj = carry
+
+def _glasso_run(
+    theta: jax.Array, w: jax.Array, v: jax.Array, eta, obj,
+    S: jax.Array, lam: jax.Array, n_steps: int, eps: float,
+    conv_tol: float = 0.0, active=None,
+):
+    """Masked monotone-ISTA run from a given iterate (theta, w, v).
+
+    The iterate travels as (theta, w, v) with theta == (v * w) @ v.T:
+    the gradient's Theta^{-1} is reconstructed from the carried
+    eigendecomposition ((v / w) @ v.T) instead of an LU inverse —
+    cheaper, and bit-stable under batching (jnp.linalg.inv is the one
+    primitive whose low-order bits vary with the vmapped batch size,
+    which would break the trial plane's 1-vs-N-device parity gate).
+
+    The ``fori_loop`` of the original solver is now a ``while``-style step
+    budget: the loop runs until ``n_steps`` OR until the solve converges
+    (an ACCEPTED step moved theta by at most ``conv_tol`` in max-abs — a
+    REJECTED step leaves theta unchanged and must not count as
+    convergence). Once converged the whole carry is frozen, so an early
+    exit is bit-identical to running the loop to any larger budget.
+    ``conv_tol=0.0`` never converges and reproduces the fixed-budget
+    solver exactly. ``active=False`` marks a lane (a pow2/chunk pad slot)
+    done before step 0, so padding stops burning solver iterations.
+
+    Returns ``(theta, w, v, iters)`` with ``iters`` the number of loop
+    steps actually spent (early-exit telemetry; pads report 0).
+    """
+    d = S.shape[0]
+    off = ~jnp.eye(d, dtype=bool)
+    done0 = jnp.asarray(False) if active is None else jnp.logical_not(active)
+
+    def cond(carry):
+        _, _, _, _, _, it, done = carry
+        return jnp.logical_and(it < n_steps, jnp.logical_not(done))
+
+    def body(carry):
+        theta, w, v, eta, obj, it, done = carry
         g = S - (v / w) @ v.T
         z = theta - eta * g
         z = jnp.where(off, soft_threshold(z, eta * lam), z)
@@ -129,20 +159,44 @@ def _glasso_solve(
         # the step overshot the local curvature — reject it and halve eta
         # (float-noise slack so a converged iterate is not rejected)
         ok = obj_z <= obj + 1e-6
-        theta = jnp.where(ok, z, theta)
-        w = jnp.where(ok, wz, w)
-        v = jnp.where(ok, vz, v)
-        obj = jnp.where(ok, obj_z, obj)
-        eta = jnp.where(ok, eta, eta / 2.0)
-        return theta, w, v, eta, obj
+        upd = jnp.logical_and(ok, jnp.logical_not(done))
+        # the convergence delta compares the accepted candidate against
+        # the iterate it replaces, BEFORE the selects overwrite theta
+        if conv_tol > 0.0:
+            conv = jnp.logical_and(
+                upd, jnp.max(jnp.abs(z - theta)) <= conv_tol)
+        else:
+            conv = jnp.asarray(False)
+        theta = jnp.where(upd, z, theta)
+        w = jnp.where(upd, wz, w)
+        v = jnp.where(upd, vz, v)
+        obj = jnp.where(upd, obj_z, obj)
+        eta = jnp.where(done, eta, jnp.where(ok, eta, eta / 2.0))
+        it = it + jnp.where(done, 0, 1)
+        done = jnp.logical_or(done, conv)
+        return theta, w, v, eta, obj, it, done
 
-    theta, _, _, _, _ = jax.lax.fori_loop(
-        0, n_steps, body, (theta0, w0, v0, eta0, obj0))
+    theta, w, v, _, _, iters, _ = jax.lax.while_loop(
+        cond, body,
+        (theta, w, v, eta, obj, jnp.asarray(0, jnp.int32), done0))
+    return theta, w, v, iters
+
+
+def _glasso_solve(
+    S: jax.Array, lam: jax.Array, n_steps: int, step_scale: float,
+    eps: float, conv_tol: float = 0.0, active=None,
+) -> jax.Array:
+    """One (d, d) monotone ISTA solve (trace body of glasso/glasso_batch)."""
+    S = (S + S.T) / 2.0
+    theta0, w0, v0, eta0, obj0 = _carry_init(S, lam, step_scale, eps)
+    theta, _, _, _ = _glasso_run(
+        theta0, w0, v0, eta0, obj0, S, lam, n_steps, eps, conv_tol, active)
     return theta
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("n_steps", "step_scale", "eps"))
+                   static_argnames=("n_steps", "step_scale", "eps",
+                                    "conv_tol"))
 def glasso(
     S: jax.Array,
     lam: float,
@@ -150,6 +204,7 @@ def glasso(
     n_steps: int = DEFAULT_STEPS,
     step_scale: float = 0.9,
     eps: float = 1e-4,
+    conv_tol: float = 0.0,
 ) -> jax.Array:
     """Monotone proximal-gradient graphical lasso.
 
@@ -157,6 +212,10 @@ def glasso(
       S: (d, d) sample covariance (unit-diagonal correlation matrices are
         the paper's normalization).
       lam: l1 penalty on off-diagonal entries.
+      conv_tol: early-exit threshold — stop once an accepted step moves
+        theta by at most this much (max-abs). 0.0 (the default) runs the
+        full ``n_steps`` budget exactly as before. Convergence freezes
+        the carry, so an early exit is bit-identical to a larger budget.
     Returns:
       (d, d) sparse precision estimate Theta (symmetric PSD). The
       objective sequence is non-increasing (each step's candidate is
@@ -166,11 +225,12 @@ def glasso(
     """
     return _glasso_solve(
         jnp.asarray(S, jnp.float32), jnp.asarray(lam, jnp.float32),
-        n_steps, step_scale, eps)
+        n_steps, step_scale, eps, conv_tol)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("n_steps", "step_scale", "eps", "chunk"))
+                   static_argnames=("n_steps", "step_scale", "eps",
+                                    "conv_tol", "chunk"))
 def glasso_batch(
     S: jax.Array,
     lam,
@@ -178,6 +238,7 @@ def glasso_batch(
     n_steps: int = DEFAULT_STEPS,
     step_scale: float = 0.9,
     eps: float = 1e-4,
+    conv_tol: float = 0.0,
     chunk: int | None = None,
 ) -> jax.Array:
     """Batched, fully device-resident glasso: (b, d, d) Grams -> (b, d, d)
@@ -187,33 +248,43 @@ def glasso_batch(
     trial plane stacks strategies with different penalties into one
     batch). This is the solve stage of ``experiments.run_trials`` for
     sparse plans: the whole (S*reps, d, d) sweep point runs as one vmapped
-    fori_loop, metric sums stay on device, ``host_syncs == 1``.
+    while-loop, metric sums stay on device, ``host_syncs == 1``.
 
     ``chunk`` streams the batch through ``lax.map`` in ``chunk``-sized
     vmapped slabs instead of one full vmap: the solver's per-trial
     transients (eigh workspace + carried iterates, ~8 (d, d) f32 planes)
     then scale with ``chunk``, not b — the memory-budgeted solve stage at
     large d. Solves are independent and the iterate path is inv-free
-    (bit-stable across batch sizes, see ``_glasso_solve``), so chunking
-    does not change results; the batch zero-pads to a chunk multiple (a
-    zero S solves fine: init is inv(0.5 I)) and the pad is sliced off.
+    (bit-stable across batch sizes, see ``_glasso_run``), so chunking
+    does not change results; the batch zero-pads to a chunk multiple and
+    the pad is sliced off. Pad slots enter the solver with
+    ``active=False`` — marked converged before step 0 — so padding burns
+    no solver iterations (an all-pad slab exits its while-loop
+    immediately) and real slots stay bit-identical (their lanes never
+    observe the mask; see ``test_tiling.test_glasso_batch_chunk_parity``).
     """
     S = jnp.asarray(S, jnp.float32)
     lam = jnp.broadcast_to(
         jnp.asarray(lam, jnp.float32), S.shape[:-2])
-    solve = jax.vmap(
-        lambda s, l: _glasso_solve(s, l, n_steps, step_scale, eps))
     b = S.shape[0]
     if chunk is None or chunk >= b:
+        solve = jax.vmap(
+            lambda s, l: _glasso_solve(s, l, n_steps, step_scale, eps,
+                                       conv_tol))
         return solve(S, lam)
     chunk = max(1, chunk)
     pad = (-b) % chunk
     Sp = jnp.pad(S, ((0, pad), (0, 0), (0, 0)))
     lp = jnp.pad(lam, (0, pad), constant_values=1.0)
+    act = jnp.arange(b + pad) < b
     d = S.shape[-1]
+    solve = jax.vmap(
+        lambda s, l, a: _glasso_solve(s, l, n_steps, step_scale, eps,
+                                      conv_tol, a))
     theta = jax.lax.map(
         lambda args: solve(*args),
-        (Sp.reshape(-1, chunk, d, d), lp.reshape(-1, chunk)))
+        (Sp.reshape(-1, chunk, d, d), lp.reshape(-1, chunk),
+         act.reshape(-1, chunk)))
     return theta.reshape(-1, d, d)[:b]
 
 
@@ -264,7 +335,7 @@ def support(theta: jax.Array, tol: float = SUPPORT_TOL) -> np.ndarray:
 
 def learn_sparse_structure(
     x: jax.Array,
-    lam: float,
+    lam,
     *,
     method: str = "original",
     rate: int = 4,
@@ -279,12 +350,41 @@ def learn_sparse_structure(
     ``corr_from_gram``): the sign path inverts the arcsine law (eq. 3) and
     eigen-clips the result back to a valid correlation matrix
     (:func:`nearest_correlation`) before the solve.
+
+    ``lam`` may be:
+      * a float >= 0 — a caller-chosen penalty (0 = unpenalized MLE);
+      * the string ``"path"`` — solve a warm-started decreasing lambda
+        grid (``path.PathPlan()`` defaults: log grid from ``max|S_off|``)
+        in one fused launch and return the EBIC-selected support, so no
+        penalty needs to be hand-tuned;
+      * a ``path.PathPlan`` — same, with a caller-declared grid/selector.
+        Must use EBIC selection: StARS needs a subsample batch, which a
+        single (n, d) matrix does not provide — use the trial plane
+        (``TrialPlan(path=...)``) for stability selection.
     """
     from . import estimators
     from .strategy import Strategy
+    from .path import PathPlan, glasso_path_select
 
     if method not in ("original", "sign", "persymbol"):
         raise ValueError(f"unknown method {method!r}")
+    if isinstance(lam, str):
+        if lam != "path":
+            raise ValueError(
+                f"lam must be a float, 'path', or a PathPlan; got {lam!r}")
+        lam = PathPlan()
+    if isinstance(lam, PathPlan):
+        if lam.select != "ebic":
+            raise ValueError(
+                "learn_sparse_structure path selection must be 'ebic' — "
+                "StARS needs a subsample batch (use TrialPlan(path=...))")
+        strat = Strategy(method, rate=rate)
+        payload = estimators.strategy_payload(x, strat)
+        gram = estimators.payload_gram(payload, strat)
+        S = estimators.corr_from_gram(gram, x.shape[0], strat)
+        theta, _, _ = glasso_path_select(
+            S, lam, x.shape[0], n_steps=n_steps, support_tol=tol)
+        return support(theta, tol)
     if lam < 0.0:
         raise ValueError(f"lam must be >= 0 (0 = unpenalized MLE), "
                          f"got {lam!r}")

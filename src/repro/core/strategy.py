@@ -118,8 +118,14 @@ class Strategy:
         """Legend name used across the paper figures and result tables.
 
         Sparse strategies carry the glasso penalty in the label (e.g.
-        ``"R4+glasso0.06"``), so a lambda-path sweep keys distinct result
-        columns.
+        ``"R4+glasso0.06"``), so a hand-rolled lambda sweep — S copies of
+        one strategy differing only in ``lam`` — keys distinct result
+        columns. That per-label path pattern is DEPRECATED (it re-solves
+        ISTA cold for every penalty): declare the grid once with
+        ``TrialPlan(path=PathPlan(...))`` and the fused warm-started path
+        engine solves it in one launch with on-device model selection
+        (full-grid curves land in ``TrialResult.path``). Per-lam labels
+        keep working for fixed-penalty plans.
         """
         if self.method == "sign":
             base = "sign"
