@@ -1,0 +1,142 @@
+"""Channel plane: gather vs MAC superposition vs budgeted rate allocation.
+
+Sweeps the SAME Monte-Carlo plan (d=16, machines=4) once over the plain
+gather wire and once with the channel strategies riding along — the MAC
+wire (center receives the SUPERPOSED sum of machine sign statistics,
+arXiv 1812.10437) and the budget wire (heterogeneous per-machine code
+rates under a total bit budget B, arXiv 2001.08877) — pristine and under
+a faulty wire, and reports per-(strategy, n) structure error plus the
+per-machine `CommReport` bit ledgers.
+
+Checks: ``gather_bit_identical_to_legacy`` — the gather strategy's
+metric columns are bit-identical whether or not channel strategies join
+the plan (the default channel IS the pre-channel engine);
+``mac_one_sync`` — the mixed-channel sweep keeps exactly one host sync
+under the d2h transfer guard; ``budget_bits_leq_B`` — every budget
+report's per-machine bits sum to its logical bits and stay <= B; plus
+MAC losslessness (faultless MAC == gather sign exactly) and finiteness
+under faults.
+Artifact: ``BENCH_channels.json`` via ``benchmarks.run --only channels
+--json``.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.comm.channel import BudgetChannel, MACChannel
+from repro.core.experiments import TrialPlan, clear_compile_caches, run_trials
+from repro.core.faults import FaultPlan
+from repro.core.strategy import Strategy
+
+from .common import save_artifact
+
+D, MACHINES = 16, 4
+#: total bit budget: full-rate at the small ns, level-filled down to a
+#: heterogeneous (2,2,1,1) allocation at the largest full-size n
+BUDGET_BITS = 6 * 512 * D
+CAP = 4
+
+GATHER_SIGN = Strategy("sign")
+STRATEGIES = (
+    GATHER_SIGN,
+    Strategy("persymbol", rate=CAP),
+    Strategy("sign", channel=MACChannel(MACHINES)),
+    Strategy("persymbol", rate=CAP,
+             channel=BudgetChannel(budget_bits=BUDGET_BITS,
+                                   machines=MACHINES)),
+)
+
+SCENARIOS = {
+    "pristine": None,
+    "faulty": FaultPlan(dropout=0.15, straggle=0.3, straggle_frac=0.5,
+                        machines=MACHINES, seed=1),
+}
+
+
+def _plan(ns, reps, strategies, faults=None) -> TrialPlan:
+    return TrialPlan(d=D, ns=ns, strategies=strategies, reps=reps,
+                     seed0=7, faults=faults)
+
+
+def run(quick: bool = False) -> dict:
+    ns = (128, 512) if quick else (128, 512, 2048)
+    reps = 32
+
+    clear_compile_caches()
+    # the legacy sweep: gather strategies ONLY — textually the
+    # pre-channel engine (no rates operand enters any stage signature)
+    with jax.transfer_guard_device_to_host("disallow"):
+        legacy = run_trials(_plan(ns, reps, (GATHER_SIGN,)))
+    results = {}
+    for name, fp in SCENARIOS.items():
+        with jax.transfer_guard_device_to_host("disallow"):
+            results[name] = run_trials(_plan(ns, reps, STRATEGIES, fp))
+
+    labs = [s.label for s in STRATEGIES]
+    mac_lab = STRATEGIES[2].label
+    bgt_lab = STRATEGIES[3].label
+    rows = []
+    for name, res in results.items():
+        row = {"scenario": name, "host_syncs": res.host_syncs}
+        for s in STRATEGIES:
+            lab = s.label
+            row[lab] = {
+                "error": res.error_rate[lab],
+                "hamming": res.edit_distance[lab],
+                "f1": res.edge_f1[lab],
+                "wire_bits": [c.wire_bits for c in res.comm[lab]],
+                "machine_bits": [c.machine_bits for c in res.comm[lab]],
+                "rates": [c.rates for c in res.comm[lab]],
+            }
+        rows.append(row)
+        print("channels " + "  ".join(
+            f"{lab}: err@n{ns[-1]}={res.error_rate[lab][-1]:.3f}"
+            for lab in labs) + f"  [{name}]", flush=True)
+
+    pristine = results["pristine"]
+    faulty = results["faulty"]
+    bgt_comm = pristine.comm[bgt_lab] + faulty.comm[bgt_lab]
+
+    checks = {
+        # the tentpole regression pin: the default channel's columns are
+        # the pre-channel engine's columns, bit for bit, even with MAC
+        # and budget strategies sharing the plan
+        "gather_bit_identical_to_legacy": (
+            pristine.error_rate["sign"] == legacy.error_rate["sign"]
+            and pristine.edit_distance["sign"] == legacy.edit_distance["sign"]
+            and pristine.edge_f1["sign"] == legacy.edge_f1["sign"]),
+        # channel strategies must not cost the engine its sync contract
+        "mac_one_sync": all(
+            r.host_syncs == 1 for r in (legacy, *results.values())),
+        # every budget ledger: per-machine bits sum to the logical bits
+        # and respect the total budget
+        "budget_bits_leq_B": all(
+            sum(c.machine_bits) == c.logical_bits <= BUDGET_BITS
+            for c in bgt_comm),
+        # faultless MAC superposition is LOSSLESS: the summed sign Gram
+        # equals the gathered one bit for bit, so metrics coincide
+        "mac_lossless_matches_gather": (
+            pristine.error_rate[mac_lab] == pristine.error_rate["sign"]
+            and pristine.edge_f1[mac_lab] == pristine.edge_f1["sign"]),
+        # dropout under MAC/budget degrades gracefully, never NaNs
+        "faulty_finite": all(
+            all(v == v for v in faulty.error_rate[lab]) for lab in labs),
+    }
+
+    payload = {
+        "d": D, "machines": MACHINES, "ns": ns, "reps": reps,
+        "budget_bits": BUDGET_BITS, "cap": CAP, "strategies": labs,
+        "scenarios": {
+            name: (None if fp is None else {
+                "dropout": fp.dropout, "straggle": fp.straggle,
+                "straggle_frac": fp.straggle_frac, "retries": fp.retries,
+                "machines": fp.machines, "seed": fp.seed})
+            for name, fp in SCENARIOS.items()},
+        "rows": rows, "checks": checks,
+    }
+    save_artifact("channel_plane", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

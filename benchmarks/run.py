@@ -13,7 +13,7 @@ import os
 import sys
 import time
 
-from . import (bigd, ext_glasso, faults, fig3_structure_error,
+from . import (bigd, channels, ext_glasso, faults, fig3_structure_error,
                fig56_crossover, fig7_star, fig8_rel_error,
                fig9_quality_quantity, fig1011_skeleton, ggm_comm,
                ggm_roofline, gram_engine, kernel_throughput, path,
@@ -21,6 +21,7 @@ from . import (bigd, ext_glasso, faults, fig3_structure_error,
 
 BENCHES = {
     "bigd": bigd.run,
+    "channels": channels.run,
     "fig3": fig3_structure_error.run,
     "fig56": fig56_crossover.run,
     "fig7": fig7_star.run,
@@ -49,6 +50,7 @@ BENCH_BIGD_JSON = os.path.join(_REPO_ROOT, "BENCH_bigd.json")
 BENCH_ROOFLINE_JSON = os.path.join(_REPO_ROOT, "BENCH_roofline.json")
 BENCH_SERVE_JSON = os.path.join(_REPO_ROOT, "BENCH_serve.json")
 BENCH_PATH_JSON = os.path.join(_REPO_ROOT, "BENCH_path.json")
+BENCH_CHANNELS_JSON = os.path.join(_REPO_ROOT, "BENCH_channels.json")
 
 
 def _write_slim(payload: dict, keys: tuple, path: str) -> str:
@@ -128,6 +130,17 @@ def write_bench_path(payload: dict, path: str = BENCH_PATH_JSON) -> str:
         "iters_total_baseline", "rows", "checks"), path)
 
 
+def write_bench_channels(payload: dict,
+                         path: str = BENCH_CHANNELS_JSON) -> str:
+    """Persist the channel-plane artifact: per-(strategy, n) structure
+    error + per-machine bit ledgers for the gather / MAC-superposition /
+    budget wires, and the gather-bit-identity / one-sync / budget-bound
+    acceptance checks."""
+    return _write_slim(payload, (
+        "d", "machines", "ns", "reps", "budget_bits", "cap", "strategies",
+        "scenarios", "rows", "checks"), path)
+
+
 def write_bench_gram(payload: dict, path: str = BENCH_GRAM_JSON) -> str:
     """Persist the perf-trajectory artifact tracked across PRs: per-backend
     GB/s and GFLOP/s for every Gram path, plus the bytes-moved check."""
@@ -179,6 +192,8 @@ def main() -> int:
                 print("wrote", write_bench_serve(result), flush=True)
             if name == "path" and args.json:
                 print("wrote", write_bench_path(result), flush=True)
+            if name == "channels" and args.json:
+                print("wrote", write_bench_channels(result), flush=True)
             checks = (result or {}).get("checks", {})
             bad = [k for k, v in checks.items() if not v]
             status = "PASS" if not bad else f"CHECKS-FAILED:{bad}"

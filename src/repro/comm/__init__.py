@@ -1,10 +1,20 @@
-"""Communication layer: quantized/compressed collectives (beyond-paper)."""
+"""Communication layer: the channel plane (gather / MAC superposition /
+budgeted rates) + quantized/compressed collectives (beyond-paper)."""
+from .channel import (  # noqa: F401
+    BudgetChannel,
+    Channel,
+    GatherChannel,
+    MACChannel,
+)
 from .collectives import (  # noqa: F401
     compressed_pmean,
     compressed_pmean_1stage,
     compressed_psum,
     dequantize_tensor,
+    erasure_all_gather,
     error_feedback_apply,
     error_feedback_init,
+    neutral_fill,
     quantize_tensor,
+    superposed_psum,
 )

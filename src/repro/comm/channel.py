@@ -1,0 +1,243 @@
+"""Channel plane: the wire as a first-class, frozen plan value.
+
+The paper's communication model — every machine's message reaches the
+center losslessly over its own link — is one point in a family of
+channels.  This module makes the channel an explicit axis of the design
+space: a frozen, hashable :class:`Channel` rides on
+:class:`~repro.core.strategy.Strategy` (``strategy.channel``) next to
+method / rate / wire / placement, keys the sweep engine's jit caches like
+every other plan value, and owns the collective semantics the runtime
+used to hardcode inside ``WirePlan.wire``:
+
+* :class:`GatherChannel` — the paper's lossless all-gather (the default).
+  ``transmit`` is exactly the tiled all-gather the pre-channel engine
+  issued (with the fault plane's erasure fill absorbed here — the one
+  copy of the neutral-fill logic every channel inherits), so gather
+  sweeps are bit-identical to the pre-refactor engine by construction.
+* :class:`MACChannel` — a multiple-access channel: machines transmit
+  simultaneously and the center receives the SUPERPOSITION (sum) of
+  their signals, per the authors' follow-up "Structure Learning of
+  Sparse GGMs over Multiple Access Networks" (arXiv 1812.10437).
+  Machines hold contiguous sample-row blocks; each transmits its local
+  sign Gram and the channel sums them (``superposed_psum``) — the center
+  never sees per-machine payloads, only the sum statistic.  Sign Grams
+  are integer-valued in f32, so the superposition is EXACT under any
+  summand order: lossless MAC equals the gathered sign statistic bit for
+  bit, and mesh superposition keeps the 1-vs-N parity.  Dropout under a
+  :class:`~repro.core.faults.FaultPlan` is a missing summand with an
+  effective-count correction at the center.
+* :class:`BudgetChannel` — heterogeneous per-machine rates under a total
+  bit budget B, allocated from the per-machine feature counts by
+  deterministic greedy level-filling (the water-filling shape of the
+  optimal-rate analysis in "Distributed Gaussian Mean Estimation under
+  Communication Constraints", arXiv 2001.08877): the next bit level goes
+  to the lowest-rate machine whose increment still fits B.  Machines
+  whose budget ran out at rate 0 stay silent — their features arrive
+  masked and the center degrades through the effective-count path.
+
+This module is imported by ``core.strategy`` at class-definition time, so
+it must not import anything from ``repro`` at module level — plan values
+only (dataclasses + numpy); the jax collectives live in
+``comm.collectives`` and are imported lazily inside ``transmit``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Channel:
+    """Base of the channel family: frozen + hashable so it can ride a
+    Strategy into the sweep engine's jit caches.  Subclasses pin the
+    collective (`transmit`), the validity envelope (`validate`), the
+    label suffix, and the per-machine rate ledger (`machine_rates`)."""
+
+    #: family tag the estimator / wire layers dispatch on
+    kind = "gather"
+
+    def validate(self, strategy) -> None:
+        """Raise if ``strategy`` cannot run over this channel.  Called by
+        ``Strategy.__post_init__`` after method/wire normalization."""
+
+    def check_plan(self, d: int, faults=None) -> None:
+        """Raise if this channel cannot serve a sweep over ``d`` features
+        (optionally composed with a ``FaultPlan``).  Called by
+        ``TrialPlan`` validation."""
+
+    @property
+    def suffix(self) -> str:
+        """Label suffix appended to ``Strategy.label`` ('' for gather, so
+        every pre-channel label is unchanged)."""
+        return ""
+
+    def transmit(self, payload, axis_name: str, *, axis: int,
+                 keep=None, fill=0):
+        """THE communication this channel performs, inside a shard_map
+        body: reassemble (or superpose) the per-rank payloads over
+        ``axis_name``.  ``keep``/``fill`` are the fault plane's erasure
+        semantics — a dropped machine's entries arrive as the format's
+        neutral fill (the one copy of that logic; see
+        ``comm.collectives.neutral_fill``)."""
+        import jax
+        from .collectives import erasure_all_gather
+
+        if keep is None:
+            return jax.lax.all_gather(payload, axis_name, axis=axis,
+                                      tiled=True)
+        return erasure_all_gather(payload, axis_name, keep, axis=axis,
+                                  fill=fill)
+
+
+@dataclasses.dataclass(frozen=True)
+class GatherChannel(Channel):
+    """The paper's wire: one lossless all-gather of every machine's
+    payload (the default channel — today's engine, bit for bit)."""
+
+    kind = "gather"
+
+
+@dataclasses.dataclass(frozen=True)
+class MACChannel(Channel):
+    """Multiple-access superposition wire (arXiv 1812.10437): ``machines``
+    sample-row blocks each transmit their local integer sign Gram and the
+    center receives only the SUM.  Restricted to the sign method on the
+    int8 wire — integer Grams are what make the superposition exact (and
+    the 1-vs-N mesh parity unconditional)."""
+
+    machines: int = 2
+    kind = "mac"
+
+    def __post_init__(self):
+        if self.machines < 1:
+            raise ValueError(
+                f"MACChannel needs machines >= 1, got {self.machines!r}")
+        object.__setattr__(self, "machines", int(self.machines))
+
+    def validate(self, strategy) -> None:
+        if strategy.method != "sign" or strategy.wire != "int8":
+            raise ValueError(
+                "MACChannel superposes integer sign statistics: it needs "
+                f"method='sign' on the 'int8' wire, got method="
+                f"{strategy.method!r} wire={strategy.wire!r}")
+        if strategy.placement != "replicated":
+            raise ValueError(
+                "MACChannel has no per-machine payload to row-block; "
+                "use placement='replicated'")
+
+    def check_plan(self, d: int, faults=None) -> None:
+        if faults is not None and faults.n_machines(d) != self.machines:
+            raise ValueError(
+                f"a FaultPlan composes with MAC through shared machine "
+                f"states: channel.machines={self.machines} must equal "
+                f"faults.n_machines(d)={faults.n_machines(d)}")
+
+    @property
+    def suffix(self) -> str:
+        return f"@mac{self.machines}"
+
+    def block_rows(self, n_pad: int) -> int:
+        """Rows per machine block at padded sample count ``n_pad``."""
+        if n_pad % self.machines != 0:
+            raise ValueError(
+                f"MACChannel machines={self.machines} must divide the "
+                f"padded sample count {n_pad} (pow2 buckets: use a "
+                f"power-of-two machine count)")
+        return n_pad // self.machines
+
+    def transmit(self, payload, axis_name: str, *, axis: int = 0,
+                 keep=None, fill=0):
+        """Superpose the per-rank partial statistics: the MAC sum."""
+        from .collectives import superposed_psum
+
+        return superposed_psum(payload, axis_name)
+
+
+@dataclasses.dataclass(frozen=True)
+class BudgetChannel(Channel):
+    """Total-bit-budget wire (arXiv 2001.08877): ``machines`` contiguous
+    feature blocks share ``budget_bits`` total bits per evaluation, with
+    per-machine rates from :meth:`allocate`.  Restricted to the
+    per-symbol method on the int8 wire (the codes are what heterogeneous
+    rates re-shape; the strategy's ``rate`` is the per-machine CAP)."""
+
+    budget_bits: int = 0
+    machines: int = 2
+    kind = "budget"
+
+    def __post_init__(self):
+        if self.budget_bits < 1:
+            raise ValueError(
+                f"BudgetChannel needs budget_bits >= 1, got "
+                f"{self.budget_bits!r}")
+        if self.machines < 1:
+            raise ValueError(
+                f"BudgetChannel needs machines >= 1, got {self.machines!r}")
+        object.__setattr__(self, "budget_bits", int(self.budget_bits))
+        object.__setattr__(self, "machines", int(self.machines))
+
+    def validate(self, strategy) -> None:
+        if strategy.method != "persymbol" or strategy.wire != "int8":
+            raise ValueError(
+                "BudgetChannel re-allocates per-symbol code rates: it "
+                "needs method='persymbol' on the 'int8' wire, got method="
+                f"{strategy.method!r} wire={strategy.wire!r}")
+        if strategy.placement != "replicated":
+            raise ValueError(
+                "BudgetChannel centers decode the full mixed-rate payload;"
+                " use placement='replicated'")
+
+    def check_plan(self, d: int, faults=None) -> None:
+        if d % self.machines != 0:
+            raise ValueError(
+                f"BudgetChannel machines={self.machines} must divide "
+                f"d={d} (contiguous equal feature blocks)")
+
+    @property
+    def suffix(self) -> str:
+        return f"@bgt{self.budget_bits}"
+
+    def allocate(self, n: int, d: int, cap: int) -> tuple[int, ...]:
+        """Deterministic greedy level-filling rate allocation.
+
+        Machine m owns ``d / machines`` features; raising its rate by one
+        bit costs ``n * d_m`` wire bits.  Bits go to the lowest-rate
+        machine first (ties broken by machine index) while the increment
+        fits the remaining budget, capped at ``cap`` (the strategy's
+        per-symbol rate).  Pure host arithmetic — a function of
+        (n, d, cap, budget_bits) only, so every mesh rank and the
+        accounting layer agree on the same ledger.
+
+        Returns the (machines,) rate tuple; ``sum(n * d_m * r_m) <=
+        budget_bits`` by construction (rate-0 machines stay silent).
+        """
+        m = self.machines
+        if d % m != 0:
+            raise ValueError(
+                f"machines={m} must divide d={d} (equal feature blocks)")
+        d_m = d // m
+        step = int(n) * d_m  # bits per +1 rate on one machine
+        rates = np.zeros(m, np.int64)
+        remaining = int(self.budget_bits)
+        while remaining >= step and step > 0:
+            order = np.lexsort((np.arange(m), rates))
+            i = next((j for j in order if rates[j] < cap), None)
+            if i is None:
+                break
+            rates[i] += 1
+            remaining -= step
+        return tuple(int(r) for r in rates)
+
+    def column_rates(self, n: int, d: int, cap: int) -> np.ndarray:
+        """(d,) int32 per-FEATURE rate vector: the machine allocation
+        repeated over each machine's contiguous feature block — the
+        traced operand the encode/decode stages consume."""
+        rates = self.allocate(n, d, cap)
+        return np.repeat(np.asarray(rates, np.int32), d // self.machines)
+
+
+#: the default channel instance shared by every Strategy that does not
+#: name one — a single frozen value, so equality/hashing of pre-channel
+#: strategies is unchanged.
+GATHER = GatherChannel()

@@ -129,6 +129,38 @@ def error_feedback_apply(grads, residuals, axis_name: str, rate: int):
     return outs, news
 
 
+def neutral_fill(method: str, dtype) -> int:
+    """The wire format's masked value — what an erased (dropped) machine's
+    entries must arrive as so the center's masked estimators treat them as
+    never sent: ``quantizers.MASKED_CODE`` for per-symbol int8 bin codes
+    (code 0 is a real bin), 0 for signs / packed bits / raw values (all of
+    which contract to nothing).  The ONE copy of this logic — every
+    channel's erasure path (:func:`erasure_all_gather` via
+    ``Channel.transmit``) consults it instead of rebuilding the sentinel
+    at each call site."""
+    from repro.core.quantizers import MASKED_CODE
+
+    if method == "persymbol" and dtype == jnp.int8:
+        return MASKED_CODE
+    return 0
+
+
+def superposed_psum(partial: jax.Array, axis_name: str) -> jax.Array:
+    """The multiple-access channel's collective: the center receives the
+    SUPERPOSITION (sum) of every machine's transmitted signal — here the
+    per-rank partial statistics — never the individual payloads
+    (``comm.channel.MACChannel``, arXiv 1812.10437).
+
+    Physically this is over-the-air aggregation; on a mesh it lowers to
+    one psum over ``axis_name``.  For the integer-valued sign Grams the
+    MAC plane superposes, f32 addition is EXACT under any summand order
+    (values < 2^24), so the superposed statistic is bit-identical across
+    shardings — the property the channel plane's 1-vs-N parity gate
+    rests on.  For use INSIDE ``jax.shard_map`` bodies.
+    """
+    return jax.lax.psum(partial, axis_name)
+
+
 def erasure_all_gather(
     payload: jax.Array,
     axis_name: str,

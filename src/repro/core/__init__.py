@@ -15,6 +15,15 @@ from .gram import (GramConfig, GramEngine, default_engine,  # noqa: F401
                    default_memory_budget, gram_working_set_bytes,
                    set_default_engine)
 from .strategy import FIG3_STRATEGIES, Strategy  # noqa: F401
+# the channel plane (repro.comm.channel), re-exported beside Strategy —
+# a Channel rides Strategy.channel into every pipeline
+from repro.comm.channel import (  # noqa: F401
+    GATHER,
+    BudgetChannel,
+    Channel,
+    GatherChannel,
+    MACChannel,
+)
 from .streaming import StreamingGram  # noqa: F401
 from .quantizers import PerSymbolQuantizer, sign_quantize  # noqa: F401
 from .trees import (  # noqa: F401

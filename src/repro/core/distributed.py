@@ -109,6 +109,16 @@ class CommReport:
         ``collectives + retry_collectives``.
       retry_rounds: the configured retry budget (``FaultPlan.retries``);
         0 = single-round wire, faults or not.
+      rates: per-machine bit-rate ledger ((machines,) ints) for channels
+        that differentiate machines — a ``BudgetChannel``'s allocation,
+        or the MAC wire's uniform 1-bit signalling. ``None`` on the plain
+        gather wire (every machine sends at ``strategy.rate``; the
+        pre-channel reports are field-for-field unchanged).
+      machine_bits: per-machine wire-bit ledger ((machines,) ints) —
+        the bits machine m actually put on the channel (its delivered
+        symbols x its rate). ``sum(machine_bits) == logical_bits`` for
+        the budget channel (and <= its ``budget_bits`` by construction).
+        ``None`` on the plain gather wire.
     """
 
     logical_bits: int
@@ -117,6 +127,8 @@ class CommReport:
     retry_bytes: float = 0.0
     retry_collectives: float = 0.0
     retry_rounds: int = 0
+    rates: tuple[int, ...] | None = None
+    machine_bits: tuple[int, ...] | None = None
 
     @property
     def wire_bits(self) -> int:
@@ -188,7 +200,8 @@ class WirePlan:
     def encode(self, x_loc: jax.Array, *,
                n_valid: jax.Array | int | None = None,
                n_rows: jax.Array | None = None,
-               flip: jax.Array | None = None) -> jax.Array:
+               flip: jax.Array | None = None,
+               rates: jax.Array | None = None) -> jax.Array:
         """Per-machine quantization of the rank's (..., n, d_loc) feature
         slice into its wire payload (``estimators.strategy_payload``
         layouts). ``n_valid`` threads the trial plane's valid-length mask;
@@ -196,8 +209,22 @@ class WirePlan:
         plan's realization (delivered-row counts and sign bit-flips — see
         ``core.faults``), applied machine-side exactly as the estimator
         stage chain applies them.
+
+        ``rates`` is how the encode consults the channel for this rank's
+        transmit rate: under a :class:`~repro.comm.channel.BudgetChannel`
+        it is the (d_loc,) slice of the channel's per-feature rate
+        allocation, and the payload becomes the mixed-rate codes of
+        ``estimators.budget_payload`` (rate-0 features stay silent as
+        ``MASKED_CODE``). Gather/MAC strategies must not pass it — their
+        rate is the strategy's own, uniform.
         """
         s = self.strategy
+        if s.channel.kind == "budget":
+            assert rates is not None, \
+                "budget-channel encode needs this rank's rates slice"
+            return estimators.budget_payload(x_loc, s, rates,
+                                             n_valid=n_valid, n_rows=n_rows)
+        assert rates is None, "rates= is the budget channel's operand"
         if s.wire == "packed":
             per = 8 // s.rate
             assert x_loc.shape[-2] % per == 0, (
@@ -219,31 +246,30 @@ class WirePlan:
 
     def wire(self, payload: jax.Array,
              keep: jax.Array | None = None) -> jax.Array:
-        """THE communication the paper counts: tiled all-gather of the
-        payload over the model axis, reassembling the full feature
-        dimension in rank order (bit-identical to encoding the unsliced
-        data — the trial-plane parity gate).
+        """THE communication the paper counts — dispatched to the
+        strategy's channel (``strategy.channel.transmit``): a tiled
+        all-gather of the payload over the model axis for gather/budget
+        channels (reassembling the full feature dimension in rank order,
+        bit-identical to encoding the unsliced data — the trial-plane
+        parity gate), the superposing psum for the MAC channel (the
+        payload is then this rank's PARTIAL statistic, and the center
+        receives only the sum).
 
         ``keep`` — optional (d_loc,) bool per-feature survival flags (a
         fault plan's ``n_rows > 0``): the gather still runs (SPMD), but a
         dropped machine's entries arrive at the center as the format's
-        masked value (``comm.collectives.erasure_all_gather``) — the
-        channel itself erases the lost payload. Bit-identical to the
-        encode-stage masking, so either realization satisfies the parity
-        gate.
+        masked value (``comm.collectives.erasure_all_gather``, with the
+        fill sentinel from the channel layer's single
+        ``comm.collectives.neutral_fill``) — the channel itself erases
+        the lost payload. Bit-identical to the encode-stage masking, so
+        either realization satisfies the parity gate.
         """
-        ax = self.feature_axis(payload)
-        if keep is None:
-            return jax.lax.all_gather(
-                payload, self.model_axis, axis=ax, tiled=True)
-        from repro.comm.collectives import erasure_all_gather
-        from .quantizers import MASKED_CODE
+        from repro.comm.collectives import neutral_fill
 
-        fill = (MASKED_CODE
-                if (self.strategy.method == "persymbol"
-                    and payload.dtype == jnp.int8) else 0)
-        return erasure_all_gather(payload, self.model_axis, keep,
-                                  axis=ax, fill=fill)
+        return self.strategy.channel.transmit(
+            payload, self.model_axis, axis=self.feature_axis(payload),
+            keep=keep,
+            fill=neutral_fill(self.strategy.method, payload.dtype))
 
     # ---- stage 3: central statistic + weights (paper step 3) ------------
 
@@ -384,6 +410,21 @@ class WirePlan:
             n = estimators.effective_counts(n_rows)
         return estimators.corr_from_gram(gram, n, s)
 
+    def central_from_sum(self, gram_sum: jax.Array, n_eff,
+                         *, corr: bool = False) -> jax.Array:
+        """The MAC center: the channel delivered the SUPERPOSED sum
+        statistic (``comm.collectives.superposed_psum`` of every
+        machine's partial sign Gram) — per-machine payloads never existed
+        at the center, so the estimate is a function of the sum and the
+        effective sample count alone (``estimators.mac_estimate``; a
+        dropped machine is a missing summand already absent from both).
+        The sum-statistic twin of :meth:`central` / :meth:`central_corr`.
+        """
+        assert self.strategy.channel.kind == "mac", \
+            "central_from_sum is the MAC channel's center"
+        return estimators.mac_estimate(gram_sum, self.strategy, n_eff,
+                                       corr=corr)
+
     # ---- composed runtime + accounting ----------------------------------
 
     def local_weights(self, x_loc: jax.Array) -> jax.Array:
@@ -416,8 +457,44 @@ class WirePlan:
         at the shape the sweep actually gathers (``n_pad`` under shape
         bucketing — padding costs real bytes and is reported as such);
         ``logical_bits`` uses the true n (the paper's §3 budget).
+
+        Channel-aware: the gather wire reports exactly the pre-channel
+        numbers (field for field — the PR-4 accounting pins); the MAC
+        wire's received payload is the (d, d) f32 superposed statistic
+        (per-machine signals never traverse a link individually — their
+        1-bit airtime is the ``machine_bits`` ledger); the budget wire
+        reports its measured int8 code gather plus the per-machine
+        rate/bit ledgers of its allocation (``sum(machine_bits) ==
+        logical_bits <= budget_bits``).
         """
         n_wire = n if n_pad is None else n_pad
+        s = self.strategy
+        ch = s.channel
+        if ch.kind == "mac":
+            stat = jax.eval_shape(
+                lambda g: g, jax.ShapeDtypeStruct((d, d), jnp.float32))
+            b = ch.block_rows(n_wire)
+            delivered = [max(0, min(n - m * b, b))
+                         for m in range(ch.machines)]
+            return CommReport(
+                logical_bits=communication_bits(n, d, s.rate),
+                wire_bytes=int(np.prod(stat.shape)) * stat.dtype.itemsize,
+                collectives=1,
+                rates=(1,) * ch.machines,
+                machine_bits=tuple(r * d for r in delivered))
+        if ch.kind == "budget":
+            rates_m = ch.allocate(n, d, s.rate)
+            d_m = d // ch.machines
+            machine_bits = tuple(n * d_m * r for r in rates_m)
+            payload = jax.eval_shape(
+                lambda x: estimators.budget_payload(
+                    x, s, jnp.zeros((d,), jnp.int32)),
+                jax.ShapeDtypeStruct((n_wire, d), jnp.float32))
+            return CommReport(
+                logical_bits=sum(machine_bits),
+                wire_bytes=int(np.prod(payload.shape))
+                * payload.dtype.itemsize,
+                collectives=1, rates=rates_m, machine_bits=machine_bits)
         payload = jax.eval_shape(
             lambda x: estimators.strategy_payload(x, self.strategy),
             jax.ShapeDtypeStruct((n_wire, d), jnp.float32))
@@ -472,6 +549,11 @@ def build_weights_fn(
     default, which auto-selects per platform).
     """
     strat = _as_wire_strategy(strategy, method, rate, compute, wire)
+    if strat.channel.kind != "gather":
+        raise ValueError(
+            "build_weights_fn is the gather-wire runtime; MAC/budget "
+            "channel strategies run through experiments.run_trials (the "
+            "trial plane threads their rate/delivered operands)")
     if path is not None and strat.structure != "sparse":
         raise ValueError(
             "path= is the sparse plane's regularization-path engine; "

@@ -24,6 +24,7 @@ pipeline in the repo shares (the same decomposition
 """
 from __future__ import annotations
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -277,6 +278,256 @@ def corr_from_gram(gram: jax.Array, n, method) -> jax.Array:
     return rho
 
 
+# ---------------------------------------------------------------------------
+# Channel plane (repro.comm.channel): MAC superposition + budgeted rates
+# ---------------------------------------------------------------------------
+
+
+def mac_delivered_rows(channel, n_pad: int, n_valid=None) -> jax.Array:
+    """Lossless per-machine delivered-row counts under the MAC row-block
+    partition: machine m owns the contiguous padded rows
+    ``[m*b, (m+1)*b)`` (``b = n_pad / machines``), so with ``n_valid``
+    real samples it delivers ``clip(n_valid - m*b, 0, b)`` of them.
+    (machines,) int32; they sum to exactly ``n_valid``. A
+    :class:`~repro.core.faults.FaultPlan` replaces this with its drawn
+    ``draw_rowblock_batch`` counts (a dropped machine is a missing
+    summand — count 0)."""
+    b = channel.block_rows(n_pad)
+    nv = jnp.asarray(n_pad if n_valid is None else n_valid, jnp.int32)
+    blocks = jnp.arange(channel.machines, dtype=jnp.int32)
+    return jnp.clip(nv - blocks * b, 0, b)
+
+
+def mac_sign_codes(
+    x: jax.Array,
+    strategy: Strategy,
+    *,
+    n_valid: jax.Array | int | None = None,
+    delivered: jax.Array | None = None,
+    flip: jax.Array | None = None,
+) -> jax.Array:
+    """Encode stage of the MAC plane: raw (..., n, d) samples -> the ±1
+    int8 sign codes each machine CONTRACTS LOCALLY before transmitting
+    its partial Gram into the superposition. Rows a machine did not
+    deliver (pad rows, or a ``delivered`` fault realization's dropped /
+    truncated blocks) are zeroed — they superpose to nothing, exactly the
+    missing-summand semantics of the channel. In the lossless case the
+    keep mask reduces to the plain valid-sample prefix, so the masked
+    codes are BIT-IDENTICAL to the gather sign payload.
+
+    ``delivered`` is the (..., machines) per-block delivered-row count
+    (defaults to :func:`mac_delivered_rows`); ``flip`` threads the fault
+    plane's sign bit flips exactly as on the gather wire.
+    """
+    from .quantizers import sign_codes
+
+    ch = strategy.channel
+    n_pad = x.shape[-2]
+    b = ch.block_rows(n_pad)
+    u = sign_codes(x)
+    if flip is not None:
+        u = jnp.where(flip, jnp.negative(u), u)
+    if delivered is None:
+        delivered = mac_delivered_rows(ch, n_pad, n_valid)
+    offs = jnp.arange(n_pad, dtype=jnp.int32) % b   # offset within block
+    blk = jnp.arange(n_pad, dtype=jnp.int32) // b   # owning machine
+    keep = offs < jnp.asarray(delivered, jnp.int32)[..., blk]
+    return jnp.where(keep[..., :, None], u, jnp.int8(0))
+
+
+def mac_effective_count(
+    strategy: Strategy,
+    n_pad: int,
+    *,
+    n_valid: jax.Array | int | None = None,
+    delivered: jax.Array | None = None,
+) -> jax.Array:
+    """Total sample count inside the superposed statistic: the sum of the
+    delivered block rows ((...,) f32 — exactly ``n_valid`` lossless;
+    smaller when a fault realization dropped summands)."""
+    if delivered is None:
+        delivered = mac_delivered_rows(strategy.channel, n_pad, n_valid)
+    return jnp.sum(jnp.asarray(delivered, jnp.int32), axis=-1).astype(
+        jnp.float32)
+
+
+def mac_estimate(
+    gram: jax.Array,
+    strategy: Strategy,
+    n_eff: jax.Array,
+    *,
+    corr: bool = False,
+) -> jax.Array:
+    """Central estimate from the SUPERPOSED sum statistic — the sum of
+    per-machine partial sign Grams is numerically THE masked Gram (f32
+    integer addition is exact), so the center only needs the effective
+    count ``n_eff`` ((...,) — it never sees per-machine payloads) fed
+    through the shared estimate tails' per-entry path: degenerate trials
+    (count < 2, e.g. every machine dropped) neutralize exactly like the
+    fault plane's voided entries."""
+    n = jnp.asarray(n_eff, jnp.float32)[..., None, None]
+    tail = corr_from_gram if corr else weights_from_gram
+    return tail(gram, n, strategy)
+
+
+def mac_weights_batch(
+    x: jax.Array,
+    strategy: Strategy,
+    *,
+    n_valid: jax.Array | int | None = None,
+    delivered: jax.Array | None = None,
+    flip: jax.Array | None = None,
+    engine: GramEngine | None = None,
+    corr: bool = False,
+) -> jax.Array:
+    """Single-process MAC reference path: encode+mask, contract the full
+    masked codes in one launch (== the superposition of every machine's
+    partial Gram, exactly), estimate from the effective count. The mesh
+    runtime computes per-rank partial Grams and ``superposed_psum``-s
+    them instead; integer exactness makes both bit-identical."""
+    u = mac_sign_codes(x, strategy, n_valid=n_valid, delivered=delivered,
+                       flip=flip)
+    eng = resolve_engine(engine)
+    gram = (eng.gram_batch if u.ndim == 3 else eng.gram)(u)
+    n_eff = mac_effective_count(strategy, x.shape[-2], n_valid=n_valid,
+                                delivered=delivered)
+    return mac_estimate(gram, strategy, n_eff, corr=corr)
+
+
+def budget_centroid_table(cap: int) -> np.ndarray:
+    """Host (cap+1, 2^cap) f32 PADDED codebook table for mixed-rate
+    decode: row r holds ``PerSymbolQuantizer(r)``'s centroids (zero-
+    padded), row 0 is all zeros (a silent machine decodes to nothing).
+    Concrete numpy on purpose — it is baked into the trace as a constant,
+    like the single-rate path's ``centroids_np``."""
+    from .quantizers import PerSymbolQuantizer
+
+    tbl = np.zeros((cap + 1, 1 << cap), np.float32)
+    for r in range(1, cap + 1):
+        cb = PerSymbolQuantizer(r).centroids_np
+        tbl[r, : cb.shape[0]] = cb
+    return tbl
+
+
+def budget_payload(
+    x: jax.Array,
+    strategy: Strategy,
+    rates: jax.Array,
+    *,
+    n_valid: jax.Array | int | None = None,
+    n_rows: jax.Array | None = None,
+) -> jax.Array:
+    """Encode stage of the budget plane: raw (..., n, d) samples + the
+    (d,) per-FEATURE rate vector (``BudgetChannel.column_rates``, a
+    TRACED operand so one compiled sweep serves every allocation) ->
+    mixed-rate int8 bin codes. Each column is encoded at its own rate by
+    a static select over rates 1..cap (the strategy's ``rate`` is the
+    cap); rate-0 columns (machines whose budget ran out) and undelivered
+    rows carry ``MASKED_CODE``. Columnwise + rowwise ops only, so a
+    feature-sliced encode followed by a gather reassembles the full
+    payload bit-for-bit — the mesh-parity property of the gather wire,
+    inherited.
+    """
+    from .quantizers import (MASKED_CODE, PerSymbolQuantizer, valid_row_mask,
+                             valid_sample_mask)
+
+    n_pad = x.shape[-2]
+    rates = jnp.asarray(rates, jnp.int32)
+    out = jnp.full(x.shape, MASKED_CODE, jnp.int8)
+    for r in range(1, strategy.rate + 1):
+        out = jnp.where(rates == r,
+                        PerSymbolQuantizer(r).encode(x).astype(jnp.int8), out)
+    if n_rows is not None:
+        mask = valid_row_mask(n_pad, n_rows)
+    elif n_valid is not None:
+        mask = valid_sample_mask(n_pad, n_valid)[:, None]
+    else:
+        return out
+    return jnp.where(mask, out, jnp.int8(MASKED_CODE))
+
+
+def budget_operand(
+    codes: jax.Array,
+    strategy: Strategy,
+    rates: jax.Array,
+) -> jax.Array:
+    """Mixed-rate decode at the center: int8 codes + (d,) rates -> f32
+    centroid values through the padded table (``tbl[rates, codes]``),
+    with ``MASKED_CODE`` entries restored to 0 so they contract to
+    nothing. The per-rate codebooks differ, so the single-codebook
+    ``code_gram`` kernel path does not apply — the decoded f32 operand
+    goes through the plain Gram."""
+    from .quantizers import MASKED_CODE
+
+    cap = strategy.rate
+    tbl = jnp.asarray(budget_centroid_table(cap))
+    r = jnp.clip(jnp.asarray(rates, jnp.int32), 0, cap)
+    vals = tbl[r, jnp.maximum(codes, 0).astype(jnp.int32)]
+    return jnp.where(codes == jnp.int8(MASKED_CODE), 0.0, vals)
+
+
+def budget_counts(
+    rates: jax.Array,
+    n_pad: int,
+    *,
+    n_valid: jax.Array | int | None = None,
+    n_rows: jax.Array | None = None,
+) -> jax.Array:
+    """(..., d, d) effective pairwise counts under the rate allocation:
+    a rate-0 column delivered nothing, so its count is 0 and the shared
+    estimate tails neutralize its entries (weight 0 / identity) — the
+    same graceful degradation as a dropped machine. Composes with a
+    fault realization's per-feature ``n_rows`` counts."""
+    rates = jnp.asarray(rates, jnp.int32)
+    if n_rows is not None:
+        n_col = jnp.asarray(n_rows, jnp.int32)
+    else:
+        nv = n_pad if n_valid is None else n_valid
+        n_col = jnp.asarray(nv, jnp.int32) * jnp.ones_like(rates)
+    return effective_counts(jnp.where(rates > 0, n_col, 0))
+
+
+def budget_estimate(
+    codes: jax.Array,
+    strategy: Strategy,
+    rates: jax.Array,
+    *,
+    n_valid: jax.Array | int | None = None,
+    n_rows: jax.Array | None = None,
+    engine: GramEngine | None = None,
+    corr: bool = False,
+) -> jax.Array:
+    """Central contraction + estimate from the (gathered) mixed-rate
+    payload: decode through :func:`budget_operand`, Gram through the
+    engine, normalize by :func:`budget_counts`."""
+    vals = budget_operand(codes, strategy, rates)
+    eng = resolve_engine(engine)
+    gram = (eng.gram_batch if vals.ndim == 3 else eng.gram)(vals)
+    n = budget_counts(rates, codes.shape[-2], n_valid=n_valid, n_rows=n_rows)
+    tail = corr_from_gram if corr else weights_from_gram
+    return tail(gram, n, strategy)
+
+
+def budget_weights_batch(
+    x: jax.Array,
+    strategy: Strategy,
+    rates: jax.Array,
+    *,
+    n_valid: jax.Array | int | None = None,
+    n_rows: jax.Array | None = None,
+    engine: GramEngine | None = None,
+    corr: bool = False,
+) -> jax.Array:
+    """Single-process budget reference path: mixed-rate encode -> decode
+    -> Gram -> estimate (the mesh runtime encodes feature slices and
+    gathers the int8 codes through the channel first; the encode commutes
+    with slicing, so both agree bit-for-bit)."""
+    codes = budget_payload(x, strategy, rates, n_valid=n_valid,
+                           n_rows=n_rows)
+    return budget_estimate(codes, strategy, rates, n_valid=n_valid,
+                           n_rows=n_rows, engine=engine, corr=corr)
+
+
 def strategy_corr(
     x: jax.Array,
     strategy: Strategy,
@@ -287,6 +538,13 @@ def strategy_corr(
     Strategy's glasso solve ingests — the encode -> contract -> estimate
     chain with :func:`corr_from_gram` as the tail (the sparse twin of
     :func:`strategy_weights`)."""
+    ch = strategy.channel
+    if ch.kind == "mac":
+        return mac_weights_batch(x, strategy, engine=engine, corr=True)
+    if ch.kind == "budget":
+        rates = ch.column_rates(x.shape[0], x.shape[1], strategy.rate)
+        return budget_weights_batch(x, strategy, rates, engine=engine,
+                                    corr=True)
     payload = strategy_payload(x, strategy)
     gram = payload_gram(payload, strategy, engine=engine)
     return corr_from_gram(gram, x.shape[0], strategy)
@@ -300,13 +558,27 @@ def strategy_corr_batch(
     n_rows: jax.Array | None = None,
     flip: jax.Array | None = None,
     engine: GramEngine | None = None,
+    rates: jax.Array | None = None,
+    delivered: jax.Array | None = None,
 ) -> jax.Array:
     """(t, n, d) stacked raw samples -> (t, d, d) correlation statistics
     for a sparse Strategy: the batched, valid-length-masked form of
     :func:`strategy_corr` used by the sparse trial plane (same bucketing
     semantics as :func:`strategy_weights_batch`; ``n_rows``/``flip``
     thread a fault plan's masks exactly as there, normalizing by the
-    per-entry :func:`effective_counts`)."""
+    per-entry :func:`effective_counts`; ``rates``/``delivered`` dispatch
+    the channel plane exactly as there)."""
+    ch = strategy.channel
+    if ch.kind == "mac":
+        return mac_weights_batch(x, strategy, n_valid=n_valid,
+                                 delivered=delivered, flip=flip,
+                                 engine=engine, corr=True)
+    if ch.kind == "budget":
+        if rates is None:
+            raise ValueError("budget-channel strategies need the (d,) "
+                             "per-feature rates operand")
+        return budget_weights_batch(x, strategy, rates, n_valid=n_valid,
+                                    n_rows=n_rows, engine=engine, corr=True)
     n_pad = x.shape[-2]
     payload = strategy_payload(x, strategy, n_valid=n_valid, n_rows=n_rows,
                                flip=flip)
@@ -528,8 +800,17 @@ def strategy_weights(
     the encode -> contract -> estimate stage chain
     (:func:`strategy_payload` -> :func:`payload_gram` ->
     :func:`weights_from_gram`) on one unbatched dataset. Pure and jit-able
-    with ``strategy`` as a trace-time constant.
+    with ``strategy`` as a trace-time constant. Non-gather channels
+    dispatch to their planes (the budget allocation is derived from the
+    static sample count here — pass explicit ``rates`` through the batch
+    entry point for bucketed sweeps).
     """
+    ch = strategy.channel
+    if ch.kind == "mac":
+        return mac_weights_batch(x, strategy, engine=engine)
+    if ch.kind == "budget":
+        rates = ch.column_rates(x.shape[0], x.shape[1], strategy.rate)
+        return budget_weights_batch(x, strategy, rates, engine=engine)
     payload = strategy_payload(x, strategy)
     gram = payload_gram(payload, strategy, engine=engine)
     return weights_from_gram(gram, x.shape[0], strategy)
@@ -543,6 +824,8 @@ def strategy_weights_batch(
     n_rows: jax.Array | None = None,
     flip: jax.Array | None = None,
     engine: GramEngine | None = None,
+    rates: jax.Array | None = None,
+    delivered: jax.Array | None = None,
 ) -> jax.Array:
     """(t, n, d) stacked raw samples -> (t, d, d) Chow-Liu weights.
 
@@ -567,7 +850,27 @@ def strategy_weights_batch(
     weight 0 — the graceful-degradation path. A zero-fault realization
     (all counts == n_valid, ``flip=None``) is bit-identical to the
     faultless call.
+
+    ``rates`` / ``delivered`` are the channel plane's operands —
+    respectively the (d,) per-feature rate vector a
+    :class:`~repro.comm.channel.BudgetChannel` strategy encodes with, and
+    the (t, machines) delivered-row counts a fault plan draws for a
+    :class:`~repro.comm.channel.MACChannel` strategy. The gather channel
+    (the default) ignores both, and its body below is TEXTUALLY the
+    pre-channel code: gather sweeps trace bit-identically to the
+    pre-refactor engine by construction.
     """
+    ch = strategy.channel
+    if ch.kind == "mac":
+        return mac_weights_batch(x, strategy, n_valid=n_valid,
+                                 delivered=delivered, flip=flip,
+                                 engine=engine)
+    if ch.kind == "budget":
+        if rates is None:
+            raise ValueError("budget-channel strategies need the (d,) "
+                             "per-feature rates operand")
+        return budget_weights_batch(x, strategy, rates, n_valid=n_valid,
+                                    n_rows=n_rows, engine=engine)
     t, n_pad, d = x.shape
     payload = strategy_payload(x, strategy, n_valid=n_valid, n_rows=n_rows,
                                flip=flip)

@@ -223,6 +223,10 @@ class TrialPlan:
                 raise TypeError(
                     f"faults must be a FaultPlan, got {type(self.faults)!r}")
             self.faults.n_machines(self.d)  # machines must divide d
+        # each strategy's channel vetoes plan shapes it cannot carry
+        # (machine counts vs d, MAC machines vs the fault plan's machines)
+        for s in self.strategies:
+            s.channel.check_plan(self.d, self.faults)
         if (self.memory_budget_bytes is not None
                 and self.memory_budget_bytes <= 0):
             raise ValueError(
@@ -580,22 +584,91 @@ def _weights_stage(
     ``set_default_engine``. Call with ``faults`` POSITIONAL (None for the
     pristine wire) — lru_cache keys positional and keyword spellings
     separately.
+
+    Budget-channel strategy sets grow a trailing ``rates`` operand — the
+    stacked (S, d) per-feature rate vectors from
+    :func:`_rates_operand` — so the per-n allocation stays a traced
+    input (no recompile across the n sweep). The signature switch is
+    static in ``strategies`` (part of the cache key), so gather-only
+    sweeps keep the exact pre-channel signature.
     """
     if faults is None:
-        def f(keys, parents, rhos, n_valid):
-            return _stacked_weights(
-                keys, parents, rhos, n_valid, strategies, n_pad, engine)
+        if _needs_rates(strategies):
+            def f(keys, parents, rhos, n_valid, rates):
+                return _stacked_weights(
+                    keys, parents, rhos, n_valid, strategies, n_pad, engine,
+                    rates=rates)
+        else:
+            def f(keys, parents, rhos, n_valid):
+                return _stacked_weights(
+                    keys, parents, rhos, n_valid, strategies, n_pad, engine)
     else:
-        def f(keys, fault_keys, parents, rhos, n_valid):
-            return _stacked_weights(
-                keys, parents, rhos, n_valid, strategies, n_pad, engine,
-                faults=faults, fault_keys=fault_keys)
+        if _needs_rates(strategies):
+            def f(keys, fault_keys, parents, rhos, n_valid, rates):
+                return _stacked_weights(
+                    keys, parents, rhos, n_valid, strategies, n_pad, engine,
+                    faults=faults, fault_keys=fault_keys, rates=rates)
+        else:
+            def f(keys, fault_keys, parents, rhos, n_valid):
+                return _stacked_weights(
+                    keys, parents, rhos, n_valid, strategies, n_pad, engine,
+                    faults=faults, fault_keys=fault_keys)
 
     return jax.jit(f)
 
 
+def _needs_rates(strategies) -> bool:
+    """True when the strategy set carries a budget channel, i.e. the
+    stage signatures grow the trailing stacked per-feature ``rates``
+    operand (static in the strategies tuple, so it keys the jit/lru
+    caches consistently)."""
+    return any(s.channel.kind == "budget" for s in strategies)
+
+
+def _rates_operand(strategies, n: int, d: int) -> jax.Array:
+    """Stacked (S, d) int32 per-feature rate vectors for one sweep point.
+
+    Budget strategies get their channel's greedy allocation at the TRUE
+    sample count n (``BudgetChannel.column_rates``); every other strategy
+    row is a constant fill at its own rate (never consulted — the slot
+    keeps the stack rectangular). Host numpy -> one small device operand.
+    """
+    rows = [
+        s.channel.column_rates(n, d, s.rate)
+        if s.channel.kind == "budget"
+        else np.full(d, s.rate, np.int32)
+        for s in strategies
+    ]
+    return jnp.asarray(np.stack(rows))
+
+
+def _channel_operands(strategies, rates, faults, fault_keys, n_pad, n_valid):
+    """Per-strategy estimator kwargs for the non-gather channels.
+
+    Budget strategies receive their (d,) slice of the stacked ``rates``
+    operand; MAC strategies under a fault plan receive the (t, machines)
+    delivered-row counts drawn from the SAME per-trial fault stream as
+    the feature-block view (``FaultPlan.draw_rowblock_batch``), computed
+    once per distinct machine count. Gather strategies get ``{}`` — their
+    estimator calls are textually identical to the pre-channel engine.
+    """
+    ops: list[dict] = [{} for _ in strategies]
+    delivered: dict[int, jax.Array] = {}
+    for i, s in enumerate(strategies):
+        kind = s.channel.kind
+        if kind == "budget":
+            ops[i] = {"rates": rates[i]}
+        elif kind == "mac" and faults is not None:
+            m = s.channel.machines
+            if m not in delivered:
+                delivered[m] = faults.draw_rowblock_batch(
+                    fault_keys, n_pad, n_valid, m)
+            ops[i] = {"delivered": delivered[m]}
+    return ops
+
+
 def _stacked_weights(keys, parents, rhos, n_valid, strategies, n_pad, engine,
-                     faults=None, fault_keys=None):
+                     faults=None, fault_keys=None, rates=None):
     """Shared trace body of the single-device and sharded weights stages:
     sample the bucket-shaped data once, emit every strategy's (r, d, d)
     weight tensor stacked as (S, r, d, d).
@@ -604,19 +677,25 @@ def _stacked_weights(keys, parents, rhos, n_valid, strategies, n_pad, engine,
     shared by every strategy — methods degrade on the SAME faults, the
     fault twin of the shared-data convention) masks each strategy's
     payload and the return is ``(weights, (channels,) telemetry sums)``.
+    Channel operands (budget rate vectors, MAC delivered-row counts) ride
+    per strategy via :func:`_channel_operands`.
     """
     x = sampler.sample_tree_ggm_rows_batch(keys, n_pad, parents, rhos)
     if faults is None:
+        ops = _channel_operands(strategies, rates, None, None, n_pad, n_valid)
         return jnp.stack([
             estimators.strategy_weights_batch(
-                x, s, n_valid=n_valid, engine=engine)
-            for s in strategies])
+                x, s, n_valid=n_valid, engine=engine, **ops[i])
+            for i, s in enumerate(strategies)])
     n_rows, flip, tele = faults.draw_batch(
         fault_keys, n_pad, n_valid, x.shape[-1])
+    ops = _channel_operands(
+        strategies, rates, faults, fault_keys, n_pad, n_valid)
     w = jnp.stack([
         estimators.strategy_weights_batch(
-            x, s, n_valid=n_valid, n_rows=n_rows, flip=flip, engine=engine)
-        for s in strategies])
+            x, s, n_valid=n_valid, n_rows=n_rows, flip=flip, engine=engine,
+            **ops[i])
+        for i, s in enumerate(strategies)])
     return w, tele.sum(axis=0)
 
 
@@ -698,39 +777,57 @@ def _corr_stage(
     statistics — the sparse twin of :func:`_weights_stage` (same bucketing
     and caching contract, including the faulty (keys, fault_keys, ...) ->
     (corr, telemetry sums) signature; the tail is
-    ``estimators.corr_from_gram`` instead of the Chow-Liu weights)."""
+    ``estimators.corr_from_gram`` instead of the Chow-Liu weights).
+    Budget-channel strategy sets grow the same trailing stacked ``rates``
+    operand as :func:`_weights_stage`."""
     if faults is None:
-        def f(keys, chols, n_valid):
-            return _stacked_corr(
-                keys, chols, n_valid, strategies, n_pad, engine)
+        if _needs_rates(strategies):
+            def f(keys, chols, n_valid, rates):
+                return _stacked_corr(
+                    keys, chols, n_valid, strategies, n_pad, engine,
+                    rates=rates)
+        else:
+            def f(keys, chols, n_valid):
+                return _stacked_corr(
+                    keys, chols, n_valid, strategies, n_pad, engine)
     else:
-        def f(keys, fault_keys, chols, n_valid):
-            return _stacked_corr(
-                keys, chols, n_valid, strategies, n_pad, engine,
-                faults=faults, fault_keys=fault_keys)
+        if _needs_rates(strategies):
+            def f(keys, fault_keys, chols, n_valid, rates):
+                return _stacked_corr(
+                    keys, chols, n_valid, strategies, n_pad, engine,
+                    faults=faults, fault_keys=fault_keys, rates=rates)
+        else:
+            def f(keys, fault_keys, chols, n_valid):
+                return _stacked_corr(
+                    keys, chols, n_valid, strategies, n_pad, engine,
+                    faults=faults, fault_keys=fault_keys)
 
     return jax.jit(f)
 
 
 def _stacked_corr(keys, chols, n_valid, strategies, n_pad, engine,
-                  faults=None, fault_keys=None):
+                  faults=None, fault_keys=None, rates=None):
     """Shared trace body of the single-device and sharded sparse stages:
     sample the bucket-shaped data once through the row-keyed generic
     sampler, emit every strategy's (r, d, d) correlation statistic (with a
     fault plan: the masked-Gram statistic + telemetry sums, mirroring
-    :func:`_stacked_weights`)."""
+    :func:`_stacked_weights`, channel operands included)."""
     x = sampler.sample_ggm_rows_batch(keys, n_pad, chols)
     if faults is None:
+        ops = _channel_operands(strategies, rates, None, None, n_pad, n_valid)
         return jnp.stack([
             estimators.strategy_corr_batch(
-                x, s, n_valid=n_valid, engine=engine)
-            for s in strategies])
+                x, s, n_valid=n_valid, engine=engine, **ops[i])
+            for i, s in enumerate(strategies)])
     n_rows, flip, tele = faults.draw_batch(
         fault_keys, n_pad, n_valid, x.shape[-1])
+    ops = _channel_operands(
+        strategies, rates, faults, fault_keys, n_pad, n_valid)
     corr = jnp.stack([
         estimators.strategy_corr_batch(
-            x, s, n_valid=n_valid, n_rows=n_rows, flip=flip, engine=engine)
-        for s in strategies])
+            x, s, n_valid=n_valid, n_rows=n_rows, flip=flip, engine=engine,
+            **ops[i])
+        for i, s in enumerate(strategies)])
     return corr, tele.sum(axis=0)
 
 
@@ -871,26 +968,31 @@ def _sparse_sharded_corr_fn(
     to one device and runs the SAME compiled solve+metric stage as the
     mesh-less engine, making mesh results bit-identical by construction.
     """
+    needs_rates = _needs_rates(strategies)
+    rates_spec = (P(),) if needs_rates else ()
     if faults is None:
-        def body(key_data, chols, n_valid):
+        def body(key_data, chols, n_valid, *tail):
             keys = jax.random.wrap_key_data(key_data)
             return _stacked_corr(
-                keys, chols, n_valid, strategies, n_pad, engine)
+                keys, chols, n_valid, strategies, n_pad, engine,
+                rates=tail[0] if needs_rates else None)
 
-        in_specs = (P(data_axis), P(data_axis), P())
+        in_specs = (P(data_axis), P(data_axis), P()) + rates_spec
         out_specs = P(None, data_axis)
     else:
-        def body(key_data, fkey_data, chols, n_valid):
+        def body(key_data, fkey_data, chols, n_valid, *tail):
             keys = jax.random.wrap_key_data(key_data)
             fkeys = jax.random.wrap_key_data(fkey_data)
             corr, tele = _stacked_corr(
                 keys, chols, n_valid, strategies, n_pad, engine,
-                faults=faults, fault_keys=fkeys)
+                faults=faults, fault_keys=fkeys,
+                rates=tail[0] if needs_rates else None)
             # integer-valued channels: the psum is exact, so telemetry is
             # shard-count invariant like the metric sums
             return corr, jax.lax.psum(tele, data_axis)
 
-        in_specs = (P(data_axis), P(data_axis), P(data_axis), P())
+        in_specs = (P(data_axis), P(data_axis), P(data_axis), P()) \
+            + rates_spec
         out_specs = (P(None, data_axis), P())
 
     return jax.jit(jax.shard_map(
@@ -900,6 +1002,69 @@ def _sparse_sharded_corr_fn(
         out_specs=out_specs,
         check_vma=False,
     ))
+
+
+def _check_mac_rowsplit(strategies, n_pad: int, n_model: int) -> None:
+    """Wire-plane MAC strategies split the SAMPLE axis over the model
+    mesh axis (each rank contracts its row share of the superposition),
+    so the bucket must divide evenly — both are powers of two in every
+    supported configuration, so this only trips hand-rolled buckets."""
+    if n_pad % n_model and any(s.channel.kind == "mac" for s in strategies):
+        raise ValueError(
+            f"MAC channel strategies need the sample bucket to split over "
+            f"the model mesh axis: n_pad={n_pad} is not a multiple of "
+            f"n_model={n_model}")
+
+
+def _mac_wire_stat(s, plan, x, midx, n_model, n_pad, n_valid, flip, fkeys,
+                   faults, engine, delivered_by_m, *, corr):
+    """One MAC-channel strategy's statistic inside a wire-plane shard_map
+    body. Every rank masks the FULL replicated sample block down to the
+    delivered machine row-blocks (deterministic from the replicated fault
+    keys, so ranks agree bit for bit), contracts ITS row share of the
+    superposition, and ``plan.wire`` — ``comm.superposed_psum``, the
+    multiple-access channel — adds the partial sign-Grams over the model
+    axis. Sign Grams are integer-valued f32 well under 2^24, so ANY row
+    partition (including the 1-rank mesh) sums to the same bits; the
+    center then normalizes by the delivered-row effective counts
+    (``plan.central_from_sum``). That integer-exactness is the 1-vs-N
+    parity argument for this channel."""
+    delivered = None
+    if faults is not None:
+        m = s.channel.machines
+        if m not in delivered_by_m:
+            delivered_by_m[m] = faults.draw_rowblock_batch(
+                fkeys, n_pad, n_valid, m)
+        delivered = delivered_by_m[m]
+    u = estimators.mac_sign_codes(
+        x, s, n_valid=n_valid, delivered=delivered, flip=flip)
+    n_loc = n_pad // n_model
+    u_loc = jax.lax.dynamic_slice_in_dim(u, midx * n_loc, n_loc, 1)
+    part = resolve_engine(engine).gram_batch(u_loc)
+    gram = plan.wire(part)
+    n_eff = estimators.mac_effective_count(
+        s, n_pad, n_valid=n_valid, delivered=delivered)
+    return plan.central_from_sum(gram, n_eff, corr=corr)
+
+
+def _budget_wire_stat(s, plan, x_loc, midx, d_loc, rates_row, n_valid,
+                      n_rows, n_rows_loc, keep_loc, engine, *, corr):
+    """One budget-channel strategy's statistic inside a wire-plane
+    shard_map body. The rank encodes its feature block at the block's
+    allocated per-feature rates (its slice of the replicated (d,) rate
+    vector — per-feature encode commutes with feature slicing, so the
+    gathered heterogeneous-rate payload is bit-identical to the
+    single-device encode), then the center decodes through the
+    rate-indexed centroid table; rate-0 features and erased machines both
+    land on the masked code and zero out of the effective counts."""
+    rates_loc = jax.lax.dynamic_slice_in_dim(
+        rates_row, midx * d_loc, d_loc, 0)
+    payload = plan.encode(x_loc, n_valid=n_valid, n_rows=n_rows_loc,
+                          rates=rates_loc)
+    full = plan.wire(payload, keep=keep_loc)
+    return estimators.budget_estimate(
+        full, s, rates_row, n_valid=n_valid, n_rows=n_rows, engine=engine,
+        corr=corr)
 
 
 @functools.lru_cache(maxsize=None)
@@ -930,16 +1095,28 @@ def _sparse_wire_corr_fn(
     block's faults, masks its payload machine-side, and the dropped
     features are ERASED on the wire itself
     (``comm.collectives.erasure_all_gather`` via ``WirePlan.wire(keep=)``).
+
+    Non-gather channels swap the wire's middle stage: MAC strategies run
+    :func:`_mac_wire_stat` (partial-Gram superposition), budget strategies
+    :func:`_budget_wire_stat` (heterogeneous-rate encode; the stacked
+    (S, d) rate vectors arrive as a replicated trailing operand).
     """
     n_model = mesh.shape[model_axis]
+    needs_rates = _needs_rates(strategies)
+    _check_mac_rowsplit(strategies, n_pad, n_model)
 
     def make_body(with_faults: bool):
         def body(key_data, *rest):
+            if needs_rates:
+                rest, rates_op = rest[:-1], rest[-1]
+            else:
+                rates_op = None
             if with_faults:
                 fkey_data, chols, n_valid = rest
                 fkeys = jax.random.wrap_key_data(fkey_data)
             else:
                 chols, n_valid = rest
+                fkeys = None
             keys = jax.random.wrap_key_data(key_data)
             x = sampler.sample_ggm_rows_batch(keys, n_pad, chols)
             d = x.shape[-1]
@@ -958,9 +1135,22 @@ def _sparse_wire_corr_fn(
                         flip, midx * d_loc, d_loc, 2)
                 keep_loc = n_rows_loc > 0
             corrs = []
-            for s in strategies:
+            delivered_by_m: dict = {}
+            for i, s in enumerate(strategies):
                 plan = WirePlan(s, data_axis=data_axis,
                                 model_axis=model_axis, engine=engine)
+                kind = s.channel.kind
+                if kind == "mac":
+                    corrs.append(_mac_wire_stat(
+                        s, plan, x, midx, n_model, n_pad, n_valid, flip,
+                        fkeys, faults if with_faults else None, engine,
+                        delivered_by_m, corr=True))
+                    continue
+                if kind == "budget":
+                    corrs.append(_budget_wire_stat(
+                        s, plan, x_loc, midx, d_loc, rates_op[i], n_valid,
+                        n_rows, n_rows_loc, keep_loc, engine, corr=True))
+                    continue
                 payload = plan.encode(x_loc, n_valid=n_valid,
                                       n_rows=n_rows_loc, flip=flip_loc)
                 full = plan.wire(payload, keep=keep_loc)
@@ -974,11 +1164,13 @@ def _sparse_wire_corr_fn(
 
         return body
 
+    rates_spec = (P(),) if needs_rates else ()
     if faults is None:
-        in_specs = (P(data_axis), P(data_axis), P())
+        in_specs = (P(data_axis), P(data_axis), P()) + rates_spec
         out_specs = P(None, data_axis)
     else:
-        in_specs = (P(data_axis), P(data_axis), P(data_axis), P())
+        in_specs = (P(data_axis), P(data_axis), P(data_axis), P()) \
+            + rates_spec
         out_specs = (P(None, data_axis), P())
 
     return jax.jit(jax.shard_map(
@@ -1014,30 +1206,35 @@ def _sharded_point_fn(
     versions — and are re-wrapped per shard (default PRNG impl, matching
     ``jax.random.key`` in :func:`_plan_setup`).
     """
+    needs_rates = _needs_rates(strategies)
+    rates_spec = (P(),) if needs_rates else ()
     if faults is None:
-        def body(key_data, parents, rhos, adj_true, n_valid):
+        def body(key_data, parents, rhos, adj_true, n_valid, *tail):
             keys = jax.random.wrap_key_data(key_data)
             w = _stacked_weights(
-                keys, parents, rhos, n_valid, strategies, n_pad, engine)
+                keys, parents, rhos, n_valid, strategies, n_pad, engine,
+                rates=tail[0] if needs_rates else None)
             sums = _per_trial_metrics(w, adj_true, chunk).sum(axis=1)
             return jax.lax.psum(sums, data_axis)
 
         in_specs = (P(data_axis), P(data_axis), P(data_axis), P(data_axis),
-                    P())
+                    P()) + rates_spec
         out_specs = P()
     else:
-        def body(key_data, fkey_data, parents, rhos, adj_true, n_valid):
+        def body(key_data, fkey_data, parents, rhos, adj_true, n_valid,
+                 *tail):
             keys = jax.random.wrap_key_data(key_data)
             fkeys = jax.random.wrap_key_data(fkey_data)
             w, tele = _stacked_weights(
                 keys, parents, rhos, n_valid, strategies, n_pad, engine,
-                faults=faults, fault_keys=fkeys)
+                faults=faults, fault_keys=fkeys,
+                rates=tail[0] if needs_rates else None)
             sums = _per_trial_metrics(w, adj_true, chunk).sum(axis=1)
             return (jax.lax.psum(sums, data_axis),
                     jax.lax.psum(tele, data_axis))
 
         in_specs = (P(data_axis), P(data_axis), P(data_axis), P(data_axis),
-                    P(data_axis), P())
+                    P(data_axis), P()) + rates_spec
         out_specs = (P(), P())
 
     # check_vma=False: the replication checker has no rule for the while
@@ -1085,16 +1282,30 @@ def _wire_point_fn(
     ``comm.collectives.erasure_all_gather``), and the center degrades
     through the masked-Gram path (``central(n_rows=...)``) — all
     deterministic, so fault-enabled metrics keep the 1-vs-N parity.
+
+    Non-gather channels swap the wire's middle stage per strategy: MAC
+    runs :func:`_mac_wire_stat` (row-share partial Grams superposed by
+    ``comm.superposed_psum``), budget runs :func:`_budget_wire_stat`
+    (heterogeneous per-feature rates from the replicated trailing
+    ``rates`` operand). Both stay inside the same shard_map and the same
+    psum-reduced metric sums, so the parity gate covers all channels.
     """
     n_model = mesh.shape[model_axis]
+    needs_rates = _needs_rates(strategies)
+    _check_mac_rowsplit(strategies, n_pad, n_model)
 
     def make_body(with_faults: bool):
         def body(key_data, *rest):
+            if needs_rates:
+                rest, rates_op = rest[:-1], rest[-1]
+            else:
+                rates_op = None
             if with_faults:
                 fkey_data, parents, rhos, adj_true, n_valid = rest
                 fkeys = jax.random.wrap_key_data(fkey_data)
             else:
                 parents, rhos, adj_true, n_valid = rest
+                fkeys = None
             keys = jax.random.wrap_key_data(key_data)
             x = sampler.sample_tree_ggm_rows_batch(keys, n_pad, parents,
                                                    rhos)
@@ -1114,9 +1325,22 @@ def _wire_point_fn(
                         flip, midx * d_loc, d_loc, 2)
                 keep_loc = n_rows_loc > 0
             ws = []
-            for s in strategies:
+            delivered_by_m: dict = {}
+            for i, s in enumerate(strategies):
                 plan = WirePlan(s, data_axis=data_axis,
                                 model_axis=model_axis, engine=engine)
+                kind = s.channel.kind
+                if kind == "mac":
+                    ws.append(_mac_wire_stat(
+                        s, plan, x, midx, n_model, n_pad, n_valid, flip,
+                        fkeys, faults if with_faults else None, engine,
+                        delivered_by_m, corr=False))
+                    continue
+                if kind == "budget":
+                    ws.append(_budget_wire_stat(
+                        s, plan, x_loc, midx, d_loc, rates_op[i], n_valid,
+                        n_rows, n_rows_loc, keep_loc, engine, corr=False))
+                    continue
                 payload = plan.encode(x_loc, n_valid=n_valid,
                                       n_rows=n_rows_loc, flip=flip_loc)
                 full = plan.wire(payload, keep=keep_loc)
@@ -1127,7 +1351,8 @@ def _wire_point_fn(
             sums = _per_trial_metrics(w, adj_true, chunk).sum(axis=1)
             # exact: integer-valued f32 sums; replicated over the model
             # axis by construction (every rank holds the full gathered
-            # payload or the gathered row blocks)
+            # payload, the gathered row blocks, or the psum-superposed
+            # Gram sum)
             if with_faults:
                 return (jax.lax.psum(sums, data_axis),
                         jax.lax.psum(tele.sum(axis=0), data_axis))
@@ -1135,13 +1360,14 @@ def _wire_point_fn(
 
         return body
 
+    rates_spec = (P(),) if needs_rates else ()
     if faults is None:
         in_specs = (P(data_axis), P(data_axis), P(data_axis), P(data_axis),
-                    P())
+                    P()) + rates_spec
         out_specs = P()
     else:
         in_specs = (P(data_axis), P(data_axis), P(data_axis), P(data_axis),
-                    P(data_axis), P())
+                    P(data_axis), P()) + rates_spec
         out_specs = (P(), P())
 
     return jax.jit(jax.shard_map(
@@ -1359,10 +1585,13 @@ def _host_kruskal_trials(
     t0 = time.perf_counter()
     ws = []
     fsums = []
+    needs_rates = _needs_rates(plan.strategies)
     for n in plan.ns:
         n_pad = plan.bucket_for(n)
+        tail = ((_rates_operand(plan.strategies, n, plan.d),)
+                if needs_rates else ())
         out = _weights_stage(plan.strategies, n_pad, engine, faults)(
-            keys, *lead, parents, rhos, jnp.asarray(n, jnp.int32))
+            keys, *lead, parents, rhos, jnp.asarray(n, jnp.int32), *tail)
         if faults is None:
             ws.append(out)
         else:
@@ -1522,6 +1751,12 @@ def run_trials(
         parents, rhos, adj_true, keys = _plan_setup(*_setup_key(plan))
         gt_args = (parents, rhos)
     stage_fn = _corr_stage if sparse else _weights_stage
+    needs_rates = _needs_rates(plan.strategies)
+    #: n -> the stacked (S, d) per-feature rate operand of the budget
+    #: channels at that sweep point (traced, so it costs no recompiles)
+    rates_tail = (
+        (lambda n: (_rates_operand(plan.strategies, n, plan.d),))
+        if needs_rates else (lambda n: ()))
     faults = plan.faults
     #: per-trial fault keys — rooted apart from the sampler's trial keys
     #: (core.faults._FAULT_ROOT), one independent fault stream per rep
@@ -1597,7 +1832,8 @@ def run_trials(
             t = threading.Thread(
                 target=lambda st=stage_fn(plan.strategies, b, engine,
                                           faults),
-                a=(keys, *lead, *gt_args, jnp.asarray(n0, jnp.int32)),
+                a=(keys, *lead, *gt_args, jnp.asarray(n0, jnp.int32),
+                   *rates_tail(n0)),
                 o=out: o.append(st(*a)),
                 daemon=True)
             t.start()
@@ -1619,7 +1855,7 @@ def run_trials(
                 out = pre[1][0]
             else:  # not prewarmed (or its thread failed): compute inline
                 out = stage_fn(plan.strategies, n_pad, engine, faults)(
-                    keys, *lead, *gt_args, n_valid)
+                    keys, *lead, *gt_args, n_valid, *rates_tail(n))
             if faults is None:
                 w = out
             else:
@@ -1640,7 +1876,8 @@ def run_trials(
                 _sparse_sharded_corr_fn(
                     plan.strategies, n_pad, engine, mesh, data_axis,
                     faults))
-            out = corr_fn(key_data, *lead_data, *gt_args, n_valid)
+            out = corr_fn(key_data, *lead_data, *gt_args, n_valid,
+                          *rates_tail(n))
             if faults is None:
                 corr = out
             else:
@@ -1663,7 +1900,7 @@ def run_trials(
                     plan.strategies, n_pad, engine, mesh, data_axis,
                     faults, chunk))
             out = point_fn(key_data, *lead_data, *gt_args, adj_true,
-                           n_valid)
+                           n_valid, *rates_tail(n))
             if faults is None:
                 point_sums.append(out)
             else:

@@ -141,10 +141,20 @@ class FaultPlan:
 
     # ---- device draws (trial/machine/round-keyed fold_in streams) --------
 
-    def _draw_one(self, key: jax.Array, n_valid, d: int):
-        """One trial's fault realization: (n_rows (d,) int32 delivered-row
-        counts, telemetry (channels,) f32)."""
-        m = self.n_machines(d)
+    def _machine_states(self, key: jax.Array, m: int):
+        """The per-machine fault states one trial draws: (arrived (m,)
+        bool, straggling (m,) bool, still (m, retries+1) int32 — machine
+        still missing after rounds 0..j).
+
+        THE one copy of the fault stream: the feature-partition draw
+        (:meth:`_draw_one`) and the MAC row-block draw
+        (:meth:`draw_rowblock_batch`) both consume it, so when a
+        ``MACChannel`` composes with a FaultPlan of equal machine count
+        the two views realize the SAME machines dropping/straggling. The
+        fold_in call order (machine keys -> per-round dropout uniforms ->
+        straggler uniform) is the wire format of this stream — changing
+        it changes every seeded fault realization.
+        """
         r = self.retries
         mkeys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
             key, jnp.arange(m, dtype=jnp.uint32))
@@ -159,6 +169,14 @@ class FaultPlan:
         strag_u = jax.vmap(lambda k: jax.random.uniform(
             jax.random.fold_in(k, _STRAGGLE_TAG)))(mkeys)
         straggling = arrived & (strag_u < self.straggle)
+        return arrived, straggling, still
+
+    def _draw_one(self, key: jax.Array, n_valid, d: int):
+        """One trial's fault realization: (n_rows (d,) int32 delivered-row
+        counts, telemetry (channels,) f32)."""
+        m = self.n_machines(d)
+        r = self.retries
+        arrived, straggling, still = self._machine_states(key, m)
         nv = jnp.asarray(n_valid, jnp.int32)
         n_trunc = jnp.minimum(
             jnp.ceil(self.straggle_frac * nv.astype(jnp.float32))
@@ -209,6 +227,41 @@ class FaultPlan:
         if self.bitflip > 0.0:
             flip = jax.vmap(lambda k: self._flip_one(k, n_pad, d))(keys)
         return n_rows, flip, tele
+
+    def draw_rowblock_batch(self, keys: jax.Array, n_pad: int, n_valid,
+                            machines: int) -> jax.Array:
+        """The fault realization as the MAC channel sees it: (t, machines)
+        int32 DELIVERED-ROW counts per sample-row block — a dropped
+        machine is a missing summand (count 0), a straggler superposes
+        only the prefix ``ceil(straggle_frac * its_valid_rows)`` of its
+        block.
+
+        Drawn from the SAME ``_machine_states`` stream as
+        :meth:`draw_batch` (same keys, same fold_in order), so when
+        ``machines == n_machines(d)`` the row-block view and the
+        feature-partition view realize identical machine fates.
+        Telemetry is NOT returned — the stage takes it from the one
+        :meth:`draw_batch` call, so nothing is double-counted.
+        """
+        if n_pad % machines != 0:
+            raise ValueError(
+                f"machines={machines} must divide n_pad={n_pad}")
+        b = n_pad // machines
+        nv = jnp.asarray(n_valid, jnp.int32)
+        # machine m's valid rows under the contiguous row-block partition
+        block_valid = jnp.clip(
+            nv - jnp.arange(machines, dtype=jnp.int32) * b, 0, b)  # (m,)
+        n_trunc = jnp.minimum(
+            jnp.ceil(self.straggle_frac * block_valid.astype(jnp.float32))
+            .astype(jnp.int32), block_valid)
+
+        def one(key):
+            arrived, straggling, _ = self._machine_states(key, machines)
+            return jnp.where(arrived,
+                             jnp.where(straggling, n_trunc, block_valid),
+                             jnp.int32(0))
+
+        return jax.vmap(one)(keys)
 
 
 @functools.lru_cache(maxsize=None)

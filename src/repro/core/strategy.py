@@ -27,6 +27,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Literal
 
+# channel plan values live in the comm layer (no repro imports at their
+# module level, so this import is cycle-safe mid-core-init)
+from repro.comm.channel import GATHER, Channel
+
 Method = Literal["sign", "persymbol", "original"]
 Wire = Literal["int8", "packed", "float32"]
 Placement = Literal["replicated", "rowblock"]
@@ -64,6 +68,14 @@ class Strategy:
         be > 0 there and 0.0 — the default — for trees, so a forgotten
         ``structure="sparse"`` fails loudly instead of silently running
         the tree pipeline).
+      channel: the wire's channel model (``repro.comm.channel``) — the
+        default :class:`~repro.comm.channel.GatherChannel` is the paper's
+        lossless all-gather (bit-identical to the pre-channel engine);
+        :class:`~repro.comm.channel.MACChannel` superposes machine
+        sign-Grams (sign method, int8 wire only);
+        :class:`~repro.comm.channel.BudgetChannel` allocates heterogeneous
+        per-machine rates under a total bit budget (persymbol method,
+        int8 wire; ``rate`` is the per-machine cap).
     """
 
     method: Method = "sign"
@@ -73,6 +85,7 @@ class Strategy:
     mst: Mst = "boruvka"
     structure: Structure = "tree"
     lam: float = 0.0
+    channel: Channel = GATHER
 
     def __post_init__(self):
         if self.method not in _METHODS:
@@ -112,6 +125,14 @@ class Strategy:
         if self.method != "original" and self.wire == "float32":
             raise ValueError("float32 wire is the unquantized baseline; "
                              "use method='original'")
+        if not isinstance(self.channel, Channel):
+            raise TypeError(
+                f"channel must be a repro.comm.channel.Channel, got "
+                f"{type(self.channel)!r}")
+        # the channel vetoes (method, wire, placement) combinations it
+        # cannot carry — AFTER the normalizations above, so it sees the
+        # final values
+        self.channel.validate(self)
 
     @property
     def label(self) -> str:
@@ -134,8 +155,10 @@ class Strategy:
         else:
             base = f"R{self.rate}"
         if self.structure == "sparse":
-            return f"{base}+glasso{self.lam:g}"
-        return base
+            base = f"{base}+glasso{self.lam:g}"
+        # channel suffix ('' for gather — pre-channel labels unchanged;
+        # '@mac{M}' / '@bgt{B}' key distinct result columns per channel)
+        return base + self.channel.suffix
 
     @property
     def bits_per_symbol(self) -> int:

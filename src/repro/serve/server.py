@@ -63,6 +63,16 @@ class ServeConfig:
     watchdog_ticks: int = 16   # solve-deadline per tenant with fresh data
     resolve_min_new: int = 1
     resolve_fraction: float = 0.0
+    #: CUSUM change-point detector on each tenant's structure-drift
+    #: channel (the per-solve edge Hamming distance ``table.resolve``
+    #: already counts): every solve updates
+    #: ``s <- max(0, s + hamming - cusum_k)`` and an alarm fires (and
+    #: resets s) when s exceeds ``cusum_h``. ``cusum_k`` is the drift
+    #: allowance — the hamming a stationary tenant's re-solves may jitter
+    #: by without accumulating; ``cusum_h <= 0`` disables the detector
+    #: (the default — telemetry-identical to pre-CUSUM servers).
+    cusum_k: float = 0.0
+    cusum_h: float = 0.0
     engine: GramEngine | None = None
     use_mesh: bool = False     # shard batched launches over local devices
     crash_after_journal_records: int | None = None  # test hook: SIGKILL
@@ -95,6 +105,11 @@ class StructureServer:
         self.snapshot_step = 0
         self.last_solve_tick = np.zeros(config.tenants, np.int64)
         self.watchdog_fires = np.zeros(config.tenants, np.int64)
+        # CUSUM drift alarms: per-tenant running statistic + fired count
+        # (durable — they ride the snapshot so recovery keeps the alarm
+        # history, like the watchdog counters)
+        self.cusum_stat = np.zeros(config.tenants, np.float64)
+        self.cusum_alarms = np.zeros(config.tenants, np.int64)
         self._journaled = 0
         self.recovered_records = 0
         self.recovery_seconds = 0.0
@@ -144,6 +159,7 @@ class StructureServer:
             "lost": int(self.log.lost.sum()),
             "degraded_tenants": int(self.log.degraded_tenants().sum()),
             "watchdog_fires": int(self.watchdog_fires.sum()),
+            "cusum_alarms": int(self.cusum_alarms.sum()),
             **solve,
         }
 
@@ -157,8 +173,29 @@ class StructureServer:
         self.watchdog_fires[fired] += 1
         due |= overdue
         idx = np.flatnonzero(due)
-        stats = self.table.resolve(idx)
+        stats = self._resolve_with_cusum(idx)
         self.last_solve_tick[idx] = self.tick
+        return stats
+
+    def _resolve_with_cusum(self, idx: np.ndarray) -> dict:
+        """Run ``table.resolve`` and feed each solved tenant's drift
+        DELTA (the edge Hamming distance of this solve vs its previous
+        structure) through the CUSUM recursion. Only solved tenants
+        observe — CUSUM state decays on observations, not on ticks."""
+        before = self.table.drift[idx].copy()
+        # a tenant's FIRST solve goes empty -> first tree (hamming = its
+        # whole edge set) — a cold-start artifact, not drift: skip it
+        warm = self.table.solves[idx] > 0
+        stats = self.table.resolve(idx)
+        if self.config.cusum_h > 0 and len(idx):
+            ham = (self.table.drift[idx] - before).astype(np.float64)
+            s = np.maximum(
+                0.0, self.cusum_stat[idx]
+                + np.where(warm, ham, 0.0) - self.config.cusum_k)
+            fired = s > self.config.cusum_h
+            self.cusum_alarms[idx] += fired
+            s[fired] = 0.0
+            self.cusum_stat[idx] = s
         return stats
 
     def _maybe_crash(self) -> None:
@@ -179,6 +216,8 @@ class StructureServer:
             "reordered": self.log.reordered,
             "last_solve_tick": self.last_solve_tick,
             "watchdog_fires": self.watchdog_fires,
+            "cusum_stat": self.cusum_stat,
+            "cusum_alarms": self.cusum_alarms,
             "tick": np.asarray(self.tick, np.int64),
         }
 
@@ -221,6 +260,8 @@ class StructureServer:
             self.log.reordered[...] = state["reordered"]
             self.last_solve_tick[...] = state["last_solve_tick"]
             self.watchdog_fires[...] = state["watchdog_fires"]
+            self.cusum_stat[...] = state["cusum_stat"]
+            self.cusum_alarms[...] = state["cusum_alarms"]
             self.tick = int(state["tick"])
             self.snapshot_step = step
         # Replay every surviving journal record through the cursors,
@@ -250,7 +291,7 @@ class StructureServer:
     def force_resolve(self) -> dict:
         """Solve every tenant with data (terminal / comparison state)."""
         idx = np.flatnonzero(self.table.n > 0)
-        stats = self.table.resolve(idx)
+        stats = self._resolve_with_cusum(idx)
         self.last_solve_tick[idx] = self.tick
         return stats
 

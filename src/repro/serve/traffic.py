@@ -38,6 +38,23 @@ class TrafficConfig:
     p_reorder: float = 0.0
     p_drop: float = 0.0
     seed: int = 0
+    #: mid-trace STRUCTURE CHANGE: from ``permute_from_tick`` on, every
+    #: sample block has its feature columns permuted by this (d,) tuple
+    #: before quantization — the underlying chain edges move, so a
+    #: drift detector watching the solves should alarm. ``None`` = the
+    #: stationary trace (byte-identical to pre-permutation configs: the
+    #: permutation consumes no RNG draws).
+    permutation: tuple[int, ...] | None = None
+    permute_from_tick: int = 0
+
+    def __post_init__(self):
+        if self.permutation is not None:
+            perm = tuple(int(j) for j in self.permutation)
+            if sorted(perm) != list(range(self.d)):
+                raise ValueError(
+                    f"permutation must be a permutation of range({self.d}), "
+                    f"got {self.permutation!r}")
+            object.__setattr__(self, "permutation", perm)
 
 
 def _chain_samples(rng: np.random.Generator, n: int, d: int,
@@ -88,6 +105,9 @@ def make_trace(cfg: TrafficConfig) -> list[list[Payload]]:
             for tick in range(cfg.ticks):
                 seq += 1
                 x = _chain_samples(rng, cfg.n, cfg.d, cfg.rho)
+                if (cfg.permutation is not None
+                        and tick >= cfg.permute_from_tick):
+                    x = x[:, np.asarray(cfg.permutation)]
                 p = Payload(tenant, machine, seq, **_encode(cfg, rng, x))
                 r = rng.random(3)
                 if r[0] < cfg.p_drop:

@@ -1,0 +1,307 @@
+"""Channel plane: gather / MAC-superposition / budget wires as plan
+values — accounting identities over method x rate x wire x channel,
+gather bit-identity with the pre-channel engine, MAC losslessness,
+budget rate allocation, and the 1-vs-8 mesh parity for every channel."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import (BudgetChannel, Channel, GatherChannel, MACChannel,
+                        neutral_fill, superposed_psum)
+from repro.comm.channel import GATHER
+from repro.core import FaultPlan, Strategy, TrialPlan, run_trials
+from repro.core import estimators
+from repro.core.distributed import WirePlan, build_weights_fn
+from repro.core.quantizers import MASKED_CODE
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def run_devices(script: str, n_devices: int = 8, timeout: int = 600) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(script)],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+# -- plan-value semantics -----------------------------------------------------
+
+def test_channels_are_frozen_hashable_plan_values():
+    assert Strategy("sign") == Strategy("sign", channel=GatherChannel())
+    assert Strategy("sign").channel is GATHER
+    assert hash(MACChannel(4)) == hash(MACChannel(4))
+    assert MACChannel(4) != MACChannel(2)
+    assert BudgetChannel(budget_bits=100, machines=2) == BudgetChannel(
+        budget_bits=100, machines=2)
+    # labels: gather keeps every pre-channel label, others suffix
+    assert Strategy("sign").label == "sign"
+    assert Strategy("sign", channel=MACChannel(4)).label == "sign@mac4"
+    assert Strategy("persymbol", rate=3,
+                    channel=BudgetChannel(budget_bits=99)
+                    ).label == "R3@bgt99"
+    # distinct channels of one method coexist in one plan (unique labels)
+    TrialPlan(d=8, ns=(64,), reps=2, strategies=(
+        Strategy("sign"), Strategy("sign", channel=MACChannel(2))))
+
+
+def test_channel_validation_vetoes():
+    with pytest.raises(ValueError, match="sign"):
+        Strategy("persymbol", rate=3, channel=MACChannel(2))
+    with pytest.raises(ValueError, match="int8"):
+        Strategy("sign", wire="packed", channel=MACChannel(2))
+    with pytest.raises(ValueError, match="persymbol"):
+        Strategy("sign", channel=BudgetChannel(budget_bits=64))
+    with pytest.raises(ValueError, match="replicated"):
+        Strategy("sign", placement="rowblock", channel=MACChannel(2))
+    with pytest.raises(ValueError, match="budget_bits"):
+        BudgetChannel(budget_bits=0)
+    # TrialPlan-level shape checks
+    with pytest.raises(ValueError, match="divide"):
+        TrialPlan(d=9, ns=(64,), reps=2, strategies=(
+            Strategy("persymbol", rate=2,
+                     channel=BudgetChannel(budget_bits=999, machines=2)),))
+    with pytest.raises(ValueError, match="machine"):
+        TrialPlan(d=8, ns=(64,), reps=2,
+                  strategies=(Strategy("sign", channel=MACChannel(2)),),
+                  faults=FaultPlan(machines=4))
+
+
+def test_build_weights_fn_rejects_channel_strategies():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    for s in (Strategy("sign", channel=MACChannel(2)),
+              Strategy("persymbol", rate=2,
+                       channel=BudgetChannel(budget_bits=999))):
+        with pytest.raises(ValueError, match="gather"):
+            build_weights_fn(mesh, strategy=s)
+
+
+def test_estimator_budget_dispatch_requires_rates():
+    s = Strategy("persymbol", rate=2,
+                 channel=BudgetChannel(budget_bits=999, machines=2))
+    x = jnp.zeros((2, 16, 4), jnp.float32)
+    with pytest.raises(ValueError, match="rates"):
+        estimators.strategy_weights_batch(x, s, n_valid=16)
+
+
+# -- CommReport accounting identities -----------------------------------------
+
+def test_comm_report_identities_across_channel_grid():
+    """wire_bits == 8 * wire_bytes for EVERY point of the
+    method x rate x wire x channel grid the channels admit."""
+    n, d = 200, 12
+    grid = [
+        Strategy("sign"),
+        Strategy("sign", wire="packed"),
+        Strategy("persymbol", rate=2),
+        Strategy("persymbol", rate=4, wire="packed"),
+        Strategy("original"),
+        Strategy("sign", channel=MACChannel(4)),
+        Strategy("sign", channel=MACChannel(2)),
+        Strategy("persymbol", rate=4,
+                 channel=BudgetChannel(budget_bits=4 * n * d, machines=4)),
+        Strategy("persymbol", rate=7,
+                 channel=BudgetChannel(budget_bits=3 * n * d, machines=2)),
+    ]
+    for s in grid:
+        rep = WirePlan(s).comm_report(n, d, n_pad=256)
+        assert rep.wire_bits == 8 * rep.wire_bytes, s
+        assert rep.collectives == 1, s
+        if rep.machine_bits is not None:
+            assert all(b >= 0 for b in rep.machine_bits), s
+
+
+def test_gather_reports_reproduce_pre_channel_numbers():
+    """The gather channel's CommReports equal the pre-refactor analytic
+    values field for field (the PR-4 pins), with the channel-plane
+    fields absent — a default-channel report IS the old report."""
+    n, d = 256, 12
+    for strat, expect in [
+        (Strategy("sign"), n * d),
+        (Strategy("sign", wire="packed"), n * d // 8),
+        (Strategy("persymbol", rate=4), n * d),
+        (Strategy("persymbol", rate=4, wire="packed"), n * d // 2),
+        (Strategy("original"), 4 * n * d),
+    ]:
+        rep = WirePlan(strat).comm_report(n, d)
+        assert rep.wire_bytes == expect, strat
+        assert rep.logical_bits == n * d * strat.rate
+        assert rep.machine_bits is None and rep.rates is None, strat
+
+
+def test_mac_report_ledger():
+    """MAC: the wire carries ONE superposed (d, d) f32 statistic; the
+    per-machine ledger bills each machine its delivered sign rows."""
+    n, d, m = 250, 12, 4
+    s = Strategy("sign", channel=MACChannel(m))
+    rep = WirePlan(s).comm_report(n, d, n_pad=256)
+    assert rep.wire_bytes == d * d * 4
+    assert rep.rates == (1,) * m
+    b = 256 // m
+    delivered = [max(0, min(n - i * b, b)) for i in range(m)]
+    assert rep.machine_bits == tuple(dm * d for dm in delivered)
+    assert sum(rep.machine_bits) == n * d == rep.logical_bits
+
+
+def test_budget_allocation_and_ledger_properties():
+    """Greedy level-filling: sum(machine_bits) == logical_bits <= B,
+    rates capped, level-filled (max - min <= 1 unless capped/empty)."""
+    d = 12
+    for n, B, cap, m in [(100, 4 * 100 * 12, 4, 4),
+                         (100, 100 * 12, 4, 4),
+                         (64, 7 * 64 * 12, 7, 2),
+                         (64, 5, 3, 2),          # budget below one level
+                         (200, 3 * 200 * 12 // 2, 3, 3)]:
+        ch = BudgetChannel(budget_bits=B, machines=m)
+        rates = ch.allocate(n, d, cap)
+        assert len(rates) == m and all(0 <= r <= cap for r in rates)
+        d_m = d // m
+        bits = [n * d_m * r for r in rates]
+        assert sum(bits) <= B
+        if all(r < cap for r in rates):          # level-filling shape
+            assert max(rates) - min(rates) <= 1
+        cols = ch.column_rates(n, d, cap)
+        assert cols.shape == (d,)
+        assert np.array_equal(cols, np.repeat(rates, d_m))
+        s = Strategy("persymbol", rate=cap, channel=ch)
+        rep = WirePlan(s).comm_report(n, d, n_pad=n)
+        assert rep.machine_bits == tuple(bits)
+        assert rep.logical_bits == sum(bits) <= B
+        assert rep.rates == rates
+
+
+# -- wire semantics -----------------------------------------------------------
+
+def test_neutral_fill_and_superposed_psum_unit():
+    assert neutral_fill("persymbol", jnp.int8) == MASKED_CODE
+    assert neutral_fill("sign", jnp.int8) == 0
+    assert neutral_fill("original", jnp.float32) == 0
+    # superposed_psum outside a mesh context == the payload itself under
+    # a single-rank axis; verified through shard_map in the parity test
+
+
+def test_mac_lossless_bit_equals_gather_sign():
+    """Without faults every machine's full row block arrives: the MAC
+    sum statistic equals the gathered sign statistic BIT FOR BIT, so the
+    sweep metrics coincide exactly."""
+    strats = (Strategy("sign"), Strategy("sign", channel=MACChannel(4)))
+    res = run_trials(TrialPlan(d=12, ns=(100, 230), reps=8,
+                               strategies=strats, seed0=3))
+    assert res.error_rate["sign"] == res.error_rate["sign@mac4"]
+    assert res.edit_distance["sign"] == res.edit_distance["sign@mac4"]
+    assert res.edge_f1["sign"] == res.edge_f1["sign@mac4"]
+
+
+def test_budget_full_rate_equals_plain_persymbol():
+    """A budget generous enough for every machine to hit the cap at
+    every n reproduces the uniform-rate persymbol strategy exactly."""
+    cap, d, n_max = 4, 12, 230
+    ch = BudgetChannel(budget_bits=cap * n_max * d, machines=4)
+    strats = (Strategy("persymbol", rate=cap),
+              Strategy("persymbol", rate=cap, channel=ch))
+    res = run_trials(TrialPlan(d=d, ns=(100, 230), reps=8,
+                               strategies=strats, seed0=3))
+    lab = strats[1].label
+    assert res.error_rate["R4"] == res.error_rate[lab]
+    assert res.edge_f1["R4"] == res.edge_f1[lab]
+
+
+def test_channel_sweep_does_not_perturb_gather_columns():
+    """Adding MAC/budget strategies to a plan must leave the gather
+    strategies' columns bit-identical (shared data, per-strategy
+    estimators) — the gather bit-identity regression pin."""
+    gather_only = run_trials(TrialPlan(
+        d=12, ns=(100, 230), reps=8, strategies=(Strategy("sign"),),
+        seed0=3))
+    mixed = run_trials(TrialPlan(
+        d=12, ns=(100, 230), reps=8, seed0=3, strategies=(
+            Strategy("sign"),
+            Strategy("sign", channel=MACChannel(4)),
+            Strategy("persymbol", rate=4,
+                     channel=BudgetChannel(budget_bits=4 * 100 * 12,
+                                           machines=4)))))
+    for tbl_a, tbl_b in [(gather_only.error_rate, mixed.error_rate),
+                         (gather_only.edit_distance, mixed.edit_distance),
+                         (gather_only.edge_f1, mixed.edge_f1)]:
+        assert tbl_a["sign"] == tbl_b["sign"]
+
+
+def test_channel_sweep_one_host_sync_under_transfer_guard():
+    """All three channels in one faulty sweep: exactly ONE host sync, and
+    no implicit device->host transfer anywhere in the sweep body."""
+    strats = (
+        Strategy("sign"),
+        Strategy("sign", channel=MACChannel(4)),
+        Strategy("persymbol", rate=4,
+                 channel=BudgetChannel(budget_bits=4 * 100 * 12,
+                                       machines=4)),
+    )
+    plan = TrialPlan(d=12, ns=(100,), reps=8, strategies=strats, seed0=3,
+                     faults=FaultPlan(machines=4, dropout=0.25,
+                                      straggle=0.3, seed=11))
+    with jax.transfer_guard_device_to_host("disallow"):
+        res = run_trials(plan)
+    assert res.host_syncs == 1
+    assert all(np.isfinite(v).all() for v in res.error_rate.values())
+
+
+def test_faulty_mac_degrades_not_explodes():
+    """Dropout under MAC is a missing summand: metrics stay finite and
+    the effective-count correction keeps weights in range."""
+    s = Strategy("sign", channel=MACChannel(4))
+    res = run_trials(TrialPlan(
+        d=12, ns=(100,), reps=8, strategies=(Strategy("sign"), s),
+        seed0=3, faults=FaultPlan(machines=4, dropout=0.4, straggle=0.5,
+                                  seed=5)))
+    assert np.isfinite(res.edge_f1[s.label]).all()
+    assert 0.0 <= res.edge_f1[s.label][0] <= 1.0
+
+
+# -- multi-device parity (the CI channel-parity gate) -------------------------
+
+_PARITY = """
+    import numpy as np, jax
+    from repro.core import (TrialPlan, Strategy, MACChannel, BudgetChannel,
+                            FaultPlan, run_trials)
+    from repro.launch.mesh import make_trial_mesh
+    strats = (
+        Strategy("sign"),
+        Strategy("sign", channel=MACChannel(4)),
+        Strategy("persymbol", rate=4,
+                 channel=BudgetChannel(budget_bits=4*100*16, machines=4)),
+    )
+    mesh = make_trial_mesh(model=4) if jax.device_count() == 8 else None
+    kw = dict(mesh=mesh) if mesh is not None else {}
+    res = run_trials(TrialPlan(d=16, ns=(100, 400), reps=8,
+                               strategies=strats, seed0=5), **kw)
+    resf = run_trials(TrialPlan(d=16, ns=(100,), reps=8, strategies=strats,
+                                seed0=5,
+                                faults=FaultPlan(machines=4, dropout=0.25,
+                                                 straggle=0.3, seed=11)),
+                      **kw)
+    out = {l: (res.error_rate[l], res.edit_distance[l], res.edge_f1[l],
+               resf.error_rate[l], resf.edge_f1[l])
+           for l in res.error_rate}
+    print(repr((out, res.host_syncs, resf.host_syncs)))
+"""
+
+
+def test_channel_mesh_parity_1_vs_8_devices():
+    """GatherChannel, MACChannel and BudgetChannel all keep the trial
+    plane's 1-vs-8 forced-device bit-parity (pristine AND faulty), with
+    one host sync per sweep."""
+    one = run_devices(_PARITY, n_devices=1)
+    eight = run_devices(_PARITY, n_devices=8)
+    assert one == eight
+    assert "'sign@mac4'" in one and "'R4@bgt" in one

@@ -530,6 +530,72 @@ def test_server_watchdog_fires_for_stale_tenant(tmp_path, rng):
     srv.close()
 
 
+def test_server_cusum_alarms_on_midtrace_structure_change(tmp_path):
+    """CUSUM drift alarms: a seeded trace whose generating chain is
+    column-permuted mid-trace (an INTERLEAVE — a reversal would map the
+    chain onto itself and change nothing) must fire the detector, while
+    the stationary prefix of the very same trace must not."""
+    d = 8
+    perm = tuple(range(0, d, 2)) + tuple(range(1, d, 2))
+    base = dict(tenants=2, machines=2, ticks=24, n=64, d=d, rho=0.75,
+                packed_fraction=0.0, seed=13)
+    scfg = dict(tenants=2, machines=2, d=d, block_n=64, snapshot_every=0,
+                cusum_k=0.5, cusum_h=1.0)
+    still = _run_trace(
+        StructureServer(ServeConfig(**scfg), str(tmp_path / "still")),
+        make_trace(TrafficConfig(**base)))
+    moved = _run_trace(
+        StructureServer(ServeConfig(**scfg), str(tmp_path / "moved")),
+        make_trace(TrafficConfig(**base, permutation=perm,
+                                 permute_from_tick=12)))
+    assert int(still.cusum_alarms.sum()) == 0       # stationary: quiet
+    assert int(moved.cusum_alarms.sum()) >= 1       # change-point: fires
+    tele = moved.run_tick()
+    assert tele["cusum_alarms"] == int(moved.cusum_alarms.sum())
+    still.close(), moved.close()
+
+
+def test_cusum_state_survives_snapshot_recovery(tmp_path):
+    """The CUSUM statistic and alarm counts are durable state: a server
+    recovered from snapshot + journal reports the same alarm history."""
+    d = 8
+    perm = tuple(range(0, d, 2)) + tuple(range(1, d, 2))
+    trace = make_trace(TrafficConfig(
+        tenants=2, machines=2, ticks=24, n=64, d=d, rho=0.75,
+        packed_fraction=0.0, seed=13, permutation=perm,
+        permute_from_tick=12))
+    scfg = dict(tenants=2, machines=2, d=d, block_n=64, snapshot_every=4,
+                cusum_k=0.5, cusum_h=1.0)
+    a = _run_trace(
+        StructureServer(ServeConfig(**scfg), str(tmp_path)), trace)
+    alarms, stat = a.cusum_alarms.copy(), a.cusum_stat.copy()
+    assert int(alarms.sum()) >= 1
+    a.close()
+    b = StructureServer(ServeConfig(**scfg), str(tmp_path))
+    assert np.array_equal(b.cusum_alarms, alarms)
+    assert np.array_equal(b.cusum_stat, stat)
+    b.close()
+
+
+def test_traffic_permutation_none_is_byte_identical():
+    """permutation=None consumes no RNG draws: the trace equals the
+    pre-permutation generator's byte for byte."""
+    base = dict(tenants=2, machines=1, ticks=4, n=8, d=6, seed=3)
+    t0 = make_trace(TrafficConfig(**base))
+    t1 = make_trace(TrafficConfig(**base, permutation=tuple(range(6)),
+                                  permute_from_tick=10 ** 9))
+    assert len(t0) == len(t1)
+    for b0, b1 in zip(t0, t1):
+        assert len(b0) == len(b1)
+        for p0, p1 in zip(b0, b1):
+            assert (p0.tenant, p0.machine, p0.seq) == (
+                p1.tenant, p1.machine, p1.seq)
+            if p0.kind == "codes":
+                assert np.array_equal(p0.codes, p1.codes)
+            else:
+                assert np.array_equal(p0.packed, p1.packed)
+
+
 def test_server_backpressure_counts(tmp_path, rng):
     cfg = ServeConfig(tenants=1, machines=1, d=6, block_n=16,
                       queue_capacity=2, snapshot_every=0)
